@@ -1,0 +1,32 @@
+"""Paper Table 6: spatial-relevance + weight-learning ablations.
+
+LIST-R (step SRel, MLP weights) vs +S_in (linear), +a·S_in^b (learnable
+exp), and fixed weights (the ADrW-replacement row).
+"""
+from __future__ import annotations
+
+from benchmarks import common
+
+ABLATION_STEPS = 200
+
+
+def run():
+    corpus = common.get_corpus()
+    te, positives = common.test_split_positives(corpus)
+    rows = []
+    variants = [
+        ("LIST-R(step,mlp)", dict(spatial_mode="step", weight_mode="mlp")),
+        ("LIST-R+S_in", dict(spatial_mode="linear", weight_mode="mlp")),
+        ("LIST-R+a*S_in^b", dict(spatial_mode="exp", weight_mode="mlp")),
+        ("LIST-R+fixed_w", dict(spatial_mode="step", weight_mode="fixed")),
+    ]
+    for name, kw in variants:
+        r = common.get_retriever(rel_steps=ABLATION_STEPS, tag=name,
+                                 with_index=False, **kw)
+        ids, _ = r.brute_force(te, k=20)
+        rows.append(common.fmt_row(name, common.eval_ranking(ids, positives)))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

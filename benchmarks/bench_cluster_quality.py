@@ -1,0 +1,50 @@
+"""Paper Table 5: cluster quality — LIST-I vs IVF k-means, P(C) and IF(C)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import cluster_metrics as cm
+from repro.core.baselines import IVFIndex
+
+
+def run():
+    corpus = common.get_corpus()
+    te, positives = common.test_split_positives(corpus)
+    r = common.get_retriever()
+    r.ensure_embeddings()
+    rows = []
+
+    # LIST-I
+    qa = common.query_cluster_assign(r, te)
+    pc, _ = cm.cluster_precision(qa, positives, r.obj_assign,
+                                 common.N_CLUSTERS)
+    rows.append(common.fmt_row("LIST-I", {
+        "P(C)": pc,
+        "IF(C)": cm.imbalance_factor(r.obj_assign, common.N_CLUSTERS)}))
+
+    # IVF on the same embeddings
+    ivf = IVFIndex(r.obj_emb, n_clusters=common.N_CLUSTERS, seed=0)
+    import repro.core.pipeline as pl
+    q_emb = np.asarray(pl.embed_queries(r.rel_params, corpus, r.cfg, te))
+    probes = ivf.probe(q_emb, cr=1)[:, 0]
+    pc_ivf, _ = cm.cluster_precision(probes, positives, ivf.assign,
+                                     common.N_CLUSTERS)
+    rows.append(common.fmt_row("IVF", {
+        "P(C)": pc_ivf,
+        "IF(C)": cm.imbalance_factor(ivf.assign, common.N_CLUSTERS)}))
+
+    # IVF_S (manually weighted spatial factor)
+    ivfs = IVFIndex(r.obj_emb, corpus.obj_loc, n_clusters=common.N_CLUSTERS,
+                    alpha=0.9, seed=0)
+    probes = ivfs.probe(q_emb, corpus.q_loc[te], cr=1)[:, 0]
+    pc_s, _ = cm.cluster_precision(probes, positives, ivfs.assign,
+                                   common.N_CLUSTERS)
+    rows.append(common.fmt_row("IVF_S(a=0.9)", {
+        "P(C)": pc_s,
+        "IF(C)": cm.imbalance_factor(ivfs.assign, common.N_CLUSTERS)}))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

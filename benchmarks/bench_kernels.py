@@ -1,0 +1,37 @@
+"""Kernel-fusion microbenchmark (CPU interpret-mode = correctness-scale
+numbers; real speedups are measured via the dry-run roofline — see
+EXPERIMENTS.md §Perf). Reports the BYTES saved by fusing score+spatial+topk
+into one pass, which is hardware-independent."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def run():
+    rows = []
+    # traffic model for LIST's query inner loop, per (query-block, corpus):
+    # unfused: read emb (N·d·4) + write trel (N·4) + read trel + write srel
+    #          + read both + write st + topk read  ≈ N(d+7)·4 bytes
+    # fused:   read emb once, everything else stays in VMEM ≈ N(d+2)·4
+    n, d = 2_849_754, 768     # Geo-Glue scale
+    unfused = n * (d + 7) * 4
+    fused = n * (d + 2) * 4
+    rows.append(common.fmt_row("fused_topk_score(traffic-model)", {
+        "unfused_GB": unfused / 1e9,
+        "fused_GB": fused / 1e9,
+        "saved_pct": 100 * (1 - fused / unfused)}))
+
+    # flash attention: O(S²) score materialization avoided
+    b, s, h, dh = 32, 32_768, 32, 128
+    naive = b * h * s * s * 4                # score matrix bytes (one layer)
+    flash = b * s * h * dh * 2 * 3           # just q,k,v streamed
+    rows.append(common.fmt_row("flash_attention(traffic-model)", {
+        "naive_score_GB": naive / 1e9,
+        "flash_GB": flash / 1e9}))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,59 @@
+"""Paper Table 4: index memory footprint.
+
+Bytes of each index structure ON TOP of the shared parts (relevance model
+params + precomputed object embeddings + geo-locations), mirroring the
+paper's accounting where LIST ≈ IVF ≈ IVFPQ < LSH < HNSW < TkQ/IR-tree.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks import common
+from repro.core.baselines import BM25, IVFIndex, LSHIndex
+
+
+def _nbytes(tree) -> int:
+    return sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree))
+
+
+def run():
+    corpus = common.get_corpus()
+    r = common.get_retriever()
+    r.ensure_embeddings()
+    rows = []
+    shared = (np.asarray(r.obj_emb).nbytes
+              + corpus.obj_loc.astype(np.float32).nbytes
+              + _nbytes(r.rel_params))
+    rows.append(common.fmt_row("shared(model+emb+loc)",
+                               {"MB": shared / 1e6}))
+
+    # LIST: the MLP router (+ the padded buffers replace the raw emb array)
+    list_extra = _nbytes(r.index_params)
+    rows.append(common.fmt_row("LIST(index MLP)",
+                               {"MB": list_extra / 1e6,
+                                "total_MB": (shared + list_extra) / 1e6}))
+
+    ivf = IVFIndex(r.obj_emb, n_clusters=common.N_CLUSTERS, seed=0)
+    ivf_extra = ivf.centroids.nbytes + sum(l.nbytes for l in ivf.lists)
+    rows.append(common.fmt_row("IVF(centroids+lists)",
+                               {"MB": ivf_extra / 1e6,
+                                "total_MB": (shared + ivf_extra) / 1e6}))
+
+    lsh = LSHIndex(r.obj_emb, nbits=12, n_tables=4, seed=0)
+    lsh_extra = (lsh.planes.nbytes + lsh.codes.nbytes
+                 + sum(v.nbytes for t in lsh.tables for v in t.values()))
+    rows.append(common.fmt_row("LSH(planes+tables)",
+                               {"MB": lsh_extra / 1e6,
+                                "total_MB": (shared + lsh_extra) / 1e6}))
+
+    bm = BM25(corpus.obj_doc, vocab_size=corpus.cfg.vocab_size)
+    bm_extra = bm.idf.nbytes + bm.docs.nbytes + bm.doc_len.nbytes
+    rows.append(common.fmt_row("TkQ(BM25 stats)",
+                               {"MB": bm_extra / 1e6,
+                                "total_MB": (shared + bm_extra) / 1e6}))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

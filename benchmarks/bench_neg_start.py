@@ -1,0 +1,44 @@
+"""Paper Fig. 8: the neg_start knob — pseudo-negative hardness trades
+cluster precision P(C) against balance IF(C)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import cluster_metrics as cm
+from repro.core import pipeline as pl
+
+
+def run():
+    corpus = common.get_corpus()
+    te, positives = common.test_split_positives(corpus)
+    base = common.get_retriever()          # reuses the relevance model
+    rows = []
+    n = common.N_OBJECTS
+    for frac in (0.05, 0.2, 0.5, 0.8):
+        ns = int(n * frac)
+        iparams, norm, obj_emb, _ = pl.train_cluster_index(
+            base.rel_params, corpus, base.cfg, obj_emb=base.obj_emb,
+            steps=common.IDX_STEPS, batch=64, lr=3e-3,
+            neg_start=ns, neg_end=ns + 200, log_every=10**9)
+        import jax.numpy as jnp
+        from repro.core import index as il
+        feats = il.build_features(
+            jnp.asarray(obj_emb),
+            jnp.asarray(corpus.obj_loc.astype(np.float32)), norm)
+        assign = np.asarray(il.assign_clusters(iparams, feats))
+        q_emb = pl.embed_queries(base.rel_params, corpus, base.cfg, te)
+        qf = il.build_features(
+            jnp.asarray(q_emb),
+            jnp.asarray(corpus.q_loc[te].astype(np.float32)), norm)
+        qa = np.asarray(il.assign_clusters(iparams, qf))
+        pc, _ = cm.cluster_precision(qa, positives, assign,
+                                     common.N_CLUSTERS)
+        rows.append(common.fmt_row(f"neg_start={ns}", {
+            "P(C)": pc,
+            "IF(C)": cm.imbalance_factor(assign, common.N_CLUSTERS)}))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,45 @@
+"""Paper Table 3: relevance-model effectiveness via brute-force search.
+
+LIST-R vs TkQ (BM25 + linear spatial). (DrW/PALM/MGeo are proprietary-
+artifact baselines; TkQ is the reproducible classical anchor — the paper's
+own finding is LIST-R > DrW > TkQ > PALM.)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.baselines import BM25, tkq_topk
+
+
+def run():
+    corpus = common.get_corpus()
+    te, positives = common.test_split_positives(corpus)
+    rows = []
+
+    bm = BM25(corpus.obj_doc, vocab_size=corpus.cfg.vocab_size)
+    tkq_ids = tkq_topk(bm, corpus.q_doc[te], corpus.q_loc[te],
+                       corpus.obj_loc, 20, dist_max=corpus.dist_max)
+    rows.append(common.fmt_row("TkQ(BM25)",
+                               common.eval_ranking(tkq_ids, positives)))
+
+    r = common.get_retriever()
+    ids, _ = r.brute_force(te, k=20)
+    m = common.eval_ranking(ids, positives)
+    rows.append(common.fmt_row("LIST-R(brute)", m))
+
+    # word-mismatch slice (paper Fig. 1a motivation): queries with zero
+    # token overlap with their seed object
+    mism = corpus.q_mismatch[te]
+    pos_m = [p for p, f in zip(positives, mism) if f]
+    rows.append(common.fmt_row(
+        "TkQ(BM25)[mismatch-only]",
+        common.eval_ranking(tkq_ids[mism], pos_m)))
+    rows.append(common.fmt_row(
+        "LIST-R[mismatch-only]",
+        common.eval_ranking(ids[mism], pos_m)))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,81 @@
+"""Paper Fig. 7: LIST / LIST-R query runtime vs corpus size (linear scaling).
+
+The trained encoder + router are reused; only the corpus (and its buffers)
+grows — matching the paper's augmented-Geo-Glue methodology where no
+ground truth exists for the added POIs (efficiency only).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import index as il
+from repro.core import pipeline as pl
+from repro.core import spatial as sp
+from repro.data import GeoCorpus, GeoCorpusConfig
+
+
+def run():
+    r = common.get_retriever()
+    cfg = r.cfg
+    rows = []
+    te_small, _ = common.test_split_positives(common.get_corpus())
+    for n in (2000, 4000, 8000, 16000):
+        big = GeoCorpus(GeoCorpusConfig(
+            n_objects=n, n_queries=64, n_topics=common.N_TOPICS,
+            vocab_size=4096, seed=1))
+        obj_emb = pl.embed_objects(r.rel_params, big, cfg)
+        obj_loc = big.obj_loc.astype(np.float32)
+        feats = il.build_features(jnp.asarray(obj_emb), jnp.asarray(obj_loc),
+                                  r.norm)
+        top = np.asarray(il.assign_clusters(r.index_params, feats, top=3))
+        buf = il.build_cluster_buffers(top, obj_emb, obj_loc,
+                                       n_clusters=cfg.n_clusters)
+        # brute force timing (encode at query time, same as LIST below)
+        q_loc = big.q_loc[:64].astype(np.float32)
+        tok_b, msk_b = big.query_tokens(np.arange(64))
+        from repro.core import relevance
+        import jax
+
+        @jax.jit
+        def score(tok, msk, ql):
+            qe = relevance.encode_queries(r.rel_params, tok, msk, cfg)
+            return jax.lax.top_k(relevance.score_corpus(
+                r.rel_params, qe, ql, jnp.asarray(obj_emb),
+                jnp.asarray(obj_loc), cfg, dist_max=big.dist_max,
+                train=False), 10)
+
+        bargs = (jnp.asarray(tok_b), jnp.asarray(msk_b), jnp.asarray(q_loc))
+        score(*bargs)  # warm
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = score(*bargs)
+        jax.tree.leaves(out)[0].block_until_ready()
+        t_brute = (time.perf_counter() - t0) / 3
+
+        # LIST timing (route + gather + fused score)
+        w_hat = sp.extract_lookup(r.rel_params["spatial"])
+        qfn = pl.make_query_fn(cfg, cr=1, k=10, dist_max=float(big.dist_max))
+        args = (r.rel_params, r.index_params, w_hat, r.norm, buf["emb"],
+                buf["loc"], buf["ids"])
+        tok, msk = big.query_tokens(np.arange(64))
+        qa = (jnp.asarray(tok), jnp.asarray(msk), jnp.asarray(q_loc))
+        qfn(*args, *qa)  # warm
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = qfn(*args, *qa)
+        jax.tree.leaves(out)[0].block_until_ready()
+        t_list = (time.perf_counter() - t0) / 3
+        rows.append(common.fmt_row(f"n={n}", {
+            "brute_ms/64q": t_brute * 1e3,
+            "LIST_ms/64q": t_list * 1e3,
+            "cap": buf["capacity"]}))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,94 @@
+"""Paper Fig. 4 + Fig. 5: effectiveness–efficiency trade-off.
+
+All index baselines retrieve candidates; LIST-R reranks them (identical
+rerank model for fairness, as in the paper). Efficiency proxy = candidates
+scored per query (hardware-independent) + measured wall seconds.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.baselines import (
+    BM25,
+    IVFIndex,
+    LSHIndex,
+    rerank_candidates,
+    tkq_topk,
+)
+
+
+def run(k: int = 10):
+    corpus = common.get_corpus()
+    te, positives = common.test_split_positives(corpus)
+    r = common.get_retriever()
+    r.ensure_embeddings()
+    q_emb = np.asarray(
+        __import__("repro.core.pipeline", fromlist=["x"]).embed_queries(
+            r.rel_params, corpus, r.cfg, te))
+    q_loc = corpus.q_loc[te].astype(np.float32)
+    score = r.score_fn()
+    rows = []
+
+    # brute force = upper anchor
+    t0 = time.time()
+    ids, _ = r.brute_force(te, k=k)
+    rows.append(common.fmt_row(
+        "BruteForce(LIST-R)", common.eval_ranking(ids, positives),
+        f"cand={corpus.cfg.n_objects},sec={time.time()-t0:.2f}"))
+
+    # LIST at cr = 1, 2, 3 (Fig. 5 knob)
+    for cr in (1, 2, 3):
+        t0 = time.time()
+        ids, _ = r.query(te, k=k, cr=cr)
+        cand = cr * r.buffers["capacity"]
+        rows.append(common.fmt_row(
+            f"LIST(cr={cr})", common.eval_ranking(ids, positives),
+            f"cand={cand},sec={time.time()-t0:.2f}"))
+
+    # IVF / IVF_S on the same embeddings, LIST-R rerank
+    for name, idx in (
+            ("IVF", IVFIndex(r.obj_emb, n_clusters=common.N_CLUSTERS,
+                             seed=0)),
+            ("IVF_S(a=0.9)", IVFIndex(r.obj_emb, corpus.obj_loc,
+                                      n_clusters=common.N_CLUSTERS,
+                                      alpha=0.9, seed=0))):
+        for cr in (1, 2):
+            t0 = time.time()
+            cands = (idx.candidates(q_emb, cr=cr) if name == "IVF"
+                     else idx.candidates(q_emb, q_loc, cr=cr))
+            out, mean_c = rerank_candidates(
+                lambda i, c: score(q_emb[i], q_loc[i], c), cands, k)
+            rows.append(common.fmt_row(
+                f"{name}+LIST-R(cr={cr})",
+                common.eval_ranking(out, positives),
+                f"cand={mean_c:.0f},sec={time.time()-t0:.2f}"))
+
+    # LSH
+    lsh = LSHIndex(r.obj_emb, nbits=12, n_tables=4, seed=0)
+    t0 = time.time()
+    cands = lsh.candidates(q_emb)
+    out, mean_c = rerank_candidates(
+        lambda i, c: score(q_emb[i], q_loc[i], c), cands, k)
+    rows.append(common.fmt_row(
+        "LSH+LIST-R", common.eval_ranking(out, positives),
+        f"cand={mean_c:.0f},sec={time.time()-t0:.2f}"))
+
+    # TkQ as retriever (Fig. 5's slow-riser), k sweep
+    bm = BM25(corpus.obj_doc, vocab_size=corpus.cfg.vocab_size)
+    for kk in (100, 500):
+        t0 = time.time()
+        top = tkq_topk(bm, corpus.q_doc[te], q_loc, corpus.obj_loc, kk,
+                       dist_max=corpus.dist_max)
+        out, mean_c = rerank_candidates(
+            lambda i, c: score(q_emb[i], q_loc[i], c), list(top), k)
+        rows.append(common.fmt_row(
+            f"TkQ+LIST-R(k={kk})", common.eval_ranking(out, positives),
+            f"cand={mean_c:.0f},sec={time.time()-t0:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,98 @@
+"""Shared benchmark harness: train ONE retriever, reuse across tables.
+
+The trained state is cached in-process (module singleton) so that
+``python -m benchmarks.run`` trains once and every bench reads it. Scale is
+chosen so the full suite finishes on one CPU in ~10 min; the same harness
+runs the paper-scale datasets on a real fleet.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import cluster_metrics as cm
+from repro.core import index as il
+from repro.core import pipeline as pl
+from repro.data import GeoCorpus, GeoCorpusConfig
+
+# benchmark-scale knobs (CPU-feasible analogue of the paper's datasets)
+N_OBJECTS = 4000
+N_QUERIES = 600
+N_TOPICS = 16
+N_CLUSTERS = 8
+REL_STEPS = 300
+IDX_STEPS = 600
+SEED = 0
+
+_STATE = {}
+
+
+def bench_cfg(**over):
+    base = dict(
+        n_layers=4, d_model=64, n_heads=4, d_ff=128, vocab_size=4096,
+        max_len=16, spatial_t=100, n_clusters=N_CLUSTERS,
+        neg_start=N_OBJECTS // 2, neg_end=N_OBJECTS // 2 + 200,
+        index_mlp_hidden=(128,))
+    base.update(over)
+    return dataclasses.replace(get_config("list-dual-encoder"), **base)
+
+
+def get_corpus():
+    if "corpus" not in _STATE:
+        _STATE["corpus"] = GeoCorpus(GeoCorpusConfig(
+            n_objects=N_OBJECTS, n_queries=N_QUERIES, n_topics=N_TOPICS,
+            vocab_size=4096, seed=SEED))
+    return _STATE["corpus"]
+
+
+def get_retriever(*, spatial_mode="step", weight_mode="mlp",
+                  rel_steps=REL_STEPS, idx_steps=IDX_STEPS, tag=None,
+                  with_index=True):
+    key = tag or f"{spatial_mode}-{weight_mode}"
+    if key not in _STATE:
+        corpus = get_corpus()
+        r = pl.ListRetriever(bench_cfg(), corpus, spatial_mode=spatial_mode,
+                             weight_mode=weight_mode)
+        t0 = time.time()
+        r.train_relevance(steps=rel_steps, batch=64, lr=1e-3, log_every=10**9)
+        if with_index:
+            r.train_index(steps=idx_steps, batch=64, lr=3e-3,
+                          log_every=10**9)
+            r.build()
+        else:
+            r.ensure_embeddings()
+        r.train_seconds = time.time() - t0
+        _STATE[key] = r
+    return _STATE[key]
+
+
+def eval_ranking(ids, positives):
+    return {
+        "recall@20": cm.recall_at_k(ids, positives, 20),
+        "recall@10": cm.recall_at_k(ids, positives, 10),
+        "ndcg@5": cm.ndcg_at_k(ids, positives, 5),
+        "ndcg@1": cm.ndcg_at_k(ids, positives, 1),
+    }
+
+
+def test_split_positives(corpus):
+    tr, va, te = corpus.split()
+    return te, [corpus.positives[q] for q in te]
+
+
+def query_cluster_assign(r, query_ids):
+    q_emb = pl.embed_queries(r.rel_params, r.corpus, r.cfg, query_ids)
+    qf = il.build_features(
+        jnp.asarray(q_emb),
+        jnp.asarray(r.corpus.q_loc[query_ids].astype(np.float32)), r.norm)
+    return np.asarray(il.assign_clusters(r.index_params, qf))
+
+
+def fmt_row(name: str, metrics: dict, extra: str = "") -> str:
+    body = ",".join(f"{k}={v:.4f}" if isinstance(v, float) else f"{k}={v}"
+                    for k, v in metrics.items())
+    return f"{name},{body}" + (f",{extra}" if extra else "")

@@ -1,0 +1,67 @@
+"""Run every paper-table benchmark; print CSV blocks per table.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+--fast cuts training steps (CI smoke); default reproduces the full report
+ in ~10 min on one CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma-separated bench names to run")
+    args = ap.parse_args(argv)
+
+    from benchmarks import common
+    if args.fast:
+        common.N_OBJECTS = 1500
+        common.N_QUERIES = 300
+        common.REL_STEPS = 120
+        common.IDX_STEPS = 250
+
+    from benchmarks import (
+        bench_ablation_spatial,
+        bench_cluster_quality,
+        bench_kernels,
+        bench_memory,
+        bench_neg_start,
+        bench_relevance,
+        bench_scalability,
+        bench_tradeoff,
+    )
+    suite = [
+        ("Table3_relevance", bench_relevance.run),
+        ("Fig4_5_tradeoff", bench_tradeoff.run),
+        ("Table4_memory", bench_memory.run),
+        ("Table5_cluster_quality", bench_cluster_quality.run),
+        ("Fig8_neg_start", bench_neg_start.run),
+        ("Table6_spatial_ablation", bench_ablation_spatial.run),
+        ("Fig7_scalability", bench_scalability.run),
+        ("Kernel_fusion", bench_kernels.run),
+    ]
+    only = {s for s in args.only.split(",") if s}
+    failures = 0
+    for name, fn in suite:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"\n### {name}")
+        try:
+            for row in fn():
+                print(row)
+            print(f"# ({time.time() - t0:.1f}s)")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"# FAILED: {type(e).__name__}: {e}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,58 @@
+"""Quickstart: train LIST end-to-end on a small synthetic city and answer
+spatial keyword queries — the whole paper in ~3 minutes on a laptop CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import cluster_metrics as cm
+from repro.core.pipeline import ListRetriever
+from repro.data import GeoCorpus, GeoCorpusConfig
+
+
+def main():
+    # 1. a city: 2000 POIs with latent topics + spatial hotspots, and a
+    #    click log of 400 queries (the paper's Beijing/Shanghai analogue)
+    corpus = GeoCorpus(GeoCorpusConfig(
+        n_objects=2000, n_queries=400, n_topics=12, vocab_size=4096, seed=0))
+
+    # 2. LIST = dual-encoder relevance model + learned cluster index
+    cfg = dataclasses.replace(
+        get_config("list-dual-encoder"),
+        n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab_size=4096,
+        max_len=16, spatial_t=100, n_clusters=8,
+        neg_start=1000, neg_end=1200, index_mlp_hidden=(64,))
+    r = ListRetriever(cfg, corpus)
+
+    print("training relevance model (contrastive, Eq. 8) ...")
+    r.train_relevance(steps=200, batch=64, lr=1.5e-3, verbose=True,
+                      log_every=100)
+    print("training index (pseudo-labels Eq. 13 + MCL Eq. 14) ...")
+    r.train_index(steps=400, batch=64, lr=3e-3, verbose=True, log_every=200)
+    buf = r.build()
+    print("cluster sizes:", np.asarray(buf["counts"]).tolist())
+
+    # 3. answer the held-out queries
+    tr, va, te = corpus.split()
+    positives = [corpus.positives[q] for q in te]
+    ids, scores = r.query(te, k=10, cr=1)
+    bf_ids, _ = r.brute_force(te, k=10)
+    print(f"\nLIST        recall@10 = {cm.recall_at_k(ids, positives, 10):.3f}"
+          f"  (scans ≤{buf['capacity']} of {corpus.cfg.n_objects} objects)")
+    print(f"brute force recall@10 = "
+          f"{cm.recall_at_k(bf_ids, positives, 10):.3f}"
+          f"  (scans all {corpus.cfg.n_objects})")
+
+    # 4. one concrete query, end to end
+    q = te[0]
+    print(f"\nquery {q}: keywords={corpus.q_doc[q].tolist()} "
+          f"loc={np.round(corpus.q_loc[q], 3).tolist()}")
+    print(f"  top-5 objects: {ids[0][:5].tolist()}")
+    print(f"  ground truth : {corpus.positives[q][:5].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

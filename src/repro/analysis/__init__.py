@@ -1,0 +1,5 @@
+from repro.analysis.roofline import (  # noqa: F401
+    collective_bytes,
+    model_flops,
+    roofline_terms,
+)

@@ -1,0 +1,87 @@
+"""Dry-run profiler: attribute HLO bytes/collectives to ops.
+
+    PYTHONPATH=src python -m repro.analysis.hlo_top --arch kimi-k2-1t-a32b \
+        --shape train_4k [--multi-pod] [--top 20]
+
+Prints (a) every collective with wire bytes and metadata op_name, (b) the
+top-N largest tensors written (fusion outputs), grouped by source op_name —
+this is the "profile" the perf loop iterates against (no wall clock on CPU).
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import collections
+import re
+
+import jax
+
+from repro.analysis.roofline import _INSTR_RE, _GROUPS_RE, _GROUPS_V2_RE, _shape_bytes
+from repro.distributed import sharding as sh
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps
+
+_RESULT_RE = re.compile(r"^\s*(?:ROOT )?%?[\w.\-]+ = ((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*))\s+(\S+)\(")
+_METADATA_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def analyze(arch, shape, multi_pod=False, top=20):
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    plan = steps.plan_cell(arch, shape, mesh)
+    with mesh, sh.axis_rules(sh.rules_for_mesh(mesh)):
+        jfn = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                      out_shardings=plan.out_shardings)
+        compiled = jfn.lower(*plan.args).compile()
+    text = compiled.as_text()
+
+    coll = []
+    writes = collections.Counter()
+    for line in text.splitlines():
+        m = _INSTR_RE.search(line)
+        meta = _METADATA_RE.search(line)
+        op_name = meta.group(1) if meta else "?"
+        if m is not None:
+            nbytes = _shape_bytes(m.group(1))
+            g = _GROUPS_RE.search(line)
+            n = (len(g.group(1).split(",")) if g else None)
+            if n is None:
+                g2 = _GROUPS_V2_RE.search(line)
+                n = int(g2.group(2)) if g2 else 2
+            coll.append((nbytes, m.group(2), n, op_name))
+            continue
+        r = _RESULT_RE.match(line)
+        if r and r.group(2) in ("fusion", "custom-call", "dot", "convolution",
+                                "scatter", "gather", "while", "copy",
+                                "all-gather-done"):
+            key = (r.group(2), _short(op_name))
+            writes[key] += _shape_bytes(r.group(1))
+
+    print(f"=== {arch} × {shape} [{'2x16x16' if multi_pod else '16x16'}] ===")
+    cost = compiled.cost_analysis() or {}
+    print(f"flops/chip={cost.get('flops', 0):.3e}  "
+          f"bytes/chip={cost.get('bytes accessed', 0):.3e}")
+    print(f"\n-- collectives ({len(coll)}) --")
+    agg = collections.Counter()
+    for nbytes, kind, n, op_name in coll:
+        agg[(kind, _short(op_name), n)] += nbytes
+    for (kind, op_name, n), nbytes in agg.most_common(top):
+        print(f"  {nbytes/1e9:9.3f} GB  {kind:20s} n={n:<4d} {op_name}")
+    print(f"\n-- top write targets --")
+    for (kind, op_name), nbytes in writes.most_common(top):
+        print(f"  {nbytes/1e9:9.3f} GB  {kind:12s} {op_name}")
+
+
+def _short(op_name: str) -> str:
+    # keep the tail of the jax op_name path, drop uniquifying digits
+    tail = "/".join(op_name.split("/")[-3:])
+    return re.sub(r"\d+", "", tail)[:80]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=20)
+    a = ap.parse_args()
+    analyze(a.arch, a.shape, multi_pod=a.multi_pod, top=a.top)

@@ -1,0 +1,139 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+  compute    = HLO_FLOPs / peak_FLOPs          (per chip)
+  memory     = HLO_bytes / HBM_bw              (per chip)
+  collective = wire_bytes / link_bw            (per chip)
+
+FLOPs / bytes come from ``compiled.cost_analysis()`` (post-SPMD, i.e.
+per-device). Collective bytes are NOT in cost_analysis — we parse the
+post-optimization HLO (``compiled.as_text()``, per-device shapes) and sum
+the effective wire traffic of every collective with ring-algorithm factors:
+
+  all-gather      out_bytes · (n-1)/n
+  reduce-scatter  in_bytes  · (n-1)/n
+  all-reduce      2 · bytes · (n-1)/n
+  all-to-all      bytes · (n-1)/n
+  collective-permute  bytes
+
+``n`` is read from the op's replica_groups. Pod-axis (DCN) traffic is
+reported separately when the group spans more devices than one pod's 256.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+from repro.launch.mesh import (
+    DCN_BW,
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+# result shapes: "bf16[2,128]{1,0}" possibly inside a tuple "(bf16[..], ..)"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_INSTR_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str, *, pod_size: int = 256) -> Dict[str, float]:
+    """Effective per-chip wire bytes by collective kind (+ ici/dcn split)."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    out["ici_bytes"] = 0.0
+    out["dcn_bytes"] = 0.0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if m is None:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done" in line.split("=")[1][:40]:
+            continue
+        nbytes = _shape_bytes(shape_str)
+        # group size n
+        n = None
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len([x for x in g.group(1).split(",") if x.strip() != ""])
+        else:
+            g2 = _GROUPS_V2_RE.search(line)
+            if g2:
+                n = int(g2.group(2))
+        n = n or 2
+        frac = (n - 1) / n
+        if kind == "all-gather":
+            wire = nbytes * frac            # result bytes, ring
+        elif kind == "reduce-scatter":
+            wire = nbytes * n * frac        # result is 1/n of the input
+        elif kind == "all-reduce":
+            wire = 2 * nbytes * frac
+        elif kind == "all-to-all":
+            wire = nbytes * frac
+        else:                               # collective-permute
+            wire = nbytes
+        out[kind] += wire
+        if n > pod_size:
+            out["dcn_bytes"] += wire
+        else:
+            out["ici_bytes"] += wire
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll: Dict[str, float]) -> Dict[str, float]:
+    """All inputs are per-chip. Returns the three terms in seconds."""
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = bytes_accessed / HBM_BW
+    ici_s = coll.get("ici_bytes", 0.0) / ICI_BW
+    dcn_s = coll.get("dcn_bytes", 0.0) / DCN_BW
+    collective_s = ici_s + dcn_s
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s, "ici_s": ici_s, "dcn_s": dcn_s}
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    terms["bottleneck"] = dom
+    step_s = max(compute_s, memory_s, collective_s)
+    terms["step_time_lb_s"] = step_s
+    terms["roofline_fraction"] = (compute_s / step_s) if step_s > 0 else 0.0
+    return terms
+
+
+def model_flops(cfg, *, tokens: Optional[int] = None, train: bool = True,
+                extra: float = 0.0) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for LM configs;
+    `extra` lets callers add attention FLOPs etc. GLOBAL (all chips)."""
+    if hasattr(cfg, "n_active_params"):
+        n = cfg.n_active_params()
+    elif hasattr(cfg, "n_params"):
+        n = cfg.n_params()
+    else:
+        return 0.0
+    mult = 6.0 if train else 2.0
+    return mult * n * (tokens or 0) + extra

@@ -1,0 +1,7 @@
+"""Fault-tolerant sharded checkpointing (see ckpt.py)."""
+from repro.checkpoint.ckpt import (  # noqa: F401
+    CheckpointManager,
+    latest_step,
+    restore,
+    save,
+)

@@ -1,0 +1,50 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_shapes(arch_id)``.
+
+Every assigned architecture (plus the paper's own dual encoder) registers an
+exact full config and its shape cells here.
+"""
+from __future__ import annotations
+
+from repro.configs import base
+from repro.configs.base import reduced  # re-export
+
+_REGISTRY = {}
+
+
+def register(arch_id, cfg_fn, shapes_fn):
+    _REGISTRY[arch_id] = (cfg_fn, shapes_fn)
+
+
+def arch_ids():
+    return sorted(_REGISTRY)
+
+
+def get_config(arch_id: str):
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {arch_ids()}")
+    return _REGISTRY[arch_id][0]()
+
+
+def get_shapes(arch_id: str):
+    return _REGISTRY[arch_id][1]()
+
+
+def get_shape(arch_id: str, shape_name: str):
+    for s in get_shapes(arch_id):
+        if s.name == shape_name:
+            return s
+    raise KeyError(f"arch {arch_id} has no shape {shape_name!r}")
+
+
+# --- import registrations (order: LM, gnn, recsys, paper) ---
+from repro.configs import gemma3_27b          # noqa: F401,E402
+from repro.configs import stablelm_1_6b       # noqa: F401,E402
+from repro.configs import qwen2_7b            # noqa: F401,E402
+from repro.configs import moonshot_16b_a3b    # noqa: F401,E402
+from repro.configs import kimi_k2_1t_a32b     # noqa: F401,E402
+from repro.configs import gatedgcn            # noqa: F401,E402
+from repro.configs import mind                # noqa: F401,E402
+from repro.configs import bert4rec            # noqa: F401,E402
+from repro.configs import xdeepfm             # noqa: F401,E402
+from repro.configs import dlrm_mlperf         # noqa: F401,E402
+from repro.configs import list_dual_encoder   # noqa: F401,E402

@@ -1,0 +1,13 @@
+"""dlrm-mlperf — MLPerf DLRM benchmark config (Criteo 1TB). [arXiv:1906.00091]."""
+from repro.configs import base, register
+
+
+def config():
+    return base.DLRMConfig()
+
+
+def shapes():
+    return base.REC_SHAPES
+
+
+register("dlrm-mlperf", config, shapes)

@@ -1,0 +1,36 @@
+"""gemma3-27b — dense LM, 5:1 local:global sliding-window hybrid, 128k context.
+
+[hf:google/gemma-3-*; config per assignment table]. head_dim decoupled from
+d_model (Gemma-3 convention, 128). Window 1024 for local layers.
+"""
+from repro.configs import base, register
+
+_N_LAYERS = 62
+# 5 local : 1 global, remainder local (62 = 10*6 + 2).
+_PATTERN = tuple((["L"] * 5 + ["G"]) * 10 + ["L", "L"])
+
+
+def config():
+    return base.LMConfig(
+        arch_id="gemma3-27b",
+        n_layers=_N_LAYERS,
+        d_model=5376,
+        n_heads=32,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=21504,
+        vocab_size=262_144,
+        layer_pattern=_PATTERN,
+        window_size=1024,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+    )
+
+
+def shapes():
+    # Hybrid sliding-window arch: long_500k RUNS (local KV bounded by window;
+    # global layers decode linearly in cache length). See DESIGN.md §7.
+    return base.lm_shapes("gemma3-27b", full_attention_only=False)
+
+
+register("gemma3-27b", config, shapes)

@@ -1,0 +1,13 @@
+"""mind — multi-interest capsule retrieval. [arXiv:1904.08030]."""
+from repro.configs import base, register
+
+
+def config():
+    return base.MINDConfig()
+
+
+def shapes():
+    return base.REC_SHAPES
+
+
+register("mind", config, shapes)

@@ -1,0 +1,213 @@
+"""Classical retrieval baselines the paper compares against (§5.1).
+
+- BM25 text relevance + TkQ ranking (Eq. 1 with BM25 TRel, linear SRel)
+- brute-force embedding search (LIST-R over the whole corpus)
+- IVF: k-means clusters on text embeddings, route to cr nearest centroids
+- IVF_S: k-means on the weighted concat of embedding + geo features (the
+  "manually balance the two factors" strawman, paper §5.2)
+- LSH: random-hyperplane signatures, multi-table bucket lookup
+
+All are JAX/numpy re-implementations (Faiss is CPU/GPU C++; these map the
+same math onto dense linear algebra — DESIGN.md §3). HNSW is deliberately
+not ported: beam search over a pointer graph is scalar-core-hostile on TPU
+(DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# BM25 + TkQ
+# ---------------------------------------------------------------------------
+
+
+class BM25:
+    """BM25 over token-id documents (exact word matching — the point)."""
+
+    def __init__(self, docs: np.ndarray, *, k1=1.2, b=0.75,
+                 vocab_size: Optional[int] = None):
+        """docs: (N, L) int token ids, 0 = pad."""
+        self.k1, self.b = k1, b
+        self.docs = docs
+        n, l = docs.shape
+        self.doc_len = (docs != 0).sum(1)
+        self.avg_len = max(float(self.doc_len.mean()), 1.0)
+        V = vocab_size or int(docs.max()) + 1
+        df = np.zeros(V, np.int64)
+        for i in range(n):
+            df[np.unique(docs[i][docs[i] != 0])] += 1
+        self.idf = np.log(1.0 + (n - df + 0.5) / (df + 0.5))
+        self.n = n
+        self.V = V
+
+    def scores(self, q_tokens: np.ndarray) -> np.ndarray:
+        """q_tokens: (B, Lq) → (B, N) BM25 scores."""
+        B = q_tokens.shape[0]
+        out = np.zeros((B, self.n), np.float32)
+        k1, b = self.k1, self.b
+        norm = k1 * (1 - b + b * self.doc_len / self.avg_len)  # (N,)
+        for i in range(B):
+            terms = np.unique(q_tokens[i][q_tokens[i] > 1])
+            for t in terms:
+                tf = (self.docs == t).sum(1)                    # (N,)
+                out[i] += self.idf[t] * tf * (k1 + 1) / (tf + norm)
+        return out
+
+
+def tkq_scores(bm25: BM25, q_tokens, q_loc, obj_loc, *, alpha=0.4,
+               dist_max=math.sqrt(2.0)) -> np.ndarray:
+    """Eq. 1: (1-α)·SRel_linear + α·TRel_BM25-normalized. → (B, N)."""
+    t = bm25.scores(q_tokens)
+    t_max = t.max(axis=1, keepdims=True)
+    t = t / np.maximum(t_max, 1e-9)                       # normalize to [0,1]
+    d = np.linalg.norm(q_loc[:, None] - obj_loc[None], axis=-1)
+    srel = 1.0 - np.clip(d / dist_max, 0.0, 1.0)
+    return (1 - alpha) * srel + alpha * t
+
+
+def tkq_topk(bm25, q_tokens, q_loc, obj_loc, k, **kw) -> np.ndarray:
+    s = tkq_scores(bm25, q_tokens, q_loc, obj_loc, **kw)
+    return np.argsort(-s, axis=1)[:, :k]
+
+
+# ---------------------------------------------------------------------------
+# k-means (Lloyd, pure JAX) — substrate for IVF / IVF_S
+# ---------------------------------------------------------------------------
+
+
+def kmeans(x, n_clusters: int, *, iters: int = 25, seed: int = 0):
+    """x: (N, d) → (centroids (c, d), assign (N,)). Pure-JAX Lloyd."""
+    x = jnp.asarray(x)
+    n = x.shape[0]
+    key = jax.random.PRNGKey(seed)
+    init = jax.random.choice(key, n, (n_clusters,), replace=False)
+    cent = x[init]
+
+    @jax.jit
+    def step(cent):
+        d = (jnp.sum(x * x, 1)[:, None] - 2 * x @ cent.T
+             + jnp.sum(cent * cent, 1)[None])
+        a = jnp.argmin(d, axis=1)
+        oh = jax.nn.one_hot(a, n_clusters, dtype=x.dtype)     # (N, c)
+        sums = oh.T @ x
+        cnt = oh.sum(0)[:, None]
+        new = jnp.where(cnt > 0, sums / jnp.maximum(cnt, 1), cent)
+        return new, a
+
+    assign = None
+    for _ in range(iters):
+        cent, assign = step(cent)
+    return cent, assign
+
+
+class IVFIndex:
+    """k-means inverted file over embeddings (+ optional spatial factor)."""
+
+    def __init__(self, emb, loc=None, *, n_clusters: int, alpha: float = 1.0,
+                 iters: int = 25, seed: int = 0):
+        """alpha=1.0 → plain IVF (text embedding only).
+        alpha<1.0 → IVF_S: k-means on [α·L2norm(emb), (1-α)·loc_hat]."""
+        emb = np.asarray(emb, np.float32)
+        self.alpha = alpha
+        if alpha >= 1.0 or loc is None:
+            feats = emb
+            self._loc_stats = None
+        else:
+            e = emb / np.maximum(
+                np.linalg.norm(emb, axis=1, keepdims=True), 1e-9)
+            lo, hi = loc.min(0), loc.max(0)
+            lh = (loc - lo) / np.maximum(hi - lo, 1e-9)
+            feats = np.concatenate([alpha * e, (1 - alpha) * lh], axis=1)
+            self._loc_stats = (lo, hi)
+        cent, assign = kmeans(jnp.asarray(feats), n_clusters, iters=iters,
+                              seed=seed)
+        self.centroids = np.asarray(cent)
+        self.assign = np.asarray(assign)
+        self.n_clusters = n_clusters
+        self.lists = [np.nonzero(self.assign == c)[0]
+                      for c in range(n_clusters)]
+
+    def _query_feats(self, q_emb, q_loc):
+        q_emb = np.asarray(q_emb, np.float32)
+        if self._loc_stats is None:
+            return q_emb
+        lo, hi = self._loc_stats
+        e = q_emb / np.maximum(
+            np.linalg.norm(q_emb, axis=1, keepdims=True), 1e-9)
+        lh = (np.asarray(q_loc) - lo) / np.maximum(hi - lo, 1e-9)
+        return np.concatenate([self.alpha * e, (1 - self.alpha) * lh], axis=1)
+
+    def probe(self, q_emb, q_loc=None, *, cr: int = 1) -> np.ndarray:
+        """(B, cr) nearest centroid ids (L2)."""
+        f = self._query_feats(q_emb, q_loc)
+        d = (np.sum(f * f, 1)[:, None] - 2 * f @ self.centroids.T
+             + np.sum(self.centroids ** 2, 1)[None])
+        return np.argsort(d, axis=1)[:, :cr]
+
+    def candidates(self, q_emb, q_loc=None, *, cr: int = 1):
+        """list of per-query candidate id arrays."""
+        probes = self.probe(q_emb, q_loc, cr=cr)
+        return [np.concatenate([self.lists[c] for c in row]) if len(row)
+                else np.empty(0, np.int64) for row in probes]
+
+
+class LSHIndex:
+    """Random-hyperplane LSH with L tables of nbits-bit signatures."""
+
+    def __init__(self, emb, *, nbits: int = 16, n_tables: int = 4,
+                 seed: int = 0):
+        emb = np.asarray(emb, np.float32)
+        rng = np.random.default_rng(seed)
+        d = emb.shape[1]
+        self.planes = rng.normal(size=(n_tables, nbits, d)).astype(np.float32)
+        self.n_tables = n_tables
+        self.nbits = nbits
+        self.codes = self._hash(emb)                 # (T, N)
+        self.tables = []
+        for t in range(n_tables):
+            buckets = {}
+            for i, c in enumerate(self.codes[t]):
+                buckets.setdefault(int(c), []).append(i)
+            self.tables.append({k: np.array(v, np.int64)
+                                for k, v in buckets.items()})
+
+    def _hash(self, x) -> np.ndarray:
+        sig = np.einsum("tbd,nd->tnb", self.planes, x) > 0
+        weights = (1 << np.arange(self.nbits)).astype(np.int64)
+        return sig @ weights                          # (T, N)
+
+    def candidates(self, q_emb):
+        codes = self._hash(np.asarray(q_emb, np.float32))   # (T, B)
+        outs = []
+        for i in range(codes.shape[1]):
+            cand = [self.tables[t].get(int(codes[t, i]), np.empty(0, np.int64))
+                    for t in range(self.n_tables)]
+            outs.append(np.unique(np.concatenate(cand))
+                        if cand else np.empty(0, np.int64))
+        return outs
+
+
+# ---------------------------------------------------------------------------
+# Shared rerank: score candidate lists with LIST-R, return top-k
+# ---------------------------------------------------------------------------
+
+
+def rerank_candidates(score_fn, cand_lists, k: int):
+    """score_fn(q_idx, cand_ids) -> scores; returns (B, k) padded id matrix
+    (-1 pad) plus mean candidate count (the efficiency proxy)."""
+    out = np.full((len(cand_lists), k), -1, np.int64)
+    n_scored = 0
+    for i, cand in enumerate(cand_lists):
+        if len(cand) == 0:
+            continue
+        n_scored += len(cand)
+        s = np.asarray(score_fn(i, cand))
+        order = np.argsort(-s)[:k]
+        out[i, :len(order)] = cand[order]
+    return out, n_scored / max(len(cand_lists), 1)

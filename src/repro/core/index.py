@@ -1,0 +1,214 @@
+"""LIST-I: the learned cluster-classifier index (paper §4.3).
+
+A single MLP shared between queries and objects maps
+x = [L2norm(emb), lat̂, lon̂] (Eq. 9–10) to a softmax over c clusters
+(Eq. 11). Training uses the MCL pairwise loss (Eq. 14) on ground-truth
+positives + pseudo-negatives mined by the relevance model (Eq. 13,
+core/pseudo_labels.py).
+
+TPU-native indexing phase (DESIGN.md §3): instead of pointer-based inverted
+lists, objects are packed into fixed-capacity padded **cluster buffers**
+(emb (c, cap, d), loc (c, cap, 2), ids (c, cap)) so the query phase is a
+static-shape gather + fused score. Overflowing objects spill to their
+next-best cluster (at most `spill` hops) — balance is learned (that is the
+point of the pseudo-label design), spill is the safety net.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+# ---------------------------------------------------------------------------
+# Feature construction (Eq. 9–10)
+# ---------------------------------------------------------------------------
+
+
+def loc_normalizer(locs):
+    """Fit min/max normalization bounds from the object corpus. locs: (N,2)."""
+    lo = locs.min(axis=0)
+    hi = locs.max(axis=0)
+    return {"lo": lo, "span": jnp.maximum(hi - lo, 1e-9)}
+
+
+def build_features(emb, loc, norm):
+    """x = [L2norm(emb), lat̂, lon̂]: (..., d+2)."""
+    e = emb / jnp.maximum(jnp.linalg.norm(emb, axis=-1, keepdims=True), 1e-9)
+    l_hat = (loc - norm["lo"]) / norm["span"]
+    return jnp.concatenate([e, l_hat], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Cluster classifier (Eq. 11)
+# ---------------------------------------------------------------------------
+
+
+def index_init(key, d_emb: int, n_clusters: int, hidden=(512, 512)):
+    dims = (d_emb + 2,) + tuple(hidden) + (n_clusters,)
+    return {"mlp": layers.mlp_init(key, dims)}
+
+
+def cluster_logits(params, x):
+    return layers.mlp_apply(params["mlp"], x, act=jax.nn.relu)
+
+
+def cluster_probs(params, x):
+    return jax.nn.softmax(cluster_logits(params, x).astype(jnp.float32), -1)
+
+
+# ---------------------------------------------------------------------------
+# MCL training loss (Eq. 14)
+# ---------------------------------------------------------------------------
+
+
+def mcl_loss(params, batch, *, balance_weight: float = 0.5):
+    """Meta-classification likelihood over pairwise pseudo-labels.
+
+    batch:
+      q_feat   (B, d+2)
+      pos_feat (B, d+2)     one positive per query
+      neg_feat (B, m, d+2)  m pseudo-negatives per query
+    ŝ(q,o) = Prob_q · Prob_o; maximize log ŝ(pos) + Σ log(1 − ŝ(neg)).
+
+    ``balance_weight`` adds KL(mean-assignment ‖ uniform) — a beyond-paper
+    stabilizer (DESIGN.md §6): the paper relies on pseudo-negative hardness
+    alone for balance, which we found collapse-prone at small scale (all
+    probability mass drifting to a few clusters early in training kills the
+    pairwise gradient). The regularizer only bites while the MEAN assignment
+    is skewed; at the paper's balanced optimum it vanishes.
+    """
+    pq = cluster_probs(params, batch["q_feat"])          # (B, c)
+    pp = cluster_probs(params, batch["pos_feat"])        # (B, c)
+    pn = cluster_probs(params, batch["neg_feat"])        # (B, m, c)
+    s_pos = jnp.sum(pq * pp, axis=-1)
+    s_neg = jnp.einsum("bc,bmc->bm", pq, pn)
+    eps = 1e-6
+    loss = -(jnp.log(s_pos + eps).mean()
+             + jnp.log(1.0 - s_neg + eps).sum(-1).mean())
+    if balance_weight:
+        c = pq.shape[-1]
+        mean_p = jnp.concatenate(
+            [pq, pp, pn.reshape(-1, c)], axis=0).mean(0)
+        kl_unif = jnp.log(c) + jnp.sum(mean_p * jnp.log(mean_p + eps))
+        loss = loss + balance_weight * kl_unif
+    return loss, {"loss": loss, "s_pos": s_pos.mean(), "s_neg": s_neg.mean()}
+
+
+# ---------------------------------------------------------------------------
+# Indexing phase: partition objects into padded cluster buffers
+# ---------------------------------------------------------------------------
+
+
+def assign_clusters(params, feats, *, top=1):
+    """argmax (or top-`top`) cluster per object. feats: (N, d+2)."""
+    logits = cluster_logits(params, feats)
+    if top == 1:
+        return jnp.argmax(logits, axis=-1)
+    return jax.lax.top_k(logits, top)[1]
+
+
+def build_cluster_buffers(assign_top, emb, loc, *, n_clusters: int,
+                          capacity: Optional[int] = None, spill: int = 3):
+    """Pack objects into (c, cap) padded buffers (host-side, numpy).
+
+    assign_top: (N, spill) preferred clusters per object, best first.
+    Returns dict with emb (c,cap,d), loc (c,cap,2), ids (c,cap) int32
+    (-1 = padding), counts (c,).
+    """
+    assign_top = np.asarray(assign_top)
+    emb = np.asarray(emb)
+    loc = np.asarray(loc)
+    n, d = emb.shape
+    c = n_clusters
+    if capacity is None:
+        capacity = int(math.ceil(n / c * 2.0))
+        capacity = -(-capacity // 128) * 128
+    counts = np.zeros(c, np.int64)
+    ids = np.full((c, capacity), -1, np.int32)
+    n_spilled = 0
+    for i in range(n):
+        placed = False
+        for h in range(min(spill, assign_top.shape[1])):
+            ci = int(assign_top[i, h])
+            if counts[ci] < capacity:
+                ids[ci, counts[ci]] = i
+                counts[ci] += 1
+                placed = True
+                if h > 0:
+                    n_spilled += 1
+                break
+        if not placed:  # everything full: force into least-loaded cluster
+            ci = int(np.argmin(counts))
+            if counts[ci] >= capacity:
+                raise ValueError("cluster capacity exhausted; raise capacity")
+            ids[ci, counts[ci]] = i
+            counts[ci] += 1
+            n_spilled += 1
+    gather = np.where(ids >= 0, ids, 0)
+    buf_emb = emb[gather]
+    buf_loc = loc[gather]
+    valid = ids >= 0
+    # zero out padding so fused scores on pads are harmless (masked anyway)
+    buf_emb[~valid] = 0.0
+    buf_loc[~valid] = 1e6
+    return {
+        "emb": jnp.asarray(buf_emb), "loc": jnp.asarray(buf_loc),
+        "ids": jnp.asarray(ids), "counts": jnp.asarray(counts),
+        "n_spilled": n_spilled, "capacity": capacity,
+    }
+
+
+def route_queries(params, q_feats, *, cr: int = 1):
+    """Top-cr clusters per query: (B, cr) ids + probs."""
+    logits = cluster_logits(params, q_feats)
+    p = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    top_p, top_i = jax.lax.top_k(p, cr)
+    return top_i, top_p
+
+
+# ---------------------------------------------------------------------------
+# Insertion / deletion (paper §4.3 "Insertion and Deletion Policy")
+# ---------------------------------------------------------------------------
+
+
+def insert_objects(buffers, params, norm, new_emb, new_loc, new_ids):
+    """Route new objects through the trained index into their buffers."""
+    feats = build_features(new_emb, new_loc, norm)
+    cl = np.asarray(assign_clusters(params, feats))
+    emb_np = {k: np.asarray(v).copy() for k, v in buffers.items()
+              if k in ("emb", "loc", "ids")}
+    counts = np.asarray(buffers["counts"]).copy()
+    cap = buffers["capacity"]
+    for j, ci in enumerate(cl):
+        ci = int(ci)
+        if counts[ci] >= cap:
+            ci = int(np.argmin(counts))
+        slot = counts[ci]
+        emb_np["emb"][ci, slot] = np.asarray(new_emb[j])
+        emb_np["loc"][ci, slot] = np.asarray(new_loc[j])
+        emb_np["ids"][ci, slot] = int(new_ids[j])
+        counts[ci] += 1
+    out = dict(buffers)
+    out.update({k: jnp.asarray(v) for k, v in emb_np.items()})
+    out["counts"] = jnp.asarray(counts)
+    return out
+
+
+def delete_objects(buffers, del_ids):
+    """Mark deleted ids as padding (lazy deletion, compaction on rebuild)."""
+    ids = np.asarray(buffers["ids"]).copy()
+    emb = np.asarray(buffers["emb"]).copy()
+    mask = np.isin(ids, np.asarray(del_ids))
+    ids[mask] = -1
+    emb[mask] = 0.0
+    out = dict(buffers)
+    out["ids"] = jnp.asarray(ids)
+    out["emb"] = jnp.asarray(emb)
+    out["counts"] = jnp.asarray((ids >= 0).sum(-1))
+    return out

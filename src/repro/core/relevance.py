@@ -1,0 +1,136 @@
+"""LIST-R: the embedding-based spatio-textual relevance model (paper §4.2).
+
+ST(q, o) = w_st · [TRel, SRel]          (Eq. 7)
+  TRel   = q.emb · o.emb                (Eq. 3, dual encoder)
+  SRel   = learned step function        (Eq. 4/5, core/spatial.py)
+  w_st   = MLP(q.emb) ∈ R²              (Eq. 6, adaptive weighting)
+
+Training: contrastive NLL over the positive + b hard negatives + in-batch
+negatives (Eq. 8).
+
+Spatial-module ablations (paper Table 6) select via cfg-style kwargs:
+``spatial_mode`` in {"step", "linear", "exp"}; ``weight_mode`` in
+{"mlp", "fixed"}.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spatial as sp
+from repro.models import layers, transformer
+
+
+def relevance_init(key, cfg, *, spatial_mode="step", weight_mode="mlp"):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "q_enc": transformer.encoder_init(k1, cfg),
+        "o_enc": transformer.encoder_init(k2, cfg),
+        "weight_mlp": layers.mlp_init(k3, (cfg.d_model, 64, 2)),
+        "fixed_w": jnp.array([1.0, 1.0]),
+    }
+    if spatial_mode == "step":
+        p["spatial"] = sp.spatial_init(k4, cfg.spatial_t)
+    elif spatial_mode == "exp":
+        p["spatial"] = sp.exp_init(k4)
+    else:
+        p["spatial"] = {}
+    return p
+
+
+def encode_queries(params, tokens, mask, cfg):
+    return transformer.encoder_forward(params["q_enc"], tokens, mask, cfg)
+
+
+def encode_objects(params, tokens, mask, cfg):
+    return transformer.encoder_forward(params["o_enc"], tokens, mask, cfg)
+
+
+def st_weights(params, q_emb, *, weight_mode="mlp"):
+    """Per-query [w_text, w_spatial] (Eq. 6); softplus keeps them positive."""
+    if weight_mode == "fixed":
+        w = jnp.broadcast_to(params["fixed_w"], q_emb.shape[:-1] + (2,))
+        return jax.nn.softplus(w)
+    return jax.nn.softplus(layers.mlp_apply(params["weight_mlp"], q_emb))
+
+
+def srel(params, s_in, cfg, *, spatial_mode="step", train=True):
+    if spatial_mode == "step":
+        if train:
+            return sp.spatial_relevance_train(params["spatial"], s_in,
+                                              t=cfg.spatial_t)
+        w_hat = sp.extract_lookup(params["spatial"])
+        return sp.spatial_relevance_serve(w_hat, s_in)
+    if spatial_mode == "exp":
+        return sp.exp_srel(params["spatial"], s_in)
+    return sp.linear_srel(s_in)
+
+
+def score_pairs(params, q_emb, q_loc, o_emb, o_loc, cfg, *, dist_max=1.0,
+                spatial_mode="step", weight_mode="mlp", train=True):
+    """ST(q, o) for aligned pairs. q_emb: (..., d); o_emb: (..., d)."""
+    trel = jnp.sum(q_emb * o_emb, axis=-1)
+    s_in = sp.s_in_from_locs(q_loc, o_loc, dist_max)
+    s = srel(params, s_in, cfg, spatial_mode=spatial_mode, train=train)
+    w = st_weights(params, q_emb, weight_mode=weight_mode)
+    return w[..., 0] * trel + w[..., 1] * s
+
+
+def score_corpus(params, q_emb, q_loc, obj_emb, obj_loc, cfg, *,
+                 dist_max=1.0, spatial_mode="step", weight_mode="mlp",
+                 train=False):
+    """ST(q, o) for every (query, object) pair: (B, d)×(N, d) → (B, N).
+
+    Pure-jnp oracle of the fused Pallas kernel (kernels/fused_topk_score).
+    """
+    trel = q_emb @ obj_emb.T                              # (B, N)
+    d = jnp.linalg.norm(q_loc[:, None, :] - obj_loc[None, :, :], axis=-1)
+    s_in = 1.0 - jnp.clip(d / dist_max, 0.0, 1.0)
+    s = srel(params, s_in, cfg, spatial_mode=spatial_mode, train=train)
+    w = st_weights(params, q_emb, weight_mode=weight_mode)  # (B, 2)
+    return w[:, :1] * trel + w[:, 1:] * s
+
+
+def contrastive_loss(params, batch, cfg, *, spatial_mode="step",
+                     weight_mode="mlp", in_batch_negatives=True):
+    """Eq. 8 with in-batch negatives.
+
+    batch:
+      q_tokens (B, L), q_mask, q_loc (B, 2)
+      pos_tokens (B, L), pos_mask, pos_loc (B, 2)
+      neg_tokens (B, b, L), neg_mask, neg_loc (B, b, 2)
+      dist_max  scalar
+    """
+    b = batch["q_tokens"].shape[0]
+    nneg = batch["neg_tokens"].shape[1]
+    q = encode_queries(params, batch["q_tokens"], batch["q_mask"], cfg)
+    pos = encode_objects(params, batch["pos_tokens"], batch["pos_mask"], cfg)
+    flat_nt = batch["neg_tokens"].reshape(b * nneg, -1)
+    flat_nm = batch["neg_mask"].reshape(b * nneg, -1)
+    neg = encode_objects(params, flat_nt, flat_nm, cfg).reshape(b, nneg, -1)
+
+    dist_max = batch.get("dist_max", 1.0)
+    kw = dict(spatial_mode=spatial_mode, weight_mode=weight_mode, train=True,
+              dist_max=dist_max)
+    s_pos = score_pairs(params, q, batch["q_loc"], pos, batch["pos_loc"],
+                        cfg, **kw)                               # (B,)
+    s_neg = score_pairs(params, q[:, None, :], batch["q_loc"][:, None, :],
+                        neg, batch["neg_loc"], cfg, **kw)        # (B, b)
+    logits = [s_pos[:, None], s_neg]
+    if in_batch_negatives:
+        # other queries' positives as extra negatives (excluding self)
+        s_ib = score_corpus(params, q, batch["q_loc"], pos, batch["pos_loc"],
+                            cfg, spatial_mode=spatial_mode,
+                            weight_mode=weight_mode, train=True,
+                            dist_max=dist_max)                   # (B, B)
+        mask = ~jnp.eye(b, dtype=bool)
+        s_ib = jnp.where(mask, s_ib, -1e30)
+        logits.append(s_ib)
+    logits = jnp.concatenate(logits, axis=1).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -logp[:, 0].mean()
+    acc = (logits.argmax(-1) == 0).mean()
+    return loss, {"loss": loss, "acc": acc}

@@ -1,0 +1,104 @@
+"""Learnable monotonic step-function spatial relevance (paper §4.2, Eq. 4–5).
+
+Training form (Eq. 4): SRel = Σ_i act(w_s[i]) · 1[S_in ≥ T[i]] with uniform
+thresholds T[i] = i/t. ``act`` = softplus keeps every increment non-negative,
+so the learned function is monotonically non-decreasing in S_in (i.e.
+non-increasing in distance) BY CONSTRUCTION — the paper's feature (1) — and
+piecewise-constant between thresholds — feature (2).
+
+Serving form (Eq. 5): the prefix sums ŵ_s[i] = Σ_{j≤i} act(w_s[j]) are
+extracted once; SRel = ŵ_s[⌊S_in · t⌋] is a single O(1) gather, fused into
+the score kernel (kernels/fused_topk_score).
+
+The indicator in Eq. 4 has zero gradient; we train with the straight-through
+surrogate used in practice for step functions: a temperature-controlled
+sigmoid relaxation of the indicator (exact step in the forward pass, sigmoid
+gradient in the backward pass).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spatial_init(key, t: int):
+    # small positive initial increments: roughly linear ramp as a prior
+    return {"w_s": jnp.full((t,), -2.0) + 0.01 * jax.random.normal(key, (t,))}
+
+
+def thresholds(t: int):
+    return jnp.arange(t, dtype=jnp.float32) / t       # T[i] = i/t
+
+
+@jax.custom_vjp
+def _step_indicator(s_in, thr, tau):
+    """1[s_in >= thr] with sigmoid surrogate gradient (temperature tau)."""
+    return (s_in[..., None] >= thr).astype(jnp.float32)
+
+
+def _step_fwd(s_in, thr, tau):
+    out = _step_indicator(s_in, thr, tau)
+    return out, (s_in, thr, tau)
+
+
+def _step_bwd(res, g):
+    s_in, thr, tau = res
+    z = (s_in[..., None] - thr) / tau
+    sig = jax.nn.sigmoid(z)
+    ds = (g * sig * (1 - sig) / tau).sum(-1)
+    return ds, None, None
+
+
+_step_indicator.defvjp(_step_fwd, _step_bwd)
+
+
+def spatial_relevance_train(params, s_in, *, t: int, tau: float = 0.05):
+    """Eq. 4. s_in: (...,) in [0, 1] → SRel (...,). Differentiable in both
+    w_s (exact) and s_in (straight-through)."""
+    w = jax.nn.softplus(params["w_s"])                 # (t,) non-negative
+    ind = _step_indicator(s_in, thresholds(t), tau)    # (..., t)
+    return ind @ w
+
+
+def extract_lookup(params):
+    """Eq. 5 preparation: ŵ_s[i] = Σ_{j<=i} act(w_s[j]). Returns (t,) table."""
+    return jnp.cumsum(jax.nn.softplus(params["w_s"]))
+
+
+def spatial_relevance_serve(w_hat, s_in):
+    """Eq. 5: O(1) lookup. w_hat: (t,); s_in: (...,) → (...,)."""
+    t = w_hat.shape[0]
+    idx = jnp.clip(jnp.floor(s_in * t).astype(jnp.int32), 0, t - 1)
+    return jnp.take(w_hat, idx)
+
+
+# --- distances -------------------------------------------------------------
+
+
+def sdist(q_loc, o_loc, dist_max):
+    """Normalized Euclidean distance (paper §3.1). q_loc: (..., 2)."""
+    d = jnp.linalg.norm(q_loc - o_loc, axis=-1)
+    return jnp.clip(d / dist_max, 0.0, 1.0)
+
+
+def s_in_from_locs(q_loc, o_loc, dist_max):
+    return 1.0 - sdist(q_loc, o_loc, dist_max)
+
+
+# --- ablation variants (paper Table 6) -------------------------------------
+
+
+def linear_srel(s_in):
+    """LIST-R + S_in ablation: spatial relevance = S_in itself."""
+    return s_in
+
+
+def exp_init(key):
+    return {"alpha": jnp.zeros(()), "beta": jnp.zeros(())}
+
+
+def exp_srel(params, s_in):
+    """LIST-R + α·S_in^β ablation (learnable, both kept non-negative)."""
+    a = jax.nn.softplus(params["alpha"])
+    b = jax.nn.softplus(params["beta"])
+    return a * jnp.power(jnp.maximum(s_in, 1e-6), b)

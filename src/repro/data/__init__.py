@@ -1,0 +1,9 @@
+"""Deterministic synthetic data substrate (stateless, step-seeded)."""
+from repro.data.geotextual import GeoCorpus, GeoCorpusConfig, scale_corpus  # noqa: F401
+from repro.data.lm_data import LMStream  # noqa: F401
+from repro.data.graph_data import (  # noqa: F401
+    NeighborSampler,
+    community_graph,
+    molecule_batch,
+)
+from repro.data.recsys_data import CTRStream, SeqRecStream  # noqa: F401

@@ -1,0 +1,123 @@
+"""Fault tolerance at fleet scale: straggler detection + elastic planning.
+
+On a real fleet these hooks sit in the trainer loop:
+
+- :class:`StragglerMonitor` ingests per-host step heartbeats and flags hosts
+  whose step latency exceeds a robust threshold (median + k·MAD) for several
+  consecutive steps — the control plane then drains/replaces them.
+- :class:`ElasticPlanner` decides, given the surviving host set, the largest
+  valid mesh (dp must divide the global batch, tp must divide head/ff dims)
+  and whether a restart-from-checkpoint is cheaper than limping.
+- :func:`watchdog_step` wraps a jitted step with a wall-clock deadline so a
+  hung collective surfaces as a timeout instead of a silent stall (on TPU
+  fleets a hung NCCL/ICI collective is the classic failure mode).
+
+All host-side logic (pure Python) — unit-testable without devices.
+"""
+from __future__ import annotations
+
+import math
+import time
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class StragglerMonitor:
+    def __init__(self, *, window: int = 20, mad_k: float = 5.0,
+                 patience: int = 3):
+        self.window = window
+        self.mad_k = mad_k
+        self.patience = patience
+        self.latencies: Dict[str, deque] = defaultdict(
+            lambda: deque(maxlen=window))
+        self.strikes: Dict[str, int] = defaultdict(int)
+
+    def record(self, host: str, step_seconds: float):
+        self.latencies[host].append(step_seconds)
+
+    def _threshold(self) -> Optional[float]:
+        last = [d[-1] for d in self.latencies.values() if d]
+        if len(last) < 2:
+            return None
+        last_sorted = sorted(last)
+        med = last_sorted[len(last_sorted) // 2]
+        mad = sorted(abs(x - med) for x in last)[len(last) // 2]
+        return med + self.mad_k * max(mad, 0.05 * med, 1e-4)
+
+    def flagged(self) -> List[str]:
+        """Hosts exceeding the robust threshold `patience` times in a row."""
+        thr = self._threshold()
+        if thr is None:
+            return []
+        out = []
+        for host, lat in self.latencies.items():
+            if lat and lat[-1] > thr:
+                self.strikes[host] += 1
+            else:
+                self.strikes[host] = 0
+            if self.strikes[host] >= self.patience:
+                out.append(host)
+        return sorted(out)
+
+
+@dataclass
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    n_chips: int
+    reason: str = ""
+
+
+class ElasticPlanner:
+    """Choose the largest valid (data, model) mesh for the surviving chips.
+
+    model-axis candidates must divide ``tp_divisor`` (heads / d_ff / vocab
+    GCD); data axis must keep ``global_batch`` divisible. Pods are atomic:
+    losing any chip in a pod drops the pod (ICI is pod-internal).
+    """
+
+    def __init__(self, *, chips_per_pod: int = 256, tp_divisor: int = 16,
+                 global_batch: int = 256):
+        self.chips_per_pod = chips_per_pod
+        self.tp_divisor = tp_divisor
+        self.global_batch = global_batch
+
+    def plan(self, healthy_pods: int) -> Optional[MeshPlan]:
+        if healthy_pods <= 0:
+            return None
+        tp = min(self.tp_divisor, 16)
+        per_pod_data = self.chips_per_pod // tp
+        if healthy_pods == 1:
+            return MeshPlan((per_pod_data, tp), ("data", "model"),
+                            self.chips_per_pod, "single pod")
+        dp = healthy_pods * per_pod_data
+        if self.global_batch % healthy_pods != 0:
+            # drop to the largest pod count that divides the batch
+            while healthy_pods > 1 and self.global_batch % healthy_pods:
+                healthy_pods -= 1
+            return self.plan(healthy_pods)
+        return MeshPlan((healthy_pods, per_pod_data, tp),
+                        ("pod", "data", "model"),
+                        healthy_pods * self.chips_per_pod,
+                        f"{healthy_pods} pods")
+
+
+def watchdog_step(fn, *args, deadline_s: float = 600.0):
+    """Run a jitted step with a wall-clock deadline; raises TimeoutError.
+
+    jax dispatch is async — we block on the first output leaf.
+    """
+    import jax
+
+    t0 = time.time()
+    out = fn(*args)
+    leaves = jax.tree.leaves(out)
+    if leaves:
+        leaves[0].block_until_ready()
+    dt = time.time() - t0
+    if dt > deadline_s:
+        raise TimeoutError(
+            f"step exceeded deadline ({dt:.1f}s > {deadline_s}s) — "
+            "likely hung collective / dead host")
+    return out, dt

@@ -1,0 +1,199 @@
+"""Logical→physical sharding rules.
+
+Models annotate activations with *logical* axis names ("dp", "tp", None).
+The launcher binds them to physical mesh axes for the active mesh:
+
+  single-pod (16,16) ("data","model")      : dp=("data",)        tp=("model",)
+  multi-pod  (2,16,16) ("pod","data","model"): dp=("pod","data") tp=("model",)
+
+Outside any binding (CPU smoke tests) ``constrain`` is a no-op, so model code
+is mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def current_rules() -> Optional[dict]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: dict):
+    """rules: {"dp": ("pod","data"), "tp": ("model",)}."""
+    prev = current_rules()
+    _STATE.rules = rules
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def rules_for_mesh(mesh) -> dict:
+    names = mesh.axis_names
+    dp = tuple(n for n in names if n in ("pod", "data"))
+    tp = tuple(n for n in names if n == "model")
+    return {"dp": dp, "tp": tp, "all": tuple(names),
+            "_sizes": {n: mesh.shape[n] for n in names},
+            "_mesh": mesh}
+
+
+def logical_spec(*logical) -> Optional[P]:
+    """Map logical axis names to a PartitionSpec under the current rules."""
+    rules = current_rules()
+    if rules is None:
+        return None
+    out = []
+    for ax in logical:
+        if ax is None:
+            out.append(None)
+        else:
+            phys = rules.get(ax, ())
+            out.append(phys if len(phys) != 1 else phys[0])
+    return P(*out)
+
+
+def constrain(x, *logical):
+    """with_sharding_constraint on logical axes; no-op without bound rules."""
+    spec = logical_spec(*logical)
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rule tables (matched against pytree key paths).
+# Shapes may carry extra leading "stacked scan" dims — rules give specs for
+# the *trailing* dims; leading dims are padded with None.
+# ---------------------------------------------------------------------------
+
+# (regex on joined path, trailing logical axes)
+LM_PARAM_RULES = (
+    (r"embed$", ("tp", "dp")),                 # (V, d) vocab-parallel + fsdp
+    (r"unembed$", ("dp", "tp")),               # (d, V)
+    (r"attn/wq/w$", ("dp", "tp")),             # (d, H·Dh)
+    (r"attn/wk/w$", ("dp", "tp")),
+    (r"attn/wv/w$", ("dp", "tp")),
+    (r"attn/wo/w$", ("tp", "dp")),             # (H·Dh, d)
+    (r"attn/w[qkv]/b$", ("tp",)),
+    (r"attn/wo/b$", ("dp",)),
+    (r"moe/router$", (None, None)),            # small, replicated
+    (r"moe/w1$", ("tp", "dp", None)),          # (E, d, f): EP + fsdp
+    (r"moe/w3$", ("tp", "dp", None)),
+    (r"moe/w2$", ("tp", None, "dp")),          # (E, f, d)
+    (r"mlp/w1/w$", ("dp", "tp")),              # (d, f)
+    (r"mlp/w3/w$", ("dp", "tp")),
+    (r"mlp/w2/w$", ("tp", "dp")),              # (f, d)
+    (r"mlp/w./b$", (None,)),
+    (r"(ln|norm)", (None,)),                   # norms replicated
+    (r"pos_embed$", (None, "dp")),
+    (r".*", (None,)),                          # fallback: replicate
+)
+
+REC_PARAM_RULES = (
+    (r"tables?(/\d+)?$", ("tp", None)),        # big embedding tables row-sharded
+    (r"item_embed$", ("tp", None)),
+    (r".*", (None,)),
+)
+
+GNN_PARAM_RULES = (
+    (r".*", (None,)),                          # GatedGCN params are tiny
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params_shape, rules_table, *, extra_leading=None):
+    """Build a PartitionSpec pytree for a params shape-tree.
+
+    extra_leading: optional fn(path_str) -> int giving the number of stacked
+    scan dims to pad with None (default: inferred from rule length vs ndim).
+    """
+    rules = current_rules() or {}
+    sizes = rules.get("_sizes", {})
+
+    def _axes_size(entry) -> int:
+        if entry is None:
+            return 1
+        names = entry if isinstance(entry, tuple) else (entry,)
+        s = 1
+        for n in names:
+            s *= sizes.get(n, 1)
+        return s
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        ndim = len(leaf.shape)
+        for pat, logical in rules_table:
+            if re.search(pat, ps):
+                logical = logical[:ndim]
+                pad = ndim - len(logical)
+                full = (None,) * pad + tuple(logical)
+                spec = logical_spec(*full)
+                if spec is None:
+                    return None
+                # divisibility guard: drop sharding on any dim the mesh
+                # axes don't divide (e.g. odd-sized embedding tables)
+                fixed = tuple(
+                    e if leaf.shape[i] % _axes_size(e) == 0 else None
+                    for i, e in enumerate(tuple(spec) + (None,) * (
+                        ndim - len(tuple(spec)))))
+                return P(*fixed)
+        return logical_spec(*((None,) * ndim))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def named_shardings(mesh, spec_tree):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s if s is not None else P()), spec_tree,
+        is_leaf=lambda s: s is None or isinstance(s, P))
+
+
+def opt_state_specs(params_shapes, params_specs, optimizer: str):
+    """PartitionSpec tree for the optimizer state, mirroring param specs.
+
+    adamw: m/v shard exactly like the param. adafactor: vr drops the last
+    dim of the param spec, vc drops the second-to-last (matching the
+    factored second-moment shapes).
+    """
+    def _spec_tuple(s):
+        return tuple(s) if s is not None else None
+
+    if optimizer == "adamw":
+        return {"step": P(), "m": params_specs, "v": params_specs}
+    if optimizer == "adafactor":
+        def leaf(p, s):
+            st = _spec_tuple(s)
+            factored = len(p.shape) >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+            if not factored:
+                return {"v": s}
+            if st is None or len(st) < 2:
+                return {"vr": None, "vc": None}
+            return {"vr": P(*st[:-1]), "vc": P(*(st[:-2] + st[-1:]))}
+        v = jax.tree.map(leaf, params_shapes, params_specs,
+                         is_leaf=lambda x: hasattr(x, "shape"))
+        return {"step": P(), "v": v}
+    raise ValueError(optimizer)

@@ -1,0 +1,109 @@
+"""Fused spatio-textual score + running top-k — LIST's query-phase hot loop.
+
+This is the op the paper's entire index exists to accelerate (Algorithm 1
+line 17): for each routed query, score every object in its cluster buffer
+with ST(q,o) = w_t·(q·o) + w_s·ŵ_s[⌊S_in·t⌋] and keep the top-k.
+
+TPU-native design (DESIGN.md §3/§4): the candidate buffer streams through
+VMEM in (block_n, d) tiles; each tile costs one (block_m × d × block_n)
+MXU matmul for TRel plus a vectorized O(1) step-table lookup for SRel
+(Eq. 5) — the spatial relevance never round-trips to HBM. A running top-k
+lives in the revisited output block: per tile we concatenate (k + block_n)
+candidates and re-top-k, so the merge cost is O(k+block_n · log) in VMEM.
+The workload is memory-bound (corpus streaming); fusing score + spatial +
+select into one pass is what reaches the HBM roofline.
+
+Grid: (B/block_m, N/block_n), last dim innermost (sequential) so output
+revisiting is legal on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, loc_ref, w_ref, wh_ref, ce_ref, cl_ref, ci_ref,
+            os_ref, oi_ref, *, k: int, t: int, dist_max: float,
+            block_n: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        os_ref[...] = jnp.full_like(os_ref, NEG_INF)
+        oi_ref[...] = jnp.full_like(oi_ref, -1)
+
+    q = q_ref[...].astype(jnp.float32)            # (bm, d)
+    ce = ce_ref[...].astype(jnp.float32)          # (bm, bn, d)
+    trel = jax.lax.dot_general(
+        q, ce, (((1,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)        # (bm, bn)
+
+    # spatial: s_in = 1 - clip(dist/dist_max); srel = w_hat[floor(s_in*t)]
+    dloc = loc_ref[...][:, None, :] - cl_ref[...]  # (bm, bn, 2)
+    dist = jnp.sqrt(jnp.sum(dloc * dloc, axis=-1))
+    s_in = 1.0 - jnp.clip(dist / dist_max, 0.0, 1.0)
+    idx = jnp.clip((s_in * t).astype(jnp.int32), 0, t - 1)
+    srel = jnp.take(wh_ref[...], idx)              # (bm, bn) O(1) lookup
+
+    w = w_ref[...].astype(jnp.float32)             # (bm, 2)
+    st = w[:, :1] * trel + w[:, 1:2] * srel
+    ids = ci_ref[...]                              # (bm, bn) object ids
+    st = jnp.where(ids >= 0, st, NEG_INF)          # mask buffer padding
+
+    # local candidate positions within the full N axis
+    local = j * block_n + jax.lax.broadcasted_iota(jnp.int32, st.shape, 1)
+
+    # merge with the running top-k held in the revisited output block
+    cat_s = jnp.concatenate([os_ref[...], st], axis=1)       # (bm, k+bn)
+    cat_i = jnp.concatenate([oi_ref[...], local], axis=1)
+    vals, pos = jax.lax.top_k(cat_s, k)
+    os_ref[...] = vals
+    oi_ref[...] = jnp.take_along_axis(cat_i, pos, axis=1)
+
+
+def fused_topk_score(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
+                     w_hat, *, k: int, dist_max: float,
+                     block_m: int = 8, block_n: int = 512,
+                     interpret: bool = True):
+    """Returns (scores (B, k) f32, local_idx (B, k) i32).
+
+    q_emb (B, d); q_loc (B, 2); w_st (B, 2); cand_emb (B, N, d);
+    cand_loc (B, N, 2); cand_ids (B, N) int32 (-1 pad); w_hat (t,) f32.
+    """
+    b, n, d = cand_emb.shape
+    t = w_hat.shape[0]
+    block_m = min(block_m, b)
+    block_n = min(block_n, n)
+    assert b % block_m == 0 and n % block_n == 0, (b, n, block_m, block_n)
+    grid = (b // block_m, n // block_n)
+
+    kern = functools.partial(_kernel, k=k, t=t, dist_max=float(dist_max),
+                             block_n=block_n)
+    out_shape = [
+        jax.ShapeDtypeStruct((b, k), jnp.float32),
+        jax.ShapeDtypeStruct((b, k), jnp.int32),
+    ]
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),       # q_emb
+            pl.BlockSpec((block_m, 2), lambda i, j: (i, 0)),       # q_loc
+            pl.BlockSpec((block_m, 2), lambda i, j: (i, 0)),       # w_st
+            pl.BlockSpec((t,), lambda i, j: (0,)),                 # w_hat
+            pl.BlockSpec((block_m, block_n, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_m, block_n, 2), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),       # scores
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),       # idx
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(q_emb, q_loc, w_st, w_hat, cand_emb, cand_loc, cand_ids)

@@ -1,0 +1,59 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``interpret=True`` (default on this CPU container) runs the kernel bodies in
+the Pallas interpreter for correctness validation; on a real TPU fleet the
+launcher flips ``interpret=False`` (env REPRO_PALLAS_COMPILE=1) and the same
+BlockSpecs compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels import (
+    dot_interaction as _di,
+    embedding_bag as _eb,
+    flash_attention as _fa,
+    fused_topk_score as _fts,
+)
+
+
+def _interpret_default() -> bool:
+    return os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "dist_max", "block_m",
+                                             "block_n", "interpret"))
+def fused_topk_score(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids, w_hat,
+                     *, k, dist_max, block_m=8, block_n=512, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _fts.fused_topk_score(
+        q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids, w_hat, k=k,
+        dist_max=dist_max, block_m=block_m, block_n=block_n,
+        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def dot_interaction(feats, *, block_m=128, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _di.dot_interaction(feats, block_m=block_m, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_v",
+                                             "interpret"))
+def embedding_bag(table, idx, *, block_m=256, block_v=512, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _eb.embedding_bag(table, idx, block_m=block_m, block_v=block_v,
+                             interpret=interpret)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_topk_score_ref(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
+                         w_hat, *, k: int, dist_max: float):
+    """Reference for kernels/fused_topk_score (== core/relevance scoring)."""
+    t = w_hat.shape[0]
+    trel = jnp.einsum("bd,bnd->bn", q_emb.astype(jnp.float32),
+                      cand_emb.astype(jnp.float32))
+    d = jnp.linalg.norm(q_loc[:, None].astype(jnp.float32)
+                        - cand_loc.astype(jnp.float32), axis=-1)
+    s_in = 1.0 - jnp.clip(d / dist_max, 0.0, 1.0)
+    idx = jnp.clip((s_in * t).astype(jnp.int32), 0, t - 1)
+    srel = jnp.take(w_hat, idx)
+    st = w_st[:, :1] * trel + w_st[:, 1:2] * srel
+    st = jnp.where(cand_ids >= 0, st, -1e30)
+    return jax.lax.top_k(st, k)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """Dense softmax attention with GQA, causal/window masks. fp32 math."""
+    b, sq, h, d = q.shape
+    _, sk, n_kv, _ = k.shape
+    g = h // n_kv
+    qg = q.reshape(b, sq, n_kv, g, d).astype(jnp.float32) / math.sqrt(d)
+    s = jnp.einsum("bqkgd,bjkd->bkgqj", qg, k.astype(jnp.float32))
+    pos_q = jnp.arange(sq)[:, None]
+    pos_k = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= pos_q >= pos_k
+    if window > 0:
+        mask &= (pos_q - pos_k) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqj,bjkd->bkgqd", p, v.astype(jnp.float32))
+    return jnp.moveaxis(o, 3, 1).reshape(b, sq, h, d).astype(q.dtype)
+
+
+def dot_interaction_ref(feats):
+    b, f, d = feats.shape
+    g = jnp.einsum("bfd,bgd->bfg", feats.astype(jnp.float32),
+                   feats.astype(jnp.float32))
+    iu, ju = jnp.triu_indices(f, k=1)
+    return g[:, iu, ju].astype(feats.dtype)
+
+
+def embedding_bag_ref(table, idx):
+    """idx: (B, P) int32, -1 pad → (B, d) pooled sums."""
+    safe = jnp.maximum(idx, 0)
+    rows = jnp.take(table, safe, axis=0)                   # (B, P, d)
+    rows = jnp.where((idx >= 0)[..., None], rows, 0.0)
+    return rows.sum(axis=1).astype(jnp.float32)

@@ -1,0 +1,133 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the
+production meshes, and record memory/cost/collective analysis for the
+roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+MUST be run as its own process (the XLA_FLAGS line above has to execute
+before jax initializes — hence its position as the first statement).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
+        --shape train_4k [--multi-pod] [--out results.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis import hlo_cost
+from repro.analysis import roofline as rl
+from repro.configs import arch_ids, get_config, get_shapes
+from repro.distributed import sharding as sh
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             verbose: bool = True) -> dict:
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_lib.mesh_chips(mesh)
+    t0 = time.time()
+    try:
+        plan = steps.plan_cell(arch, shape_name, mesh)
+        if plan.skip:
+            rec["status"] = "SKIP"
+            rec["reason"] = plan.skip
+            return rec
+        with mesh, sh.axis_rules(sh.rules_for_mesh(mesh)):
+            jfn = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                          out_shardings=plan.out_shardings)
+            lowered = jfn.lower(*plan.args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        text = compiled.as_text()
+        # first-principles walk with while-trip-count multipliers — XLA's
+        # cost_analysis visits scan bodies once (see analysis/hlo_cost.py)
+        hc = hlo_cost.analyze(text)
+        flops = hc["flops"]
+        nbytes = hc["bytes"]
+        coll = hc["coll"]
+        terms = rl.roofline_terms(flops, nbytes, coll)
+        rec.update({
+            "status": "OK",
+            "chips": chips,
+            "compile_s": round(time.time() - t0, 1),
+            "flops_per_chip": flops,
+            "bytes_per_chip": nbytes,
+            "collectives": {k: v for k, v in coll.items() if v},
+            "roofline": terms,
+            "xla_flops_once": float(cost.get("flops", 0.0)),
+            "xla_bytes_once": float(cost.get("bytes accessed", 0.0)),
+            "notes": plan.notes,
+        })
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                rec[attr] = int(v)
+        if verbose:
+            print(f"[{rec['mesh']}] {arch} × {shape_name}: OK  "
+                  f"flops/chip={flops:.3e}  bytes/chip={nbytes:.3e}  "
+                  f"coll={coll['total']:.3e}B  "
+                  f"bottleneck={terms['bottleneck']}  "
+                  f"({rec['compile_s']}s)")
+    except Exception as e:  # noqa: BLE001 — a failing cell is a result
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[{rec['mesh']}] {arch} × {shape_name}: FAIL {rec['error']}")
+    return rec
+
+
+def all_cells():
+    for arch in arch_ids():
+        for shape in get_shapes(arch):
+            yield arch, shape.name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    if args.all:
+        cells = list(all_cells())
+    else:
+        assert args.arch, "--arch or --all required"
+        if args.shape:
+            cells = [(args.arch, args.shape)]
+        else:
+            cells = [(args.arch, s.name) for s in get_shapes(args.arch)]
+    for arch, shape in cells:
+        for mp in meshes:
+            results.append(run_cell(arch, shape, multi_pod=mp))
+    ok = sum(r["status"] == "OK" for r in results)
+    skip = sum(r["status"] == "SKIP" for r in results)
+    fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"\n=== dry-run: {ok} OK, {skip} SKIP, {fail} FAIL "
+          f"of {len(results)} cells ===")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    return 0 if fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,38 @@
+"""Production meshes (TPU v5e pods).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — the dry-run sets XLA_FLAGS *before* the first jax call.
+
+single-pod : (16, 16)    axes ("data", "model")   — 256 chips
+multi-pod  : (2, 16, 16) axes ("pod", "data", "model") — 512 chips, the
+             "pod" axis is pure data parallelism across ICI-disjoint pods
+             (gradient all-reduce crosses DCN).
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) — used by analysis/roofline.
+PEAK_FLOPS_BF16 = 197e12         # FLOP/s
+HBM_BW = 819e9                   # bytes/s
+ICI_BW = 50e9                    # bytes/s per link (~per-chip usable)
+DCN_BW = 6.25e9                  # bytes/s per host NIC (50 Gb/s), pod axis
+HBM_PER_CHIP = 16 * 1024**3      # bytes
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke tests (same axis names, size 1)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_chips(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

@@ -1,0 +1,636 @@
+"""Step builders + input specs + shardings for every (arch × shape) cell.
+
+``plan_cell(arch_id, shape_name, mesh)`` returns a :class:`CellPlan` whose
+``fn`` is jit-able and whose ``args`` are ShapeDtypeStruct trees — the
+dry-run does ``jax.jit(fn, in_shardings=...).lower(*args).compile()`` and
+nothing ever allocates. The same builders power the real train/serve
+drivers (which pass concrete arrays instead).
+
+Sharding doctrine (DESIGN.md §5):
+  LM      params TP over "model" (heads/ffn/vocab/experts) + FSDP over dp;
+          batch over dp; KV caches (B→dp, T→model) for full-attention
+          layers (flash-decoding via GSPMD), ring buffers replicated on tp.
+  GNN     nodes/edges sharded over ALL axes (segment_sum → GSPMD psum).
+  RecSys  embedding tables row-sharded over "model", batch over dp,
+          candidate/item axes over "model".
+  LIST    cluster buffers cluster-major over ALL axes; query phase is
+          expert-style dispatch (core/serving.py); mining is a sharded
+          einsum + per-shard top-k merge.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base as cfg_base, get_config, get_shape
+from repro.core import index as index_lib
+from repro.core import pseudo_labels, relevance, serving
+from repro.core import spatial as sp_lib
+from repro.distributed import sharding as sh
+from repro.models import gnn as gnn_lib
+from repro.models import recsys as rs
+from repro.models import transformer as tf
+from repro.optim import clip_by_global_norm, make_optimizer
+
+SDS = jax.ShapeDtypeStruct
+
+
+def pad_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch_id: str
+    shape_name: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any = None          # None = let GSPMD decide
+    notes: str = ""
+    skip: Optional[str] = None
+
+
+# ---------------------------------------------------------------------------
+# Mesh helpers
+# ---------------------------------------------------------------------------
+
+
+def dp_axes(mesh):
+    return tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+
+
+def dp_size(mesh) -> int:
+    s = 1
+    for n in dp_axes(mesh):
+        s *= mesh.shape[n]
+    return s
+
+
+def tp_size(mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def all_axes(mesh):
+    return tuple(mesh.axis_names)
+
+
+def all_size(mesh) -> int:
+    s = 1
+    for n in mesh.axis_names:
+        s *= mesh.shape[n]
+    return s
+
+
+def _ns(mesh, *axes) -> NamedSharding:
+    return NamedSharding(mesh, P(*axes))
+
+
+def batch_sharding(mesh, b: int, extra: int = 0) -> NamedSharding:
+    dp = dp_axes(mesh)
+    lead = dp if (dp and b % dp_size(mesh) == 0) else None
+    return _ns(mesh, lead, *([None] * extra))
+
+
+def all_sharding(mesh, n: int, extra: int = 0) -> NamedSharding:
+    axes = all_axes(mesh)
+    lead = axes if n % all_size(mesh) == 0 else None
+    return _ns(mesh, lead, *([None] * extra))
+
+
+def _params_plan(mesh, params_shape, rules):
+    with sh.axis_rules(sh.rules_for_mesh(mesh)):
+        specs = sh.param_specs(params_shape, rules)
+    return specs, sh.named_shardings(mesh, specs)
+
+
+def _opt_plan(mesh, params_shape, pspecs, optimizer):
+    with sh.axis_rules(sh.rules_for_mesh(mesh)):
+        ospecs = sh.opt_state_specs(params_shape, pspecs, optimizer)
+    return sh.named_shardings(mesh, ospecs)
+
+
+def _train_step(loss_fn, cfg, *, lr=3e-4, clip=1.0):
+    opt_init, opt_update = make_optimizer(cfg.optimizer)
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch), has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        params, opt_state = opt_update(grads, opt_state, params, lr)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return step, opt_init
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+
+def _lm_params_shape(cfg):
+    return jax.eval_shape(lambda: tf.lm_init(jax.random.PRNGKey(0), cfg))
+
+
+def _cache_shardings(mesh, cache_shape, cfg, batch: int):
+    """KV caches: trailing dims (B, T, KV, HD). B→dp when divisible; T→model
+    for full-length buffers (flash-decoding); window ring buffers keep T
+    replicated (their in-place slot writes must stay local)."""
+    dp = dp_axes(mesh)
+    tpn = tp_size(mesh)
+
+    def leaf(x):
+        b_ax = dp if (dp and batch % dp_size(mesh) == 0) else None
+        t = x.shape[-3]
+        is_ring = cfg.window_size and t == cfg.window_size
+        t_ax = "model" if (not is_ring and tpn > 1 and t % tpn == 0) else None
+        lead = (None,) * (x.ndim - 4)
+        return _ns(mesh, *lead, b_ax, t_ax, None, None)
+
+    return jax.tree.map(leaf, cache_shape)
+
+
+def plan_lm(arch_id: str, shape, mesh) -> CellPlan:
+    cfg = get_config(arch_id)
+    dims = shape.dims
+    params_shape = _lm_params_shape(cfg)
+    pspecs, psh = _params_plan(mesh, params_shape, sh.LM_PARAM_RULES)
+
+    if shape.kind == "lm_train":
+        b, s = dims["global_batch"], dims["seq_len"]
+        step, opt_init = _train_step(
+            lambda p, batch: tf.lm_loss(p, batch, cfg), cfg)
+        opt_shape = jax.eval_shape(opt_init, params_shape)
+        osh = _opt_plan(mesh, params_shape, pspecs, cfg.optimizer)
+        batch = {"tokens": SDS((b, s + 1), jnp.int32)}
+        bsh = {"tokens": batch_sharding(mesh, b, extra=1)}
+        return CellPlan(arch_id, shape.name, step,
+                        (params_shape, opt_shape, batch), (psh, osh, bsh),
+                        out_shardings=(psh, osh, None))
+
+    if shape.kind == "lm_prefill":
+        b, s = dims["global_batch"], dims["seq_len"]
+
+        def prefill(params, tokens):
+            return tf.lm_prefill(params, tokens, cfg)
+
+        tok = SDS((b, s), jnp.int32)
+        cache_shape = jax.eval_shape(prefill, params_shape, tok)[1]
+        csh = _cache_shardings(mesh, cache_shape, cfg, b)
+        return CellPlan(arch_id, shape.name, prefill, (params_shape, tok),
+                        (psh, batch_sharding(mesh, b, extra=1)),
+                        out_shardings=(batch_sharding(mesh, b, extra=1), csh))
+
+    # lm_decode: one token against a seq_len cache
+    b, s = dims["global_batch"], dims["seq_len"]
+    if shape.skip:
+        return CellPlan(arch_id, shape.name, None, (), (), skip=shape.skip)
+
+    def decode(params, cache, token, pos):
+        return tf.lm_decode_step(params, cache, token, pos, cfg)
+
+    cache_shape = jax.eval_shape(
+        lambda: tf.make_decode_cache(cfg, b, s))
+    csh = _cache_shardings(mesh, cache_shape, cfg, b)
+    token = SDS((b, 1), jnp.int32)
+    pos = SDS((b,), jnp.int32)
+    return CellPlan(
+        arch_id, shape.name, decode,
+        (params_shape, cache_shape, token, pos),
+        (psh, csh, batch_sharding(mesh, b, extra=1),
+         batch_sharding(mesh, b)),
+        out_shardings=(batch_sharding(mesh, b, extra=1), csh))
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+
+def plan_gnn(arch_id: str, shape, mesh) -> CellPlan:
+    cfg = get_config(arch_id)
+    d = shape.dims
+    batched = d.get("batched", False)
+    sampled = d.get("sampled", False)
+    n_classes = d.get("n_classes", 2)
+    d_feat = d["d_feat"]
+
+    if batched:
+        n_graphs = d["batch"]
+        n_nodes = pad_up(d["n_nodes"] * n_graphs, 512)
+        n_edges = pad_up(d["n_edges"] * n_graphs, 512)
+    elif sampled:
+        seeds, (f1, f2) = d["batch_nodes"], d["fanout"]
+        n_nodes = pad_up(seeds * (1 + f1 + f1 * f2) // 1, 512)
+        n_edges = pad_up(seeds * f1 + seeds * f1 * f2, 512)
+    else:
+        n_nodes = pad_up(d["n_nodes"], 512)
+        n_edges = pad_up(d["n_edges"], 512)
+
+    params_shape = jax.eval_shape(
+        lambda: gnn_lib.gnn_init(jax.random.PRNGKey(0), cfg, d_feat,
+                                 n_classes, d_edge_in=4 if batched else 0))
+    pspecs, psh = _params_plan(mesh, params_shape, sh.GNN_PARAM_RULES)
+    step, opt_init = _train_step(
+        lambda p, g: gnn_lib.gnn_loss(p, g, cfg), cfg)
+    opt_shape = jax.eval_shape(opt_init, params_shape)
+    osh = _opt_plan(mesh, params_shape, pspecs, cfg.optimizer)
+
+    graph = {
+        "x": SDS((n_nodes, d_feat), jnp.float32),
+        "edge_src": SDS((n_edges,), jnp.int32),
+        "edge_dst": SDS((n_edges,), jnp.int32),
+        "edge_attr": SDS((n_edges, 4), jnp.float32) if batched else None,
+        "node_mask": SDS((n_nodes,), jnp.bool_),
+        "edge_mask": SDS((n_edges,), jnp.bool_),
+    }
+    gsh = {
+        "x": all_sharding(mesh, n_nodes, extra=1),
+        "edge_src": all_sharding(mesh, n_edges),
+        "edge_dst": all_sharding(mesh, n_edges),
+        "edge_attr": all_sharding(mesh, n_edges, extra=1) if batched else None,
+        "node_mask": all_sharding(mesh, n_nodes),
+        "edge_mask": all_sharding(mesh, n_edges),
+    }
+    if batched:
+        n_graphs_p = pad_up(n_graphs, 512)
+        graph.update({
+            "graph_ids": SDS((n_nodes,), jnp.int32),
+            "n_graphs": n_graphs_p,
+            "labels": SDS((n_graphs_p,), jnp.float32),
+            "label_mask": SDS((n_graphs_p,), jnp.float32),
+        })
+        gsh.update({
+            "graph_ids": all_sharding(mesh, n_nodes),
+            "n_graphs": None,
+            "labels": all_sharding(mesh, n_graphs_p),
+            "label_mask": all_sharding(mesh, n_graphs_p),
+        })
+        # n_graphs is static — close over it instead of passing an int arg
+        def step_b(params, opt_state, g):
+            g = dict(g)
+            g["n_graphs"] = n_graphs_p
+            return step(params, opt_state, g)
+        fn = step_b
+        graph.pop("n_graphs")
+        gsh.pop("n_graphs")
+    else:
+        graph.update({
+            "labels": SDS((n_nodes,), jnp.int32),
+            "label_mask": SDS((n_nodes,), jnp.float32),
+        })
+        gsh.update({
+            "labels": all_sharding(mesh, n_nodes),
+            "label_mask": all_sharding(mesh, n_nodes),
+        })
+        fn = step
+
+    return CellPlan(arch_id, shape.name, fn,
+                    (params_shape, opt_shape, graph), (psh, osh, gsh),
+                    out_shardings=(psh, osh, None))
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+
+def _chunked_item_topk(score_chunk, n_items: int, chunk: int, k: int,
+                       batch: int):
+    """Running top-k over item chunks (keeps the (B, V) logits virtual)."""
+    n_chunks = n_items // chunk
+
+    def body(carry, ci):
+        best_v, best_i = carry
+        s = score_chunk(ci)                                   # (B, chunk)
+        ids = ci * chunk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        cat_v = jnp.concatenate([best_v, s], axis=1)
+        cat_i = jnp.concatenate([best_i, ids], axis=1)
+        v, pos = jax.lax.top_k(cat_v, k)
+        return (v, jnp.take_along_axis(cat_i, pos, axis=1)), None
+
+    init = (jnp.full((batch, k), -jnp.inf, jnp.float32),
+            jnp.full((batch, k), -1, jnp.int32))
+    (v, i), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    return v, i
+
+
+def plan_recsys(arch_id: str, shape, mesh) -> CellPlan:
+    cfg = get_config(arch_id)
+    d = shape.dims
+    model = cfg.model
+
+    if model == "dlrm":
+        init_fn = lambda: rs.dlrm_init(jax.random.PRNGKey(0), cfg)
+        loss_fn = lambda p, b: rs.dlrm_loss(p, b, cfg)
+        fwd = lambda p, b: rs.dlrm_forward(p, b["dense"], b["sparse"], cfg)
+
+        def batch_specs(b):
+            return ({"dense": SDS((b, cfg.n_dense), jnp.float32),
+                     "sparse": SDS((b, cfg.n_sparse), jnp.int32),
+                     "label": SDS((b,), jnp.float32)},
+                    {"dense": batch_sharding(mesh, b, extra=1),
+                     "sparse": batch_sharding(mesh, b, extra=1),
+                     "label": batch_sharding(mesh, b)})
+    elif model == "xdeepfm":
+        init_fn = lambda: rs.xdeepfm_init(jax.random.PRNGKey(0), cfg)
+        loss_fn = lambda p, b: rs.xdeepfm_loss(p, b, cfg)
+        fwd = lambda p, b: rs.xdeepfm_forward(p, b["sparse"], cfg)
+
+        def batch_specs(b):
+            return ({"sparse": SDS((b, cfg.n_sparse), jnp.int32),
+                     "label": SDS((b,), jnp.float32)},
+                    {"sparse": batch_sharding(mesh, b, extra=1),
+                     "label": batch_sharding(mesh, b)})
+    elif model == "bert4rec":
+        init_fn = lambda: rs.bert4rec_init(jax.random.PRNGKey(0), cfg)
+        loss_fn = lambda p, b: rs.bert4rec_loss(p, b, cfg)
+        fwd = None
+
+        def batch_specs(b):
+            L, Pm = cfg.seq_len, 20
+            return ({"seq": SDS((b, L), jnp.int32),
+                     "mask": SDS((b, L), jnp.bool_),
+                     "mlm_pos": SDS((b, Pm), jnp.int32),
+                     "mlm_tgt": SDS((b, Pm), jnp.int32),
+                     "mlm_mask": SDS((b, Pm), jnp.float32)},
+                    {k: batch_sharding(mesh, b, extra=1)
+                     for k in ("seq", "mask", "mlm_pos", "mlm_tgt",
+                               "mlm_mask")})
+    elif model == "mind":
+        init_fn = lambda: rs.mind_init(jax.random.PRNGKey(0), cfg)
+        loss_fn = lambda p, b: rs.mind_loss(p, b, cfg)
+        fwd = None
+
+        def batch_specs(b):
+            return ({"hist": SDS((b, cfg.hist_len), jnp.int32),
+                     "hist_mask": SDS((b, cfg.hist_len), jnp.bool_),
+                     "target": SDS((b,), jnp.int32)},
+                    {"hist": batch_sharding(mesh, b, extra=1),
+                     "hist_mask": batch_sharding(mesh, b, extra=1),
+                     "target": batch_sharding(mesh, b)})
+    else:
+        raise ValueError(model)
+
+    params_shape = jax.eval_shape(init_fn)
+    pspecs, psh = _params_plan(mesh, params_shape, sh.REC_PARAM_RULES)
+
+    if shape.kind == "rec_train":
+        b = d["batch"]
+        step, opt_init = _train_step(loss_fn, cfg)
+        opt_shape = jax.eval_shape(opt_init, params_shape)
+        osh = _opt_plan(mesh, params_shape, pspecs, cfg.optimizer)
+        batch, bsh = batch_specs(b)
+        return CellPlan(arch_id, shape.name, step,
+                        (params_shape, opt_shape, batch), (psh, osh, bsh),
+                        out_shardings=(psh, osh, None))
+
+    if shape.kind == "rec_serve":
+        b = d["batch"]
+        if model in ("dlrm", "xdeepfm"):
+            def serve(params, batch):
+                return fwd(params, batch)
+            batch, bsh = batch_specs(b)
+            batch.pop("label")
+            bsh.pop("label")
+            return CellPlan(arch_id, shape.name, serve,
+                            (params_shape, batch), (psh, bsh))
+        # bert4rec / mind: user embedding + chunked top-k over all items
+        chunk = 65536
+        rows = params_shape["item_embed"].shape[0]
+        n_items = pad_up(rows, chunk)
+        k = 100
+
+        def _padded_table(params):
+            emb = params["item_embed"]
+            return jnp.pad(emb, ((0, n_items - emb.shape[0]), (0, 0)))
+
+        if model == "bert4rec":
+            def serve(params, batch):
+                u = rs.bert4rec_user_embedding(params, batch["seq"],
+                                               batch["mask"], cfg)
+                emb = _padded_table(params)
+
+                def score_chunk(ci):
+                    rows_ = jax.lax.dynamic_slice_in_dim(
+                        emb, ci * chunk, chunk, axis=0)
+                    return (u @ rows_.T.astype(u.dtype)).astype(jnp.float32)
+
+                return _chunked_item_topk(score_chunk, n_items, chunk, k, b)
+            batch, bsh = batch_specs(b)
+            for key in ("mlm_pos", "mlm_tgt", "mlm_mask"):
+                batch.pop(key)
+                bsh.pop(key)
+        else:
+            def serve(params, batch):
+                u = rs.mind_interests(params, batch["hist"],
+                                      batch["hist_mask"], cfg)   # (B, K, d)
+                emb = _padded_table(params)
+
+                def score_chunk(ci):
+                    rows_ = jax.lax.dynamic_slice_in_dim(
+                        emb, ci * chunk, chunk, axis=0)
+                    s = jnp.einsum("bkd,cd->bkc", u, rows_.astype(u.dtype))
+                    return s.max(axis=1).astype(jnp.float32)
+
+                return _chunked_item_topk(score_chunk, n_items, chunk, k, b)
+            batch, bsh = batch_specs(b)
+            batch.pop("target")
+            bsh.pop("target")
+        return CellPlan(arch_id, shape.name, serve,
+                        (params_shape, batch), (psh, bsh))
+
+    # retrieval: 1 query (or user) vs n_candidates
+    nc = pad_up(d["n_candidates"], all_size(mesh))
+    k = 100
+    if model in ("dlrm", "xdeepfm"):
+        # CTR rankers score candidate ITEMS pointwise for one user context —
+        # LIST-style retrieval is inapplicable (DESIGN.md §7): they act as
+        # re-rankers; this cell is the bulk pointwise scoring of 1M pairs.
+        def serve(params, batch):
+            logits = fwd(params, batch)
+            return jax.lax.top_k(logits, k)
+        if model == "dlrm":
+            batch = {"dense": SDS((nc, cfg.n_dense), jnp.float32),
+                     "sparse": SDS((nc, cfg.n_sparse), jnp.int32)}
+            bsh = {"dense": all_sharding(mesh, nc, extra=1),
+                   "sparse": all_sharding(mesh, nc, extra=1)}
+        else:
+            batch = {"sparse": SDS((nc, cfg.n_sparse), jnp.int32)}
+            bsh = {"sparse": all_sharding(mesh, nc, extra=1)}
+        return CellPlan(arch_id, shape.name, serve,
+                        (params_shape, batch), (psh, bsh),
+                        notes="pointwise CTR scoring (LIST inapplicable)")
+
+    b = d["batch"]
+    cand = SDS((nc,), jnp.int32)
+    csh = all_sharding(mesh, nc)
+    if model == "mind":
+        def serve(params, hist, hist_mask, cand_ids):
+            s = rs.mind_score_candidates(params, hist, hist_mask, cand_ids,
+                                         cfg)
+            return jax.lax.top_k(s, k)
+        args = (params_shape, SDS((b, cfg.hist_len), jnp.int32),
+                SDS((b, cfg.hist_len), jnp.bool_), cand)
+        insh = (psh, _ns(mesh, None, None), _ns(mesh, None, None), csh)
+    else:  # bert4rec
+        def serve(params, seq, mask, cand_ids):
+            u = rs.bert4rec_user_embedding(params, seq, mask, cfg)
+            ce = rs.embedding_lookup(params["item_embed"], cand_ids)
+            s = (u @ ce.T.astype(u.dtype)).astype(jnp.float32)
+            return jax.lax.top_k(s, k)
+        args = (params_shape, SDS((b, cfg.seq_len), jnp.int32),
+                SDS((b, cfg.seq_len), jnp.bool_), cand)
+        insh = (psh, _ns(mesh, None, None), _ns(mesh, None, None), csh)
+    return CellPlan(arch_id, shape.name, serve, args, insh)
+
+
+# ---------------------------------------------------------------------------
+# Dual encoder (the paper's own architecture)
+# ---------------------------------------------------------------------------
+
+
+def _de_params_shape(cfg):
+    return jax.eval_shape(
+        lambda: relevance.relevance_init(jax.random.PRNGKey(0), cfg))
+
+
+def plan_dual_encoder(arch_id: str, shape, mesh) -> CellPlan:
+    cfg = get_config(arch_id)
+    d = shape.dims
+    params_shape = _de_params_shape(cfg)
+    pspecs, psh = _params_plan(mesh, params_shape, sh.LM_PARAM_RULES)
+
+    if shape.kind == "de_train":
+        b, L, nneg = d["global_batch"], d["max_len"], d["hard_negs"]
+        step, opt_init = _train_step(
+            lambda p, batch: relevance.contrastive_loss(p, batch, cfg), cfg)
+        opt_shape = jax.eval_shape(opt_init, params_shape)
+        osh = _opt_plan(mesh, params_shape, pspecs, cfg.optimizer)
+        batch = {
+            "q_tokens": SDS((b, L), jnp.int32),
+            "q_mask": SDS((b, L), jnp.bool_),
+            "q_loc": SDS((b, 2), jnp.float32),
+            "pos_tokens": SDS((b, L), jnp.int32),
+            "pos_mask": SDS((b, L), jnp.bool_),
+            "pos_loc": SDS((b, 2), jnp.float32),
+            "neg_tokens": SDS((b, nneg, L), jnp.int32),
+            "neg_mask": SDS((b, nneg, L), jnp.bool_),
+            "neg_loc": SDS((b, nneg, 2), jnp.float32),
+        }
+        bsh = {k: batch_sharding(mesh, b, extra=v.ndim - 1)
+               for k, v in batch.items()}
+        return CellPlan(arch_id, shape.name, step,
+                        (params_shape, opt_shape, batch), (psh, osh, bsh),
+                        out_shardings=(psh, osh, None))
+
+    if shape.kind == "de_encode":
+        b, L = d["global_batch"], d["max_len"]
+
+        def encode(params, tokens, mask):
+            return relevance.encode_objects(params, tokens, mask, cfg)
+
+        return CellPlan(
+            arch_id, shape.name, encode,
+            (params_shape, SDS((b, L), jnp.int32), SDS((b, L), jnp.bool_)),
+            (psh, batch_sharding(mesh, b, extra=1),
+             batch_sharding(mesh, b, extra=1)))
+
+    if shape.kind == "list_serve":
+        b = d["query_batch"]
+        n_obj, c_real = d["n_objects"], d["n_clusters"]
+        k = d["topk"]
+        L = cfg.max_len
+        dm = cfg.d_model
+        c = pad_up(c_real, all_size(mesh))          # padded cluster count
+        cap = pad_up(int(n_obj / c_real * 1.5), 128)
+        qcap = serving.query_capacity(b, c_real, cfg.cluster_route)
+        index_shape = jax.eval_shape(
+            lambda: index_lib.index_init(jax.random.PRNGKey(0), dm, c,
+                                         hidden=cfg.index_mlp_hidden))
+        _, ish = _params_plan(mesh, index_shape, ((r".*", (None,)),))
+        norm_shape = {"lo": SDS((2,), jnp.float32),
+                      "span": SDS((2,), jnp.float32)}
+
+        def serve(params, iparams, w_hat, norm, buf_emb, buf_loc, buf_ids,
+                  q_tokens, q_mask, q_loc):
+            return serving.cluster_dispatch_query(
+                params, iparams, w_hat, norm, buf_emb, buf_loc, buf_ids,
+                q_tokens, q_mask, q_loc, cfg, k=k, cr=cfg.cluster_route,
+                dist_max=1.4142, capacity=qcap)
+
+        # §Perf LIST iteration: the 110M dual encoder is tiny next to the
+        # 256-chip mesh — TP-serving it spends 2/3 of the wire on encoder
+        # activation all-reduces. Serve it PURE-DP instead: params fully
+        # replicated, query batch sharded over ALL axes; only the cluster
+        # dispatch (q payloads, MBs) and the top-k merge touch the network.
+        rep_rules = ((r".*", (None,)),)
+        _, psh_rep = _params_plan(mesh, params_shape, rep_rules)
+        args = (params_shape, index_shape, SDS((cfg.spatial_t,), jnp.float32),
+                norm_shape,
+                SDS((c, cap, dm), jnp.float32), SDS((c, cap, 2), jnp.float32),
+                SDS((c, cap), jnp.int32),
+                SDS((b, L), jnp.int32), SDS((b, L), jnp.bool_),
+                SDS((b, 2), jnp.float32))
+        insh = (psh_rep, ish, _ns(mesh, None), {"lo": _ns(mesh, None),
+                                                "span": _ns(mesh, None)},
+                all_sharding(mesh, c, extra=2), all_sharding(mesh, c, extra=2),
+                all_sharding(mesh, c, extra=1),
+                all_sharding(mesh, b, extra=1),
+                all_sharding(mesh, b, extra=1),
+                all_sharding(mesh, b, extra=1))
+        return CellPlan(arch_id, shape.name, serve, args, insh,
+                        notes=f"c={c} cap={cap} qcap={qcap} dp-encoder")
+
+    if shape.kind == "list_mine":
+        b = d["query_batch"]
+        n_obj = pad_up(d["n_objects"], all_size(mesh))
+        ns_, ne_ = d["neg_start"], d["neg_end"]
+        dm = cfg.d_model
+        shards = all_size(mesh)
+
+        def mine(params, q_emb, q_loc, obj_emb, obj_loc):
+            return pseudo_labels.mine_negatives_dense(
+                params, cfg, q_emb, q_loc, obj_emb, obj_loc,
+                neg_start=ns_, neg_end=ne_, dist_max=1.4142, shards=shards)
+
+        args = (params_shape, SDS((b, dm), jnp.float32),
+                SDS((b, 2), jnp.float32), SDS((n_obj, dm), jnp.float32),
+                SDS((n_obj, 2), jnp.float32))
+        insh = (psh, batch_sharding(mesh, b, extra=1),
+                batch_sharding(mesh, b, extra=1),
+                all_sharding(mesh, n_obj, extra=1),
+                all_sharding(mesh, n_obj, extra=1))
+        return CellPlan(arch_id, shape.name, mine, args, insh)
+
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+
+def plan_cell(arch_id: str, shape_name: str, mesh) -> CellPlan:
+    cfg = get_config(arch_id)
+    shape = get_shape(arch_id, shape_name)
+    if shape.skip:
+        return CellPlan(arch_id, shape_name, None, (), (), skip=shape.skip)
+    fam = cfg.family
+    if fam == "lm":
+        return plan_lm(arch_id, shape, mesh)
+    if fam == "gnn":
+        return plan_gnn(arch_id, shape, mesh)
+    if fam == "recsys":
+        return plan_recsys(arch_id, shape, mesh)
+    if fam == "dual_encoder":
+        return plan_dual_encoder(arch_id, shape, mesh)
+    raise ValueError(fam)

@@ -1,0 +1,188 @@
+"""Production training driver.
+
+One driver for every family: picks the per-arch step builder from
+launch/steps.py, feeds it the deterministic synthetic streams, and wires in
+the fleet substrate — checkpoint/auto-resume, straggler monitoring,
+microbatch accumulation, optional int8 gradient compression.
+
+On this CPU container it runs REDUCED configs end-to-end (``--reduced``,
+the default); on a fleet the same driver runs the full configs under the
+production mesh (``--mesh single|multi``).
+
+Examples:
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+        --steps 50 --batch 8 --seq-len 128 --ckpt-dir /tmp/ck
+    PYTHONPATH=src python -m repro.launch.train --arch gatedgcn --steps 20
+    PYTHONPATH=src python -m repro.launch.train --arch dlrm-mlperf --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, reduced
+from repro.data import (
+    CTRStream,
+    LMStream,
+    SeqRecStream,
+    community_graph,
+    molecule_batch,
+)
+from repro.distributed.resilience import StragglerMonitor, watchdog_step
+from repro.models import gnn as gnn_lib
+from repro.models import recsys as rs
+from repro.models import transformer as tf
+from repro.optim import clip_by_global_norm, make_optimizer
+
+
+def _train_fns(cfg, args):
+    """Returns (init_fn, loss_fn, batch_fn(step) -> pytree of np arrays)."""
+    fam = cfg.family
+    if fam == "lm":
+        stream = LMStream(cfg.vocab_size, seed=args.seed)
+        return (lambda k: tf.lm_init(k, cfg),
+                lambda p, b: tf.lm_loss(p, b, cfg),
+                lambda s: stream.batch(s, args.batch, args.seq_len))
+    if fam == "gnn":
+        if args.gnn_shape == "molecule":
+            g0 = molecule_batch(args.batch, 30, 64, 16, seed=args.seed)
+            d_in, n_cls, d_e = 16, 1, 4
+        else:
+            g0 = community_graph(2708, 10556, 64, 7, seed=args.seed)
+            d_in, n_cls, d_e = 64, 7, 0
+        return (lambda k: gnn_lib.gnn_init(k, cfg, d_in, n_cls, d_edge_in=d_e),
+                lambda p, b: gnn_lib.gnn_loss(p, b, cfg),
+                lambda s: g0)
+    if fam == "recsys":
+        if cfg.model == "dlrm":
+            stream = CTRStream(cfg.n_dense, cfg.table_sizes, seed=args.seed)
+            return (lambda k: rs.dlrm_init(k, cfg),
+                    lambda p, b: rs.dlrm_loss(p, b, cfg),
+                    lambda s: stream.batch(s, args.batch))
+        if cfg.model == "xdeepfm":
+            stream = CTRStream(1, [cfg.vocab_per_field] * cfg.n_sparse,
+                               seed=args.seed)
+            def xb(s):
+                b = stream.batch(s, args.batch)
+                return {"sparse": b["sparse"], "label": b["label"]}
+            return (lambda k: rs.xdeepfm_init(k, cfg),
+                    lambda p, b: rs.xdeepfm_loss(p, b, cfg), xb)
+        if cfg.model == "bert4rec":
+            stream = SeqRecStream(cfg.n_items, seed=args.seed)
+            return (lambda k: rs.bert4rec_init(k, cfg),
+                    lambda p, b: rs.bert4rec_loss(p, b, cfg),
+                    lambda s: stream.bert4rec_batch(
+                        s, args.batch, cfg.seq_len, cfg.mask_prob))
+        if cfg.model == "mind":
+            stream = SeqRecStream(cfg.n_items, seed=args.seed)
+            return (lambda k: rs.mind_init(k, cfg),
+                    lambda p, b: rs.mind_loss(p, b, cfg),
+                    lambda s: stream.mind_batch(s, args.batch, cfg.hist_len))
+    raise ValueError(f"use examples/train_list.py for {fam}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--microbatch", type=int, default=1,
+                    help="gradient accumulation factor")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--gnn-shape", default="full_graph_sm")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    init_fn, loss_fn, batch_fn = _train_fns(cfg, args)
+    opt_init, opt_update = make_optimizer(cfg.optimizer)
+
+    def fresh():
+        params = init_fn(jax.random.PRNGKey(args.seed))
+        return {"params": params, "opt": opt_init(params)}
+
+    mgr = None
+    start_step = 0
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, every=args.ckpt_every)
+        state, start_step, _ = mgr.restore_or_init(fresh)
+        if start_step:
+            print(f"resumed from step {start_step}")
+    else:
+        state = fresh()
+
+    @jax.jit
+    def step_fn(state, batch):
+        def micro_loss(p, mb):
+            return loss_fn(p, mb)
+
+        if args.microbatch > 1:
+            def split(x):
+                return x.reshape((args.microbatch, -1) + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(
+                    micro_loss, has_aux=True)(state["params"], mb)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), m
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state["params"])
+            (grads, ltot), ms = jax.lax.scan(acc_body, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / args.microbatch, grads)
+            loss = ltot / args.microbatch
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                micro_loss, has_aux=True)(state["params"], batch)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt = opt_update(grads, state["opt"], state["params"],
+                                 args.lr)
+        metrics = dict(metrics)
+        metrics.update({"loss": loss, "grad_norm": gnorm})
+        return {"params": params, "opt": opt}, metrics
+
+    monitor = StragglerMonitor()
+    host = "host0"
+    losses = []
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in batch_fn(step).items()
+                 if v is not None}
+        (state, metrics), dt = watchdog_step(step_fn, state, batch,
+                                             deadline_s=600.0)
+        monitor.record(host, dt)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step}: loss={loss:.4f} "
+                  f"grad_norm={float(metrics['grad_norm']):.3f} "
+                  f"({dt*1000:.0f} ms)"
+                  + (f" stragglers={monitor.flagged()}"
+                     if monitor.flagged() else ""))
+        if mgr:
+            mgr.maybe_save(step + 1, state,
+                           meta={"arch": args.arch, "loss": loss})
+    if mgr:
+        mgr.maybe_save(args.steps, state, force=True,
+                       meta={"arch": args.arch, "final": True})
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    print(f"done: loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,282 @@
+"""Shared neural-net building blocks (functional, pytree params).
+
+Everything is pure JAX: ``*_init(key, ...) -> params`` and stateless apply
+functions. No framework dependency so the same code paths run under
+``jax.eval_shape`` for the dry-run and eagerly for smoke tests.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Initializers / dense
+# ---------------------------------------------------------------------------
+
+
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def dense_init(key, in_dim, out_dim, *, bias=False, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    p = {"w": _normal(key, (in_dim, out_dim), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def mlp_init(key, dims, *, bias=True, dtype=jnp.float32):
+    """Plain MLP: dims = (in, h1, ..., out)."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return [dense_init(k, dims[i], dims[i + 1], bias=bias, dtype=dtype)
+            for i, k in enumerate(keys)]
+
+
+def mlp_apply(params, x, *, act=jax.nn.relu, final_act=None):
+    for i, p in enumerate(params):
+        x = dense(p, x)
+        if i < len(params) - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(dim, *, kind="rms", dtype=jnp.float32):
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if kind == "layer":
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def apply_norm(p, x, *, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        # mean-square via a contraction: no (..., d) f32 square tensor is
+        # materialized at any fusion boundary (§Perf gemma iteration 2)
+        d = x32.shape[-1]
+        ms = jnp.einsum("...d,...d->...", x32, x32)[..., None] / d
+        y = x32 * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, *, theta=10_000.0):
+    """Rotary embedding. x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq          # (..., S, half)
+    ang = ang[..., None, :]                                        # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention — full-sequence (train / prefill), chunked online softmax.
+# q: (B, S, H, D); k, v: (B, S, KV, D). H = KV * G (grouped-query).
+# Pure-jnp oracle path; the Pallas flash kernel (kernels/flash_attention.py)
+# implements the same contract for TPU.
+# ---------------------------------------------------------------------------
+
+_NEG_INF = -1e30
+
+
+def _split_groups(q, n_kv):
+    b, s, h, d = q.shape
+    g = h // n_kv
+    return q.reshape(b, s, n_kv, g, d)
+
+
+def attention_full(q, k, v, *, causal=True, window=0, chunk=1024,
+                   positions_q=None, positions_k=None):
+    """Chunked online-softmax attention (memory O(S·chunk) not O(S²)).
+
+    window > 0 limits attention to the last `window` positions (inclusive of
+    self): pos_q - pos_k < window. Causal is required when window is set.
+    """
+    b, sq, h, d = q.shape
+    _, sk, n_kv, _ = k.shape
+    g = h // n_kv
+    scale = 1.0 / math.sqrt(d)
+    if positions_q is None:
+        positions_q = jnp.arange(sq)
+    if positions_k is None:
+        positions_k = jnp.arange(sk)
+
+    qg = _split_groups(q, n_kv).astype(jnp.float32) * scale  # (B,Sq,KV,G,D)
+    chunk = min(chunk, sk)
+    if sk % chunk:  # pad keys to a chunk multiple; padded slots masked out
+        pad = chunk - sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        positions_k = jnp.pad(positions_k, (0, pad),
+                              constant_values=jnp.iinfo(jnp.int32).max)
+        sk = sk + pad
+    n_chunks = sk // chunk
+    k_ch = k.reshape(b, n_chunks, chunk, n_kv, d)
+    v_ch = v.reshape(b, n_chunks, chunk, n_kv, d)
+    pk_ch = positions_k.reshape(n_chunks, chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, pk = xs  # (B,chunk,KV,D), (B,chunk,KV,D), (chunk,)
+        s = jnp.einsum("bqkgd,bjkd->bkgqj", qg, kc.astype(jnp.float32))
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= positions_q[:, None] >= pk[None, :]
+        if window:
+            mask &= (positions_q[:, None] - pk[None, :]) < window
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqj,bjkd->bkgqd", p, vc.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, n_kv, g, sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, n_kv, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(k_ch, 1, 0), jnp.moveaxis(v_ch, 1, 0), pk_ch))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,KV,G,Sq,D)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def attention_local_banded(q, k, v, *, window, block=None):
+    """Sliding-window attention via banded blocks: O(S·2W) compute/memory.
+
+    Each q block of size W attends to [own block, previous block] with an
+    exact band mask — equivalent to window-limited causal attention when
+    block >= window.
+    """
+    b, s, h, d = q.shape
+    _, _, n_kv, _ = k.shape
+    g = h // n_kv
+    block = block or window
+    assert block >= window and s % block == 0
+    nb = s // block
+    scale = 1.0 / math.sqrt(d)
+
+    qb = q.reshape(b, nb, block, n_kv, g, d).astype(jnp.float32) * scale
+    kb = k.reshape(b, nb, block, n_kv, d)
+    vb = v.reshape(b, nb, block, n_kv, d)
+    # kv pair = (previous block, own block); previous of block 0 is zeros
+    pad = jnp.zeros_like(kb[:, :1])
+    k2 = jnp.concatenate([jnp.concatenate([pad, kb[:, :-1]], 1), kb], axis=2)
+    v2 = jnp.concatenate([jnp.concatenate([pad, vb[:, :-1]], 1), vb], axis=2)
+    s_ = jnp.einsum("bnqkgd,bnjkd->bnkgqj", qb, k2.astype(jnp.float32))
+    # positions within the 2-block window
+    pos_q = jnp.arange(block)[:, None] + block       # local index in [block,2b)
+    pos_k = jnp.arange(2 * block)[None, :]
+    mask = (pos_q >= pos_k) & (pos_q - pos_k < window)
+    first = jnp.arange(nb) == 0                      # block 0 has no prev
+    mask_first = mask & (pos_k >= block)
+    full_mask = jnp.where(first[:, None, None], mask_first[None], mask[None])
+    s_ = jnp.where(full_mask[None, :, None, None], s_, _NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bnkgqj,bnjkd->bnkgqd", p, v2.astype(jnp.float32))
+    o = jnp.moveaxis(o, (1, 4), (1, 2)).reshape(b, s, h, d)
+    return o.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0, ring=False):
+    """Single-token decode against a (possibly ring-buffer) KV cache.
+
+    q: (B, 1, H, D); caches: (B, T, KV, D); pos: (B,) current absolute
+    position (the new token's position). ring=True means cache slot
+    j holds absolute position p ≡ j (mod T) with p in (pos-T, pos].
+    """
+    b, _, h, d = q.shape
+    _, t, n_kv, _ = k_cache.shape
+    g = h // n_kv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, n_kv, g, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bjkd->bkgj", qg, k_cache.astype(jnp.float32))
+    slot = jnp.arange(t)[None, :]                    # (1, T)
+    p = pos[:, None]
+    if ring:
+        # absolute position held by slot j
+        abs_pos = p - ((p - slot) % t)
+        valid = abs_pos >= 0
+        if window:
+            valid &= (p - abs_pos) < window
+    else:
+        valid = slot <= p
+        if window:
+            valid &= (p - slot) < window
+    s = jnp.where(valid[:, None, None, :], s, _NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgj,bjkd->bkgd", w, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def chunked_softmax_xent(x, unembed, targets, *, chunk=512, mask=None):
+    """Cross-entropy over a large vocab, computed in sequence chunks so the
+    (B, S, V) logits tensor is never materialized whole.
+
+    x: (B, S, d) final hidden states; unembed: (d, V); targets: (B, S) int32.
+    Returns mean loss over (masked) tokens.
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    n = s // chunk
+    xc = x.reshape(b, n, chunk, d)
+    tc = targets.reshape(b, n, chunk)
+    mc = (mask.reshape(b, n, chunk) if mask is not None
+          else jnp.ones((b, n, chunk), bool))
+
+    def body(carry, xs):
+        tot, cnt = carry
+        xi, ti, mi = xs  # (B,chunk,d), (B,chunk), (B,chunk)
+        logits = (xi @ unembed.astype(xi.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ti[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mi
+        return (tot + nll.sum(), cnt + mi.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.float32(0)),
+        (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(tc, 1, 0),
+         jnp.moveaxis(mc, 1, 0).astype(jnp.float32)))
+    return tot / jnp.maximum(cnt, 1.0)

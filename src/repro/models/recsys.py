@@ -1,0 +1,316 @@
+"""RecSys model zoo: DLRM, xDeepFM, BERT4Rec, MIND.
+
+The shared hot path is the sparse embedding lookup. JAX has no native
+EmbeddingBag — we build it from ``jnp.take`` + ``jax.ops.segment_sum``
+(``embedding_bag`` below; Pallas-tiled variant in kernels/). Big tables are
+row-sharded over the "model"/"tp" axis (model-parallel embeddings); batches
+ride the "dp" axes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers
+
+
+# ---------------------------------------------------------------------------
+# Embedding primitives
+# ---------------------------------------------------------------------------
+
+
+def pad_rows(v: int, m: int = 512) -> int:
+    """Round table row counts up to a multiple of ``m`` so row-sharding over
+    the model axis always divides (configs keep the published sizes; the
+    padding rows are dead weight, ≤0.05% for the large tables)."""
+    return -(-v // m) * m
+
+
+def embedding_lookup(table, idx):
+    """table: (V, d); idx: int32 (...,) → (..., d)."""
+    return jnp.take(table, idx, axis=0)
+
+
+def embedding_bag(table, idx, offsets=None, *, segment_ids=None, n_bags=None,
+                  mode="sum", weights=None):
+    """EmbeddingBag built from gather + segment_sum.
+
+    Either ``offsets`` (torch-style: bag b = idx[offsets[b]:offsets[b+1]]) or
+    explicit ``segment_ids`` (one per idx entry, len n_bags) selects bags.
+    """
+    rows = jnp.take(table, idx, axis=0)                       # (L, d)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    if segment_ids is None:
+        assert offsets is not None and n_bags is not None
+        # segment id = number of offsets <= position - 1
+        pos = jnp.arange(idx.shape[0])
+        segment_ids = jnp.searchsorted(offsets, pos, side="right") - 1
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(idx, rows.dtype),
+                                  segment_ids, num_segments=n_bags)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def _bce(logit, label):
+    """Binary cross-entropy with logits, numerically stable."""
+    logit = logit.astype(jnp.float32)
+    label = label.astype(jnp.float32)
+    return jnp.maximum(logit, 0) - logit * label + jnp.log1p(
+        jnp.exp(-jnp.abs(logit)))
+
+
+# ---------------------------------------------------------------------------
+# DLRM (MLPerf config)
+# ---------------------------------------------------------------------------
+
+
+def dlrm_init(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 3 + len(cfg.table_sizes))
+    tables = [
+        layers._normal(keys[i], (pad_rows(v), cfg.embed_dim),
+                       1.0 / math.sqrt(cfg.embed_dim), dtype)
+        for i, v in enumerate(cfg.table_sizes)
+    ]
+    bot = layers.mlp_init(keys[-3], (cfg.n_dense,) + cfg.bot_mlp, dtype=dtype)
+    n_feat = cfg.n_sparse + 1
+    n_inter = n_feat * (n_feat - 1) // 2
+    top_in = cfg.embed_dim + n_inter
+    top = layers.mlp_init(keys[-2], (top_in,) + cfg.top_mlp, dtype=dtype)
+    return {"tables": tables, "bot": bot, "top": top}
+
+
+def dlrm_dot_interaction(feats):
+    """feats: (B, F, d) → upper-triangle pairwise dots (B, F(F-1)/2).
+
+    Pure-jnp oracle for kernels/dot_interaction.
+    """
+    b, f, d = feats.shape
+    g = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    iu, ju = jnp.triu_indices(f, k=1)
+    return g[:, iu, ju]
+
+
+def dlrm_forward(params, dense, sparse, cfg):
+    """dense: (B, n_dense) f32; sparse: (B, n_sparse) int32 → logits (B,)."""
+    x = layers.mlp_apply(params["bot"], jnp.log1p(jnp.abs(dense)),
+                         act=jax.nn.relu, final_act=jax.nn.relu)
+    embs = [embedding_lookup(t, sparse[:, i])
+            for i, t in enumerate(params["tables"])]
+    feats = jnp.stack([x] + embs, axis=1)            # (B, 27, d)
+    feats = constrain(feats, "dp", None, None)
+    inter = dlrm_dot_interaction(feats)
+    top_in = jnp.concatenate([x, inter], axis=-1)
+    logit = layers.mlp_apply(params["top"], top_in, act=jax.nn.relu)
+    return logit[..., 0]
+
+
+def dlrm_loss(params, batch, cfg):
+    logit = dlrm_forward(params, batch["dense"], batch["sparse"], cfg)
+    loss = _bce(logit, batch["label"]).mean()
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# xDeepFM
+# ---------------------------------------------------------------------------
+
+
+def xdeepfm_init(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 6)
+    m, d = cfg.n_sparse, cfg.embed_dim
+    table = layers._normal(keys[0],
+                           (pad_rows(cfg.n_sparse * cfg.vocab_per_field), d),
+                           1.0 / math.sqrt(d), dtype)
+    lin = layers._normal(keys[1], (pad_rows(cfg.n_sparse * cfg.vocab_per_field),),
+                         0.01, dtype)
+    cin_ws, h_prev = [], m
+    ck = jax.random.split(keys[2], len(cfg.cin_layers))
+    for i, h in enumerate(cfg.cin_layers):
+        cin_ws.append(layers._normal(ck[i], (h, h_prev, m),
+                                     1.0 / math.sqrt(h_prev * m), dtype))
+        h_prev = h
+    mlp = layers.mlp_init(keys[3], (m * d,) + cfg.mlp + (1,), dtype=dtype)
+    cin_out = layers.dense_init(keys[4], sum(cfg.cin_layers), 1, bias=True,
+                                dtype=dtype)
+    return {"tables": table, "linear": lin, "cin": cin_ws, "mlp": mlp,
+            "cin_out": cin_out}
+
+
+def xdeepfm_forward(params, sparse, cfg):
+    """sparse: (B, n_sparse) int32 per-field ids (field-offset applied here)."""
+    b, m = sparse.shape
+    offs = jnp.arange(m, dtype=sparse.dtype) * cfg.vocab_per_field
+    flat = (sparse + offs[None, :]).reshape(-1)
+    x0 = embedding_lookup(params["tables"], flat).reshape(b, m, cfg.embed_dim)
+    x0 = constrain(x0, "dp", None, None)
+    # linear term
+    lin = jnp.take(params["linear"], flat).reshape(b, m).sum(-1)
+    # CIN
+    xk, cin_feats = x0, []
+    for w in params["cin"]:
+        z = jnp.einsum("bhd,bmd->bhmd", xk, x0)
+        xk = jnp.einsum("bhmd,nhm->bnd", z, w.astype(z.dtype))
+        cin_feats.append(xk.sum(-1))                 # (B, H_k)
+    cin = layers.dense(params["cin_out"], jnp.concatenate(cin_feats, -1))[..., 0]
+    # deep branch
+    deep = layers.mlp_apply(params["mlp"], x0.reshape(b, -1),
+                            act=jax.nn.relu)[..., 0]
+    return lin + cin + deep
+
+
+def xdeepfm_loss(params, batch, cfg):
+    logit = xdeepfm_forward(params, batch["sparse"], cfg)
+    loss = _bce(logit, batch["label"]).mean()
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# BERT4Rec
+# ---------------------------------------------------------------------------
+
+
+def bert4rec_init(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 4 + cfg.n_blocks)
+    d = cfg.embed_dim
+    blocks = []
+    for i in range(cfg.n_blocks):
+        ks = jax.random.split(keys[i], 6)
+        blocks.append({
+            "ln1": layers.norm_init(d, kind="layer", dtype=dtype),
+            "ln2": layers.norm_init(d, kind="layer", dtype=dtype),
+            "wq": layers.dense_init(ks[0], d, d, bias=True, dtype=dtype),
+            "wk": layers.dense_init(ks[1], d, d, bias=True, dtype=dtype),
+            "wv": layers.dense_init(ks[2], d, d, bias=True, dtype=dtype),
+            "wo": layers.dense_init(ks[3], d, d, bias=True, dtype=dtype),
+            "w1": layers.dense_init(ks[4], d, cfg.d_ff, bias=True, dtype=dtype),
+            "w2": layers.dense_init(ks[5], cfg.d_ff, d, bias=True, dtype=dtype),
+        })
+    return {
+        # +2: [PAD]=0 row reserved, [MASK]=n_items+1; rows padded to 512×
+        "item_embed": layers._normal(keys[-2], (pad_rows(cfg.n_items + 2), d),
+                                     1.0 / math.sqrt(d), dtype),
+        "pos_embed": layers._normal(keys[-1], (cfg.seq_len, d), 0.02, dtype),
+        "blocks": blocks,
+        "final_ln": layers.norm_init(d, kind="layer", dtype=dtype),
+    }
+
+
+def bert4rec_encode(params, seq, mask, cfg):
+    """seq: (B, L) item ids; mask: (B, L) valid. → hidden (B, L, d)."""
+    b, l = seq.shape
+    h_heads = cfg.n_heads
+    hd = cfg.embed_dim // h_heads
+    x = embedding_lookup(params["item_embed"], seq) + params["pos_embed"][:l][None]
+    x = constrain(x, "dp", None, None)
+    for p in params["blocks"]:
+        h = layers.apply_norm(p["ln1"], x)
+        q = layers.dense(p["wq"], h).reshape(b, l, h_heads, hd)
+        k = layers.dense(p["wk"], h).reshape(b, l, h_heads, hd)
+        v = layers.dense(p["wv"], h).reshape(b, l, h_heads, hd)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+        s = jnp.where(mask[:, None, None, :], s, -1e30)
+        w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(b, l, -1)
+        x = x + layers.dense(p["wo"], o)
+        h = layers.apply_norm(p["ln2"], x)
+        x = x + layers.dense(p["w2"], jax.nn.gelu(layers.dense(p["w1"], h)))
+    return layers.apply_norm(params["final_ln"], x)
+
+
+def bert4rec_loss(params, batch, cfg):
+    """Masked-item prediction: batch = {seq, mask, mlm_pos, mlm_tgt, mlm_mask}."""
+    h = bert4rec_encode(params, batch["seq"], batch["mask"], cfg)
+    pos = batch["mlm_pos"]                                  # (B, P)
+    hm = jnp.take_along_axis(h, pos[..., None], axis=1)     # (B, P, d)
+    logits = hm @ params["item_embed"].T.astype(h.dtype)    # (B, P, V+2)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["mlm_tgt"][..., None], -1)[..., 0]
+    m = batch["mlm_mask"].astype(jnp.float32)
+    loss = (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+    return loss, {"loss": loss}
+
+
+def bert4rec_user_embedding(params, seq, mask, cfg):
+    """Serving: embedding of the next-item slot = last valid position."""
+    h = bert4rec_encode(params, seq, mask, cfg)
+    last = jnp.maximum(mask.sum(-1) - 1, 0)                  # (B,)
+    return jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
+
+
+def bert4rec_score_all(params, seq, mask, cfg):
+    u = bert4rec_user_embedding(params, seq, mask, cfg)      # (B, d)
+    return u @ params["item_embed"].T.astype(u.dtype)        # (B, V+2)
+
+
+# ---------------------------------------------------------------------------
+# MIND (multi-interest capsules)
+# ---------------------------------------------------------------------------
+
+
+def mind_init(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    return {
+        "item_embed": layers._normal(keys[0], (pad_rows(cfg.n_items + 1), d),
+                                     1.0 / math.sqrt(d), dtype),
+        "bilinear": layers._normal(keys[1], (d, d), 1.0 / math.sqrt(d), dtype),
+        "routing_init": layers._normal(keys[2], (cfg.n_interests, cfg.hist_len),
+                                       1.0, dtype),
+    }
+
+
+def _squash(x, axis=-1):
+    n2 = jnp.sum(jnp.square(x), axis=axis, keepdims=True)
+    return (n2 / (1.0 + n2)) * x / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_interests(params, hist, hist_mask, cfg):
+    """hist: (B, T) item ids → (B, K, d) interest capsules via dynamic routing."""
+    e = embedding_lookup(params["item_embed"], hist)         # (B, T, d)
+    e = constrain(e, "dp", None, None)
+    eh = e @ params["bilinear"].astype(e.dtype)              # (B, T, d)
+    b_logit = jnp.broadcast_to(params["routing_init"][None],
+                               (hist.shape[0],) + params["routing_init"].shape)
+    b_logit = b_logit.astype(jnp.float32)
+    neg = jnp.float32(-1e30)
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(
+            jnp.where(hist_mask[:, None, :], b_logit, neg), axis=-1)
+        z = jnp.einsum("bkt,btd->bkd", w.astype(eh.dtype), eh)
+        u = _squash(z)                                       # (B, K, d)
+        b_logit = b_logit + jnp.einsum("bkd,btd->bkt", u, eh).astype(jnp.float32)
+    return u
+
+
+def mind_loss(params, batch, cfg):
+    """Label-aware attention over interests + in-batch sampled softmax."""
+    u = mind_interests(params, batch["hist"], batch["hist_mask"], cfg)
+    tgt = embedding_lookup(params["item_embed"], batch["target"])  # (B, d)
+    att = jax.nn.softmax(
+        jnp.einsum("bkd,bd->bk", u, tgt).astype(jnp.float32) * 2.0, axis=-1)
+    user = jnp.einsum("bk,bkd->bd", att.astype(u.dtype), u)  # (B, d)
+    logits = (user @ tgt.T).astype(jnp.float32)              # (B, B) in-batch
+    labels = jnp.arange(logits.shape[0])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.take_along_axis(logp, labels[:, None], -1).mean()
+    return loss, {"loss": loss}
+
+
+def mind_score_candidates(params, hist, hist_mask, cand_ids, cfg):
+    """Retrieval: max-over-interest dot scores. cand_ids: (C,) → (B, C)."""
+    u = mind_interests(params, hist, hist_mask, cfg)          # (B, K, d)
+    ce = embedding_lookup(params["item_embed"], cand_ids)     # (C, d)
+    ce = constrain(ce, "tp", None)
+    s = jnp.einsum("bkd,cd->bkc", u, ce)
+    return s.max(axis=1)

@@ -1,0 +1,448 @@
+"""Decoder LMs (dense / MoE, GQA, RoPE, sliding-window hybrid) and
+bidirectional encoders (the dual-encoder towers), in functional JAX.
+
+Layer stacks are scanned in *periods* so hybrid attention patterns
+(e.g. Gemma-3's 5 local : 1 global) stay static inside the scan body:
+layers = n_periods × period (+ remainder, unrolled). Uniform models use
+period=1. KV caches mirror this structure; local layers keep a ring buffer
+of `window` slots, global layers a full-length buffer.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers, moe as moe_lib
+
+
+# ---------------------------------------------------------------------------
+# Pattern → scan structure
+# ---------------------------------------------------------------------------
+
+
+def scan_structure(cfg) -> Tuple[int, Tuple[str, ...], Tuple[str, ...]]:
+    """Return (n_periods, period_pattern, remainder_pattern)."""
+    pat = cfg.pattern()
+    if all(k == pat[0] for k in pat):
+        return len(pat), (pat[0],), ()
+    # find smallest period that tiles a prefix, leaving a remainder
+    for plen in range(2, len(pat) + 1):
+        period = pat[:plen]
+        n = len(pat) // plen
+        if n >= 1 and pat[: n * plen] == period * n:
+            rem = pat[n * plen:]
+            if not rem or len(rem) < plen:
+                return n, period, rem
+    return len(pat), (pat[0],), ()  # unreachable
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _attn_init(key, cfg, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    bias = cfg.qkv_bias
+    return {
+        "wq": layers.dense_init(ks[0], d, h * hd, bias=bias, dtype=dtype),
+        "wk": layers.dense_init(ks[1], d, kv * hd, bias=bias, dtype=dtype),
+        "wv": layers.dense_init(ks[2], d, kv * hd, bias=bias, dtype=dtype),
+        "wo": layers.dense_init(ks[3], h * hd, d, bias=False, dtype=dtype),
+    }
+
+
+def _block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": layers.norm_init(cfg.d_model, dtype=dtype),
+        "ln2": layers.norm_init(cfg.d_model, dtype=dtype),
+        "attn": _attn_init(k1, cfg, dtype),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_lib.moe_init(k2, cfg.d_model, cfg.moe, dtype=dtype)
+    else:
+        ks = jax.random.split(k2, 3)
+        d, f = cfg.d_model, cfg.d_ff
+        p["mlp"] = {
+            "w1": layers.dense_init(ks[0], d, f, dtype=dtype),
+            "w3": layers.dense_init(ks[1], d, f, dtype=dtype),
+            "w2": layers.dense_init(ks[2], f, d, dtype=dtype),
+        }
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def lm_init(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    n_periods, period, rem = scan_structure(cfg)
+    keys = jax.random.split(key, 3)
+    bkeys = jax.random.split(keys[0], n_periods * len(period))
+    blocks = [
+        _stack([_block_init(bkeys[i * len(period) + j], cfg, dtype)
+                for j in range(len(period))])
+        for i in range(n_periods)
+    ]
+    params = {
+        "embed": layers._normal(keys[1], (cfg.vocab_size, cfg.d_model),
+                                1.0 / math.sqrt(cfg.d_model), dtype),
+        "periods": _stack(blocks),
+        "final_norm": layers.norm_init(cfg.d_model, dtype=dtype),
+    }
+    if rem:
+        rkeys = jax.random.split(keys[2], len(rem) + 1)
+        params["rem"] = _stack([_block_init(rkeys[j], cfg, dtype)
+                                for j in range(len(rem))])
+    if not cfg.tie_embeddings:
+        params["unembed"] = layers._normal(
+            jax.random.split(keys[2])[0], (cfg.d_model, cfg.vocab_size),
+            1.0 / math.sqrt(cfg.d_model), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block apply
+# ---------------------------------------------------------------------------
+
+
+def _qkv(p, x, cfg, positions):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = layers.dense(p["wq"], x).reshape(b, s, h, hd)
+    k = layers.dense(p["wk"], x).reshape(b, s, kv, hd)
+    v = layers.dense(p["wv"], x).reshape(b, s, kv, hd)
+    # NOTE (§Perf gemma iteration 1, REFUTED): explicit head-sharding
+    # constraints here were tried and removed — GSPMD already picks the
+    # column-parallel layout where legal, and for GQA configs with
+    # n_kv_heads < tp the forced q-sharding (with unshardable k/v) made it
+    # redistribute attention inputs (kimi collective 61.6 s → 261 s).
+    q = layers.rope(q, positions, theta=cfg.rope_theta)
+    k = layers.rope(k, positions, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def _block_full(p, x, cfg, kind, *, return_cache=False, cache_len=0):
+    """Train/prefill path. x: (B, S, d)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    h = layers.apply_norm(p["ln1"], x, eps=cfg.norm_eps)
+    q, k, v = _qkv(p["attn"], h, cfg, positions)
+    local = kind == "L" and cfg.window_size > 0
+    if local and s > cfg.window_size and s % cfg.window_size == 0:
+        o = layers.attention_local_banded(q, k, v, window=cfg.window_size)
+    else:
+        o = layers.attention_full(
+            q, k, v, causal=True,
+            window=cfg.window_size if local else 0,
+            chunk=min(cfg.attn_chunk, s))
+    o = layers.dense(p["attn"]["wo"], o.reshape(b, s, -1))
+    # materialize the row-parallel output in bf16 BEFORE the f32 norm
+    # consumer: otherwise XLA hoists the f32 convert above the tp
+    # all-reduce and the wire doubles (§Perf gemma iteration 2)
+    o = constrain(o, "dp", None, None)
+    x = x + o
+    x = constrain(x, "dp", None, None)
+    h = layers.apply_norm(p["ln2"], x, eps=cfg.norm_eps)
+    aux = {"lb_loss": jnp.float32(0), "z_loss": jnp.float32(0),
+           "drop_fraction": jnp.float32(0)}
+    if cfg.is_moe:
+        m, aux = moe_lib.moe_apply(p["moe"], h, cfg.moe)
+    else:
+        g = jax.nn.silu(layers.dense(p["mlp"]["w1"], h))
+        u = layers.dense(p["mlp"]["w3"], h)
+        m = layers.dense(p["mlp"]["w2"], g * u)
+    m = constrain(m, "dp", None, None)         # bf16 AR (see `o` above)
+    x = x + m
+    x = constrain(x, "dp", None, None)
+    cache = None
+    if return_cache:
+        w = cfg.window_size if local else 0
+        if local:
+            last = min(s, w)
+            slots = (jnp.arange(s - last, s)) % w
+            kc = jnp.zeros((b, w) + k.shape[2:], k.dtype).at[:, slots].set(
+                k[:, s - last:])
+            vc = jnp.zeros((b, w) + v.shape[2:], v.dtype).at[:, slots].set(
+                v[:, s - last:])
+        else:
+            pad = cache_len - s
+            kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = {"k": kc, "v": vc}
+    return x, aux, cache
+
+
+def _block_decode(p, x, cache, pos, cfg, kind):
+    """Decode path. x: (B, 1, d); pos: (B,) absolute position of new token."""
+    b = x.shape[0]
+    local = kind == "L" and cfg.window_size > 0
+    h = layers.apply_norm(p["ln1"], x, eps=cfg.norm_eps)
+    q, k, v = _qkv(p["attn"], h, cfg, pos[:, None])
+    t = cache["k"].shape[1]
+    slot = (pos % t) if local else jnp.minimum(pos, t - 1)
+    kc = cache["k"].at[jnp.arange(b), slot].set(k[:, 0])
+    vc = cache["v"].at[jnp.arange(b), slot].set(v[:, 0])
+    o = layers.decode_attention(
+        q, kc, vc, pos, window=cfg.window_size if local else 0, ring=local)
+    o = layers.dense(p["attn"]["wo"], o.reshape(b, 1, -1))
+    x = x + o
+    h = layers.apply_norm(p["ln2"], x, eps=cfg.norm_eps)
+    if cfg.is_moe:
+        m, _ = moe_lib.moe_apply(p["moe"], h, cfg.moe)
+    else:
+        g = jax.nn.silu(layers.dense(p["mlp"]["w1"], h))
+        u = layers.dense(p["mlp"]["w3"], h)
+        m = layers.dense(p["mlp"]["w2"], g * u)
+    x = x + m
+    x = constrain(x, "dp", None, None)
+    return x, {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, tokens, cfg):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    return constrain(x, "dp", None, None)
+
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat:
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return fn
+
+
+def _group_caches(pattern, caches):
+    """Group per-layer cache dicts by attention kind so shapes stack."""
+    out = {}
+    for kind in sorted(set(pattern)):
+        out[kind] = _stack([c for c, k in zip(caches, pattern) if k == kind])
+    return out
+
+
+def _kind_index(pattern, j):
+    """Index of layer j within its kind group."""
+    return sum(1 for k in pattern[:j] if k == pattern[j])
+
+
+def lm_forward(params, tokens, cfg, *, collect_cache=False, cache_len=0):
+    """Returns (hidden (B,S,d), aux, cache_or_None)."""
+    n_periods, period, rem = scan_structure(cfg)
+    x = _embed(params, tokens, cfg)
+
+    def period_body(x, block_p):
+        auxes = []
+        caches = []
+        for j, kind in enumerate(period):
+            pj = jax.tree.map(lambda a: a[j], block_p)
+            x, aux, cache = _block_full(
+                pj, x, cfg, kind, return_cache=collect_cache,
+                cache_len=cache_len)
+            auxes.append(aux)
+            caches.append(cache)
+        aux = jax.tree.map(lambda *xs: sum(xs), *auxes)
+        ys = (aux, _group_caches(period, caches) if collect_cache else 0)
+        return x, ys
+
+    body = _maybe_remat(period_body, cfg)
+    x, (aux_stacked, cache_main) = jax.lax.scan(
+        body, x, params["periods"])
+    aux = jax.tree.map(jnp.sum, aux_stacked)
+
+    cache_rem = None
+    rem_auxes = []
+    if rem:
+        rem_caches = []
+        for j, kind in enumerate(rem):
+            pj = jax.tree.map(lambda a: a[j], params["rem"])
+            x, a, cch = _block_full(pj, x, cfg, kind,
+                                    return_cache=collect_cache,
+                                    cache_len=cache_len)
+            rem_auxes.append(a)
+            rem_caches.append(cch)
+        if collect_cache:
+            cache_rem = _group_caches(rem, rem_caches)
+    if rem_auxes:
+        aux = jax.tree.map(lambda a, *bs: a + sum(bs), aux, *rem_auxes)
+
+    x = layers.apply_norm(params["final_norm"], x, eps=cfg.norm_eps)
+    cache = ({"main": cache_main, "rem": cache_rem} if collect_cache else None)
+    return x, aux, cache
+
+
+def unembed_matrix(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def lm_loss(params, batch, cfg):
+    """batch: {"tokens": (B, S+1) int32}. Next-token xent + MoE aux losses."""
+    tokens = batch["tokens"]
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    x, aux, _ = lm_forward(params, inp, cfg)
+    loss = layers.chunked_softmax_xent(x, unembed_matrix(params, cfg), tgt)
+    total = loss + 0.01 * aux["lb_loss"] + 1e-3 * aux["z_loss"]
+    metrics = {"xent": loss, "lb_loss": aux["lb_loss"],
+               "z_loss": aux["z_loss"], "drop_fraction": aux["drop_fraction"]}
+    return total, metrics
+
+
+def lm_prefill(params, tokens, cfg, *, max_len=None):
+    """Returns (last-token logits (B, V), cache). The cache is allocated at
+    ``max_len`` (defaults to the prompt length) so decode can extend it."""
+    b, s = tokens.shape
+    x, _, cache = lm_forward(params, tokens, cfg, collect_cache=True,
+                             cache_len=max_len or s)
+    last = x[:, -1]
+    logits = last @ unembed_matrix(params, cfg).astype(last.dtype)
+    return logits.astype(jnp.float32), cache
+
+
+def lm_decode_step(params, cache, token, pos, cfg):
+    """token: (B, 1) int32; pos: (B,) int32. Returns (logits (B,V), cache')."""
+    n_periods, period, rem = scan_structure(cfg)
+    x = _embed(params, token, cfg)
+
+    def period_body(carry, xs):
+        x = carry
+        block_p, cch = xs
+        new_c = []
+        for j, kind in enumerate(period):
+            pj = jax.tree.map(lambda a: a[j], block_p)
+            ki = _kind_index(period, j)
+            cj = jax.tree.map(lambda a: a[ki], cch[kind])
+            x, nc = _block_decode(pj, x, cj, pos, cfg, kind)
+            new_c.append(nc)
+        return x, _group_caches(period, new_c)
+
+    x, cache_main = jax.lax.scan(
+        period_body, x, (params["periods"], cache["main"]))
+
+    cache_rem = cache.get("rem")
+    if rem:
+        new_rem = []
+        for j, kind in enumerate(rem):
+            pj = jax.tree.map(lambda a: a[j], params["rem"])
+            ki = _kind_index(rem, j)
+            cj = jax.tree.map(lambda a: a[ki], cache_rem[kind])
+            x, nc = _block_decode(pj, x, cj, pos, cfg, kind)
+            new_rem.append(nc)
+        cache_rem = _group_caches(rem, new_rem)
+
+    x = layers.apply_norm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = x[:, 0] @ unembed_matrix(params, cfg).astype(x.dtype)
+    return logits.astype(jnp.float32), {"main": cache_main, "rem": cache_rem}
+
+
+def make_decode_cache(cfg, batch, seq_len, *, dtype=None):
+    """Zero KV cache pytree matching the scan structure (for specs/serving)."""
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    n_periods, period, rem = scan_structure(cfg)
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def entry(kind, lead):
+        t = cfg.window_size if (kind == "L" and cfg.window_size) else seq_len
+        shp = lead + (batch, t, kv, hd)
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+    def group(pattern, lead):
+        return {kind: _stack([entry(kind, lead)
+                              for k in pattern if k == kind])
+                for kind in sorted(set(pattern))}
+
+    main = group(period, (n_periods,))
+    # stacking placed the kind-count dim first: (n_k, n_periods, ...) →
+    # (n_periods, n_k, ...)
+    main = jax.tree.map(lambda a: jnp.moveaxis(a, 0, 1), main)
+    out = {"main": main, "rem": None}
+    if rem:
+        out["rem"] = group(rem, ())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Bidirectional encoder (dual-encoder towers, BERT geometry)
+# ---------------------------------------------------------------------------
+
+
+def encoder_init(key, cfg):
+    """cfg: DualEncoderConfig-like (n_layers, d_model, n_heads, d_ff, vocab)."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 4)
+    d = cfg.d_model
+    blocks = []
+    bkeys = jax.random.split(keys[0], cfg.n_layers)
+    for i in range(cfg.n_layers):
+        k1, k2 = jax.random.split(bkeys[i])
+        ks = jax.random.split(k2, 2)
+        blocks.append({
+            "ln1": layers.norm_init(d, kind="layer", dtype=dtype),
+            "ln2": layers.norm_init(d, kind="layer", dtype=dtype),
+            "attn": {
+                "wq": layers.dense_init(jax.random.fold_in(k1, 0), d, d, bias=True, dtype=dtype),
+                "wk": layers.dense_init(jax.random.fold_in(k1, 1), d, d, bias=True, dtype=dtype),
+                "wv": layers.dense_init(jax.random.fold_in(k1, 2), d, d, bias=True, dtype=dtype),
+                "wo": layers.dense_init(jax.random.fold_in(k1, 3), d, d, bias=True, dtype=dtype),
+            },
+            "mlp": {
+                "w1": layers.dense_init(ks[0], d, cfg.d_ff, bias=True, dtype=dtype),
+                "w2": layers.dense_init(ks[1], cfg.d_ff, d, bias=True, dtype=dtype),
+            },
+        })
+    return {
+        "embed": layers._normal(keys[1], (cfg.vocab_size, d),
+                                1.0 / math.sqrt(d), dtype),
+        "pos_embed": layers._normal(keys[2], (cfg.max_len, d), 0.02, dtype),
+        "blocks": _stack(blocks),
+        "final_ln": layers.norm_init(d, kind="layer", dtype=dtype),
+        "cls": layers.dense_init(keys[3], d, d, bias=True, dtype=dtype),
+    }
+
+
+def encoder_forward(params, tokens, mask, cfg):
+    """tokens: (B, L) int32; mask: (B, L) bool. Returns (B, d) CLS embedding."""
+    b, l = tokens.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cdt) + \
+        params["pos_embed"][:l].astype(cdt)[None]
+    x = constrain(x, "dp", None, None)
+    h_heads = cfg.n_heads
+    hd = cfg.d_model // h_heads
+
+    def body(x, p):
+        h = layers.apply_norm(p["ln1"], x, eps=cfg.norm_eps)
+        q = layers.dense(p["attn"]["wq"], h).reshape(b, l, h_heads, hd)
+        k = layers.dense(p["attn"]["wk"], h).reshape(b, l, h_heads, hd)
+        v = layers.dense(p["attn"]["wv"], h).reshape(b, l, h_heads, hd)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) / math.sqrt(hd)
+        s = jnp.where(mask[:, None, None, :], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+        o = layers.dense(p["attn"]["wo"], o.reshape(b, l, -1).astype(cdt))
+        x = x + o
+        h = layers.apply_norm(p["ln2"], x, eps=cfg.norm_eps)
+        m = layers.dense(p["mlp"]["w2"],
+                         jax.nn.gelu(layers.dense(p["mlp"]["w1"], h)))
+        x = x + m
+        x = constrain(x, "dp", None, None)
+        return x, None
+
+    body_fn = _maybe_remat(body, cfg) if getattr(cfg, "remat", False) else body
+    x, _ = jax.lax.scan(body_fn, x, params["blocks"])
+    x = layers.apply_norm(params["final_ln"], x, eps=cfg.norm_eps)
+    cls = jnp.tanh(layers.dense(params["cls"], x[:, 0]))
+    return cls.astype(jnp.float32)

@@ -1,0 +1,25 @@
+"""Optimizers (AdamW, Adafactor), LR schedules, gradient clipping.
+
+Self-contained functional optimizers (no optax dependency): each is
+``init(params) -> state`` + ``update(grads, state, params, lr) ->
+(new_params, new_state)``. States are pytrees so they shard/checkpoint
+exactly like params.
+
+Adafactor keeps factored second moments (row/col) for >=2-D leaves, which is
+what makes the 1T-param kimi-k2 optimizer state fit HBM (DESIGN.md §5).
+"""
+from repro.optim.optimizers import (  # noqa: F401
+    adamw_init,
+    adamw_update,
+    adafactor_init,
+    adafactor_update,
+    clip_by_global_norm,
+    global_norm,
+    make_optimizer,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant_lr,
+    cosine_schedule,
+    linear_warmup_cosine,
+    linear_warmup_linear_decay,
+)

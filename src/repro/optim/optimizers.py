@@ -1,0 +1,147 @@
+"""AdamW and Adafactor, functional form, pytree states."""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Gradient clipping
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), grads), g
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def adamw_update(grads, state, params, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - jnp.power(b1, t)
+    c2 = 1.0 - jnp.power(b2, t)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        # decoupled weight decay on matrices only (dim >= 2)
+        if p.ndim >= 2:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat = jax.tree.map(upd, params, grads, state["m"], state["v"],
+                        is_leaf=lambda x: isinstance(x, jax.Array))
+    p_new = jax.tree.map(lambda t3: t3[0], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    m_new = jax.tree.map(lambda t3: t3[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    v_new = jax.tree.map(lambda t3: t3[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return p_new, {"step": step, "m": m_new, "v": v_new}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; beta1=0 — no first moment)
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params):
+    def leaf(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),          # row
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "v": jax.tree.map(leaf, params,
+                          is_leaf=lambda x: isinstance(x, jax.Array)),
+    }
+
+
+def adafactor_update(grads, state, params, lr, *, decay_pow=0.8,
+                     eps=1e-30, clip_threshold=1.0, weight_decay=0.0):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - jnp.power(t, -decay_pow)
+
+    def upd(p, g, v):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + eps
+        if _factored(p.shape):
+            vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            # rank-1 reconstruction of the second moment
+            r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+            u = g32 * jax.lax.rsqrt(r[..., None] * vc[..., None, :] + eps)
+            v_new = {"vr": vr, "vc": vc}
+        else:
+            vv = beta2 * v["v"] + (1 - beta2) * g2
+            u = g32 * jax.lax.rsqrt(vv + eps)
+            v_new = {"v": vv}
+        # update clipping (RMS <= clip_threshold)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        if weight_decay and p.ndim >= 2:
+            u = u + weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return p_new, v_new
+
+    is_state_leaf = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    flat = jax.tree.map(upd, params, grads, state["v"],
+                        is_leaf=lambda x: isinstance(x, jax.Array))
+    # flat leaves are (p_new, v_new) tuples at param positions
+    p_new = jax.tree.map(lambda pair: pair[0], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    v_new = jax.tree.map(lambda pair: pair[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return p_new, {"step": step, "v": v_new}
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+
+def make_optimizer(name: str, **kw) -> Tuple[Callable, Callable]:
+    """Returns (init_fn, update_fn(grads, state, params, lr))."""
+    if name == "adamw":
+        return adamw_init, functools.partial(adamw_update, **kw)
+    if name == "adafactor":
+        return adafactor_init, functools.partial(adafactor_update, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,37 @@
+"""Learning-rate schedules as step -> lr functions (jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_schedule(base_lr: float, total_steps: int, *, final_frac=0.1):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return base_lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def linear_warmup_cosine(base_lr: float, warmup: int, total_steps: int,
+                         *, final_frac=0.1):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1),
+                          final_frac=final_frac)
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * s / max(warmup, 1)
+        return jnp.where(s < warmup, warm, cos(step - warmup))
+    return fn
+
+
+def linear_warmup_linear_decay(base_lr: float, warmup: int, total_steps: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * s / max(warmup, 1)
+        frac = 1.0 - (s - warmup) / max(total_steps - warmup, 1)
+        return jnp.where(s < warmup, warm, base_lr * jnp.clip(frac, 0.0, 1.0))
+    return fn

@@ -1,0 +1,27 @@
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import GeoCorpus, GeoCorpusConfig
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    return GeoCorpus(GeoCorpusConfig(
+        n_objects=600, n_queries=120, n_topics=8, vocab_size=2048, seed=0))
+
+
+@pytest.fixture(scope="session")
+def tiny_de_cfg():
+    return dataclasses.replace(
+        get_config("list-dual-encoder"),
+        n_layers=2, d_model=32, n_heads=2, d_ff=64, vocab_size=2048,
+        max_len=16, spatial_t=50, n_clusters=4, neg_start=200, neg_end=300,
+        index_mlp_hidden=(32,))
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,121 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("b,n,d,t,k", [
+    (8, 1024, 32, 50, 5),
+    (16, 2048, 64, 100, 10),
+    (4, 512, 128, 1000, 20),
+])
+def test_fused_topk_score(b, n, d, t, k, rng):
+    q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    ql = jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 1.5, size=(b, 2)), jnp.float32)
+    ce = jnp.asarray(rng.normal(size=(b, n, d)), jnp.float32)
+    cl = jnp.asarray(rng.uniform(size=(b, n, 2)), jnp.float32)
+    ci = jnp.asarray(rng.integers(-1, 10_000, size=(b, n)), jnp.int32)
+    wh = jnp.asarray(np.cumsum(rng.uniform(0, 0.01, size=t)), jnp.float32)
+    s1, i1 = ops.fused_topk_score(q, ql, w, ce, cl, ci, wh, k=k,
+                                  dist_max=1.414, interpret=True)
+    s2, i2 = ref.fused_topk_score_ref(q, ql, w, ce, cl, ci, wh, k=k,
+                                      dist_max=1.414)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_topk_masks_padding(rng):
+    b, n, d, t, k = 4, 512, 16, 20, 8
+    q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    ql = jnp.zeros((b, 2), jnp.float32)
+    w = jnp.ones((b, 2), jnp.float32)
+    ce = jnp.asarray(rng.normal(size=(b, n, d)), jnp.float32)
+    cl = jnp.zeros((b, n, 2), jnp.float32)
+    ci = jnp.full((b, n), -1, jnp.int32)          # everything is padding
+    ci = ci.at[:, :k].set(jnp.arange(k))
+    wh = jnp.asarray(np.linspace(0, 1, t), jnp.float32)
+    s, i = ops.fused_topk_score(q, ql, w, ce, cl, ci, wh, k=k,
+                                dist_max=1.414, interpret=True)
+    # only the k valid slots can be selected
+    assert (np.asarray(i) < k).all() and (np.asarray(i) >= 0).all()
+
+
+@pytest.mark.parametrize("b,s,h,kv,d,causal,window", [
+    (2, 256, 4, 2, 32, True, 0),
+    (1, 128, 4, 4, 64, True, 64),
+    (2, 200, 2, 1, 16, True, 0),          # non-multiple seq (padding path)
+    (1, 256, 8, 2, 32, True, 100),        # window not multiple of block
+    (1, 64, 2, 2, 32, False, 0),
+])
+def test_flash_attention(b, s, h, kv, d, causal, window, rng):
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, d)), jnp.float32)
+    o1 = ops.flash_attention(q, k, v, causal=causal, window=window,
+                             block_q=64, block_k=64, interpret=True)
+    o2 = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16(rng):
+    q = jnp.asarray(rng.normal(size=(2, 128, 4, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(2, 128, 2, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(2, 128, 2, 32)), jnp.bfloat16)
+    o1 = ops.flash_attention(q, k, v, interpret=True)
+    o2 = ref.flash_attention_ref(q, k, v)
+    err = np.abs(np.asarray(o1, np.float32) - np.asarray(o2, np.float32))
+    assert err.max() < 2e-2
+
+
+def test_flash_matches_layers_oracle(rng):
+    """The kernel also matches the model's chunked-attention path."""
+    from repro.models import layers
+    q = jnp.asarray(rng.normal(size=(2, 128, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 128, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 128, 2, 32)), jnp.float32)
+    o1 = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    o2 = layers.attention_full(q, k, v, causal=True, chunk=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,f,d", [(128, 27, 16), (256, 27, 128), (64, 8, 8)])
+def test_dot_interaction(b, f, d, rng):
+    x = jnp.asarray(rng.normal(size=(b, f, d)), jnp.float32)
+    o1 = ops.dot_interaction(x, block_m=64, interpret=True)
+    o2 = ref.dot_interaction_ref(x)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-5, atol=1e-5)
+    # matches the model's implementation too
+    from repro.models.recsys import dlrm_dot_interaction
+    o3 = dlrm_dot_interaction(x)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o3),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("v,d,b,p,block_v", [
+    (1000, 32, 128, 8, 256),
+    (500, 16, 64, 4, 512),     # block_v > v (single tile)
+    (4096, 64, 256, 16, 512),
+])
+def test_embedding_bag(v, d, b, p, block_v, rng):
+    tab = jnp.asarray(rng.normal(size=(v, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(-1, v, size=(b, p)), jnp.int32)
+    o1 = ops.embedding_bag(tab, idx, block_v=block_v, interpret=True)
+    o2 = ref.embedding_bag_ref(tab, idx)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_embedding_bag_duplicate_indices(rng):
+    tab = jnp.asarray(rng.normal(size=(100, 8)), jnp.float32)
+    idx = jnp.asarray([[3, 3, 3, -1]], jnp.int32)
+    idx = jnp.tile(idx, (8, 1))
+    o = ops.embedding_bag(tab, idx, interpret=True)
+    np.testing.assert_allclose(np.asarray(o)[0], 3 * np.asarray(tab)[3],
+                               rtol=1e-5)

@@ -1,0 +1,147 @@
+"""End-to-end LIST behaviour tests (paper Algorithm 1, scaled down)."""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import cluster_metrics as cm
+from repro.core import index as il
+from repro.core import pipeline as pl
+from repro.core.baselines import BM25, IVFIndex, LSHIndex, kmeans, tkq_topk
+from repro.data import GeoCorpus, GeoCorpusConfig
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = dataclasses.replace(
+        get_config("list-dual-encoder"),
+        n_layers=2, d_model=48, n_heads=2, d_ff=96, vocab_size=2048,
+        max_len=16, spatial_t=50, n_clusters=8, neg_start=600, neg_end=750,
+        index_mlp_hidden=(64,))
+    corpus = GeoCorpus(GeoCorpusConfig(
+        n_objects=1200, n_queries=240, n_topics=8, vocab_size=2048, seed=1))
+    r = pl.ListRetriever(cfg, corpus)
+    r.train_relevance(steps=150, batch=48, lr=1.5e-3, log_every=1000)
+    r.train_index(steps=600, batch=48, lr=3e-3, log_every=1000)
+    r.build()
+    return r
+
+
+def test_list_recall_close_to_brute_force(trained):
+    r = trained
+    tr, va, te = r.corpus.split()
+    positives = [r.corpus.positives[q] for q in te]
+    bf_ids, _ = r.brute_force(te, k=10, batch=64)
+    ids, _ = r.query(te, k=10, cr=2, batch=64)
+    rb = cm.recall_at_k(bf_ids, positives, 10)
+    rl = cm.recall_at_k(ids, positives, 10)
+    assert rb > 0.15, f"relevance model too weak (brute recall {rb})"
+    assert rl >= 0.7 * rb, (
+        f"LIST recall {rl} lost too much vs brute {rb}")
+
+
+def test_list_beats_tkq(trained):
+    """The paper's headline: embedding relevance > BM25 TkQ (Table 3)."""
+    r = trained
+    tr, va, te = r.corpus.split()
+    positives = [r.corpus.positives[q] for q in te]
+    bm = BM25(r.corpus.obj_doc, vocab_size=r.corpus.cfg.vocab_size)
+    tkq_ids = tkq_topk(bm, r.corpus.q_doc[te], r.corpus.q_loc[te],
+                       r.corpus.obj_loc, 10, dist_max=r.corpus.dist_max)
+    bf_ids, _ = r.brute_force(te, k=10, batch=64)
+    assert (cm.recall_at_k(bf_ids, positives, 10)
+            > cm.recall_at_k(tkq_ids, positives, 10))
+
+
+def test_clusters_balanced_and_precise(trained):
+    r = trained
+    if_c = cm.imbalance_factor(r.obj_assign, r.cfg.n_clusters)
+    assert if_c < 2.5, f"clusters too skewed: IF(C)={if_c}"
+    tr, va, te = r.corpus.split()
+    q_emb = pl.embed_queries(r.rel_params, r.corpus, r.cfg, te)
+    qf = il.build_features(
+        jnp.asarray(q_emb),
+        jnp.asarray(r.corpus.q_loc[te].astype(np.float32)), r.norm)
+    qa = np.asarray(il.assign_clusters(r.index_params, qf))
+    positives = [r.corpus.positives[q] for q in te]
+    pc, _ = cm.cluster_precision(qa, positives, r.obj_assign,
+                                 r.cfg.n_clusters)
+    assert pc > 0.4, f"cluster precision too low: P(C)={pc}"
+
+
+def test_pallas_query_path_matches_jnp(trained):
+    r = trained
+    tr, va, te = r.corpus.split()
+    te = te[:32]
+    ids1, sc1 = r.query(te, k=8, cr=1, use_pallas=False, batch=32)
+    ids2, sc2 = r.query(te, k=8, cr=1, use_pallas=True, batch=32)
+    np.testing.assert_allclose(sc1, sc2, rtol=1e-4, atol=1e-4)
+
+
+def test_query_efficiency_candidates(trained):
+    """LIST scans ≈ cr·cap objects — a fraction of the corpus (Fig. 4)."""
+    cap = trained.buffers["capacity"]
+    n = trained.corpus.cfg.n_objects
+    assert cap * 1 < 0.8 * n
+
+
+def test_insertion_routes_new_objects(trained):
+    r = trained
+    rng = np.random.default_rng(0)
+    new_emb = rng.normal(size=(5, r.obj_emb.shape[1])).astype(np.float32)
+    new_loc = rng.uniform(size=(5, 2)).astype(np.float32)
+    before = int(np.asarray(r.buffers["counts"]).sum())
+    buf2 = il.insert_objects(r.buffers, r.index_params, r.norm,
+                             jnp.asarray(new_emb), jnp.asarray(new_loc),
+                             np.arange(10_000, 10_005))
+    assert int(np.asarray(buf2["counts"]).sum()) == before + 5
+
+
+# --- classical baselines ----------------------------------------------------
+
+
+def test_kmeans_partitions(rng):
+    x = np.concatenate([rng.normal(-5, 0.3, (50, 4)),
+                        rng.normal(5, 0.3, (50, 4))]).astype(np.float32)
+    cent, assign = kmeans(jnp.asarray(x), 2, iters=10)
+    a = np.asarray(assign)
+    assert len(set(a[:50].tolist())) == 1
+    assert len(set(a[50:].tolist())) == 1
+    assert a[0] != a[-1]
+
+
+def test_ivf_candidates_contain_near_neighbors(rng):
+    emb = rng.normal(size=(400, 16)).astype(np.float32)
+    ivf = IVFIndex(emb, n_clusters=4)
+    cands = ivf.candidates(emb[:10], cr=1)
+    for i, c in enumerate(cands):
+        assert i in c                     # own cluster contains self
+
+
+def test_ivf_s_uses_spatial(rng):
+    emb = rng.normal(size=(300, 8)).astype(np.float32)
+    loc = np.concatenate([rng.uniform(0, 0.1, (150, 2)),
+                          rng.uniform(0.9, 1.0, (150, 2))]).astype(np.float32)
+    # alpha -> 0: clustering dominated by location
+    ivf = IVFIndex(emb, loc, n_clusters=2, alpha=0.01)
+    a = ivf.assign
+    assert (a[:150] == a[0]).mean() > 0.9
+    assert (a[150:] == a[150]).mean() > 0.9
+    assert a[0] != a[150]
+
+
+def test_lsh_self_retrieval(rng):
+    emb = rng.normal(size=(200, 16)).astype(np.float32)
+    lsh = LSHIndex(emb, nbits=8, n_tables=3)
+    cands = lsh.candidates(emb[:20])
+    assert all(i in c for i, c in enumerate(cands))
+
+
+def test_bm25_exact_match_ranks_first():
+    docs = np.array([[5, 6, 7, 0], [8, 9, 10, 0], [11, 12, 13, 0]])
+    bm = BM25(docs, vocab_size=20)
+    s = bm.scores(np.array([[8, 9, 0]]))
+    assert s[0].argmax() == 1
+    assert s[0][0] == 0.0 and s[0][2] == 0.0   # no overlap -> zero score

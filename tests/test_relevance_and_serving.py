@@ -1,0 +1,160 @@
+"""LIST-R scoring consistency + the two query-phase implementations agree."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import index as il
+from repro.core import relevance, serving
+from repro.core import spatial as sp
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup(tiny_de_cfg=None):
+    cfg = dataclasses.replace(
+        get_config("list-dual-encoder"),
+        n_layers=2, d_model=32, n_heads=2, d_ff=64, vocab_size=512,
+        max_len=8, spatial_t=50, n_clusters=4, index_mlp_hidden=(16,))
+    params = relevance.relevance_init(KEY, cfg)
+    return cfg, params
+
+
+def test_score_pairs_vs_corpus_consistency(setup, rng):
+    """score_corpus(B,N) diagonal == score_pairs on aligned pairs."""
+    cfg, params = setup
+    n = 6
+    emb = jnp.asarray(rng.normal(size=(n, cfg.d_model)), jnp.float32)
+    loc = jnp.asarray(rng.uniform(size=(n, 2)), jnp.float32)
+    pair = relevance.score_pairs(params, emb, loc, emb, loc, cfg,
+                                 dist_max=1.414, train=False)
+    corp = relevance.score_corpus(params, emb, loc, emb, loc, cfg,
+                                  dist_max=1.414, train=False)
+    np.testing.assert_allclose(np.asarray(pair), np.diag(np.asarray(corp)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_train_serve_scoring_equivalence(setup, rng):
+    """Eq. 4 (train path) and Eq. 5 (serve path) give identical ST."""
+    cfg, params = setup
+    b, n = 4, 50
+    qe = jnp.asarray(rng.normal(size=(b, cfg.d_model)), jnp.float32)
+    ql = jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32)
+    oe = jnp.asarray(rng.normal(size=(n, cfg.d_model)), jnp.float32)
+    ol = jnp.asarray(rng.uniform(size=(n, 2)), jnp.float32)
+    st_train = relevance.score_corpus(params, qe, ql, oe, ol, cfg,
+                                      dist_max=1.414, train=True)
+    st_serve = relevance.score_corpus(params, qe, ql, oe, ol, cfg,
+                                      dist_max=1.414, train=False)
+    np.testing.assert_allclose(np.asarray(st_train), np.asarray(st_serve),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_contrastive_loss_decreases_with_easy_positive(setup, rng):
+    cfg, params = setup
+    b, L = 4, 8
+    batch = {
+        "q_tokens": jnp.asarray(rng.integers(2, 512, (b, L)), jnp.int32),
+        "q_mask": jnp.ones((b, L), bool),
+        "q_loc": jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32),
+        "pos_tokens": jnp.asarray(rng.integers(2, 512, (b, L)), jnp.int32),
+        "pos_mask": jnp.ones((b, L), bool),
+        "pos_loc": jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32),
+        "neg_tokens": jnp.asarray(rng.integers(2, 512, (b, 2, L)), jnp.int32),
+        "neg_mask": jnp.ones((b, 2, L), bool),
+        "neg_loc": jnp.asarray(rng.uniform(size=(b, 2, 2)), jnp.float32),
+    }
+    loss, m = relevance.contrastive_loss(params, batch, cfg)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: relevance.contrastive_loss(p, batch, cfg)[0])(
+        params)
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(g))
+
+
+def test_weight_modes(setup, rng):
+    cfg, params = setup
+    qe = jnp.asarray(rng.normal(size=(3, cfg.d_model)), jnp.float32)
+    w_mlp = relevance.st_weights(params, qe, weight_mode="mlp")
+    w_fix = relevance.st_weights(params, qe, weight_mode="fixed")
+    assert w_mlp.shape == (3, 2) and w_fix.shape == (3, 2)
+    assert (np.asarray(w_mlp) > 0).all()         # softplus positivity
+    np.testing.assert_allclose(
+        np.asarray(w_fix),
+        np.broadcast_to(np.asarray(w_fix[0]), w_fix.shape),
+        rtol=1e-6)        # fixed = same per query
+
+
+def test_dispatch_roundtrip(rng):
+    """dispatch_queries places each (query, route) exactly once."""
+    b, cr, c, cap = 16, 2, 4, 16
+    top_c = jnp.asarray(rng.integers(0, c, size=(b, cr)), jnp.int32)
+    feat = jnp.asarray(np.arange(b, dtype=np.float32)[:, None], jnp.float32)
+    q_buf, origin = serving.dispatch_queries(top_c, feat, n_clusters=c,
+                                             capacity=cap)
+    org = np.asarray(origin)
+    placed = org[org < b * cr]
+    assert len(placed) == b * cr and len(set(placed.tolist())) == b * cr
+    # payload carried correctly: origin slot row == query id feature
+    qb = np.asarray(q_buf)
+    for ci in range(c):
+        for s in range(cap):
+            o = org[ci, s]
+            if o < b * cr:
+                assert qb[ci, s, 0] == o // cr
+
+
+def test_cluster_dispatch_equals_gather_path(setup, rng):
+    """The distributed (expert-dispatch) query phase returns the same
+    top-k as the simple gather path for every query."""
+    cfg, params = setup
+    n, c, d = 160, 4, cfg.d_model
+    cap = 64
+    b, k = 8, 5
+
+    obj_emb = rng.normal(size=(n, d)).astype(np.float32)
+    obj_loc = rng.uniform(size=(n, 2)).astype(np.float32)
+    norm = il.loc_normalizer(jnp.asarray(obj_loc))
+    iparams = il.index_init(jax.random.PRNGKey(5), d, c, hidden=(16,))
+    feats = il.build_features(jnp.asarray(obj_emb), jnp.asarray(obj_loc),
+                              norm)
+    top = np.asarray(il.assign_clusters(iparams, feats, top=2))
+    buf = il.build_cluster_buffers(top, obj_emb, obj_loc, n_clusters=c,
+                                   capacity=cap)
+    w_hat = sp.extract_lookup(params["spatial"])
+
+    q_tokens = jnp.asarray(rng.integers(2, 512, (b, 8)), jnp.int32)
+    q_mask = jnp.ones((b, 8), bool)
+    q_loc = jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32)
+
+    ids_d, sc_d = serving.cluster_dispatch_query(
+        params, iparams, w_hat, norm, buf["emb"], buf["loc"], buf["ids"],
+        q_tokens, q_mask, q_loc, cfg, k=k, cr=1, dist_max=1.414,
+        capacity=b)   # capacity >= b: no dispatch drops
+
+    # simple gather path (core/pipeline.make_query_fn logic, inlined)
+    q_emb = relevance.encode_queries(params, q_tokens, q_mask, cfg)
+    qf = il.build_features(q_emb, q_loc, norm)
+    top_c, _ = il.route_queries(iparams, qf, cr=1)
+    cand_emb = buf["emb"][top_c].reshape(b, -1, d)
+    cand_loc = buf["loc"][top_c].reshape(b, -1, 2)
+    cand_ids = buf["ids"][top_c].reshape(b, -1)
+    w = relevance.st_weights(params, q_emb)
+    trel = jnp.einsum("bd,bnd->bn", q_emb, cand_emb)
+    dist = jnp.linalg.norm(q_loc[:, None] - cand_loc, axis=-1)
+    srel = sp.spatial_relevance_serve(
+        w_hat, 1.0 - jnp.clip(dist / 1.414, 0, 1))
+    st = w[:, :1] * trel + w[:, 1:] * srel
+    st = jnp.where(cand_ids >= 0, st, -jnp.inf)
+    sc_g, pos = jax.lax.top_k(st, k)
+    ids_g = jnp.take_along_axis(cand_ids, pos, axis=1)
+
+    finite = np.isfinite(np.asarray(sc_g))
+    np.testing.assert_allclose(np.asarray(sc_d)[finite],
+                               np.asarray(sc_g)[finite], rtol=1e-4,
+                               atol=1e-4)
+    assert (np.asarray(ids_d)[finite] == np.asarray(ids_g)[finite]).all()

@@ -1,0 +1,96 @@
+"""Spatial step-function module (paper Eq. 4–5): invariants + equivalences."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import spatial as sp
+
+
+def _params(t=50, seed=0):
+    return sp.spatial_init(jax.random.PRNGKey(seed), t)
+
+
+def test_train_serve_equivalence():
+    """Eq. 4 (indicator sum) == Eq. 5 (prefix-table lookup) at thresholds."""
+    t = 50
+    p = _params(t)
+    s_in = jnp.linspace(0.0, 0.999, 200)
+    train = sp.spatial_relevance_train(p, s_in, t=t)
+    w_hat = sp.extract_lookup(p)
+    serve = sp.spatial_relevance_serve(w_hat, s_in)
+    # serve table index floor(s*t) counts thresholds T[i]=i/t with T[i]<=s,
+    # minus the always-on T[0]=0 ... both count indicators; equal everywhere
+    np.testing.assert_allclose(np.asarray(train), np.asarray(serve),
+                               rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.given(
+    s1=st.floats(0.0, 1.0), s2=st.floats(0.0, 1.0),
+    seed=st.integers(0, 5))
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_monotone_nondecreasing(s1, s2, seed):
+    """SRel is monotonically non-decreasing in S_in BY CONSTRUCTION."""
+    p = _params(seed=seed)
+    lo, hi = min(s1, s2), max(s1, s2)
+    w_hat = sp.extract_lookup(p)
+    r_lo = float(sp.spatial_relevance_serve(w_hat, jnp.float32(lo)))
+    r_hi = float(sp.spatial_relevance_serve(w_hat, jnp.float32(hi)))
+    assert r_hi >= r_lo - 1e-6
+
+
+@hypothesis.given(st.integers(2, 200))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_lookup_is_prefix_sum(t):
+    p = _params(t=t)
+    w_hat = np.asarray(sp.extract_lookup(p))
+    w = np.asarray(jax.nn.softplus(p["w_s"]))
+    np.testing.assert_allclose(w_hat, np.cumsum(w), rtol=1e-5)
+    assert (np.diff(w_hat) >= 0).all()
+
+
+def test_gradient_flows_to_weights():
+    p = _params()
+    s_in = jnp.asarray([0.2, 0.5, 0.9])
+
+    def loss(pp):
+        return sp.spatial_relevance_train(pp, s_in, t=50).sum()
+
+    g = jax.grad(loss)(p)["w_s"]
+    assert float(jnp.abs(g).sum()) > 0
+
+
+def test_straight_through_gradient_to_input():
+    p = _params()
+
+    def loss(s):
+        return sp.spatial_relevance_train(p, s, t=50).sum()
+
+    g = jax.grad(loss)(jnp.asarray([0.5]))
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(g[0]) > 0  # closer (higher s_in) => higher relevance
+
+
+def test_serve_clipping():
+    p = _params()
+    w_hat = sp.extract_lookup(p)
+    out = sp.spatial_relevance_serve(w_hat, jnp.asarray([-0.5, 0.0, 1.0, 2.0]))
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(out[3]) == float(np.asarray(w_hat)[-1])
+
+
+def test_exp_ablation_nonnegative_monotone():
+    p = sp.exp_init(jax.random.PRNGKey(0))
+    s = jnp.linspace(0.01, 1.0, 50)
+    out = np.asarray(sp.exp_srel(p, s))
+    assert (out >= 0).all()
+    assert (np.diff(out) >= -1e-6).all()
+
+
+def test_sdist_range(rng):
+    q = jnp.asarray(rng.uniform(size=(10, 2)), jnp.float32)
+    o = jnp.asarray(rng.uniform(size=(10, 2)), jnp.float32)
+    d = np.asarray(sp.sdist(q, o, np.sqrt(2.0)))
+    assert (d >= 0).all() and (d <= 1).all()
