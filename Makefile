@@ -1,0 +1,19 @@
+# Tiers:
+#   make test        - tier-1: fast unit/parity tests (minutes)
+#   make test-slow   - everything, including e2e training + interpret-mode
+#                      decode sweeps (tens of minutes on CPU)
+#   make bench-smoke - CI-scale benchmark smoke (--fast settings)
+
+PY      := python
+PYPATH  := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}
+
+.PHONY: test test-slow bench-smoke
+
+test:
+	$(PYPATH) $(PY) -m pytest -x -q -m "not slow"
+
+test-slow:
+	$(PYPATH) $(PY) -m pytest -x -q
+
+bench-smoke:
+	$(PYPATH) $(PY) -m benchmarks.run --fast --only Kernel_fusion,Table4_memory

@@ -25,10 +25,18 @@ from repro.data import GeoCorpus, GeoCorpusConfig
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="legacy alias for --backend pallas")
+    ap.add_argument("--backend", default=None,
+                    choices=["pallas", "dense", "auto"],
+                    help="engine backend: pallas = gather-free fused "
+                         "kernel, dense = jnp reference, auto = per "
+                         "platform (core/engine.py)")
     ap.add_argument("--requests", type=int, default=128)
     ap.add_argument("--k", type=int, default=10)
     args = ap.parse_args()
+    from repro.core.engine import legacy_backend
+    backend = legacy_backend(args.backend, args.use_pallas)
 
     corpus = GeoCorpus(GeoCorpusConfig(
         n_objects=2000, n_queries=400, n_topics=12, vocab_size=4096, seed=0))
@@ -47,12 +55,11 @@ def main():
     req = te[: args.requests]
     positives = [corpus.positives[q] for q in req]
 
-    # gather path (optionally through the Pallas fused kernel)
+    # engine path (backend-selected: gather-free pallas kernel or dense)
     t0 = time.time()
-    ids_g, sc_g = r.query(req, k=args.k, cr=1, use_pallas=args.use_pallas,
-                          batch=64)
+    ids_g, sc_g = r.query(req, k=args.k, cr=1, backend=backend, batch=64)
     t_g = time.time() - t0
-    print(f"gather path ({'pallas' if args.use_pallas else 'jnp'}): "
+    print(f"engine path ({backend}): "
           f"recall@{args.k}={cm.recall_at_k(ids_g, positives, args.k):.3f} "
           f"{t_g:.2f}s for {len(req)} requests")
 
@@ -60,20 +67,20 @@ def main():
     tok, msk = corpus.query_tokens(req)
     w_hat = sp.extract_lookup(r.rel_params["spatial"])
     t0 = time.time()
-    ids_d, sc_d = serving.cluster_dispatch_query(
+    ids_d, sc_d, n_dropped = serving.cluster_dispatch_query(
         r.rel_params, r.index_params, w_hat, r.norm,
         r.buffers["emb"], r.buffers["loc"], r.buffers["ids"],
         jnp.asarray(tok), jnp.asarray(msk),
         jnp.asarray(corpus.q_loc[req].astype(np.float32)), cfg,
-        k=args.k, cr=1, dist_max=corpus.dist_max)
+        k=args.k, cr=1, dist_max=corpus.dist_max, return_dropped=True)
     t_d = time.time() - t0
     print(f"dispatch path (clusters-as-experts): "
           f"recall@{args.k}={cm.recall_at_k(np.asarray(ids_d), positives, args.k):.3f} "
-          f"{t_d:.2f}s")
+          f"{t_d:.2f}s  dropped={int(n_dropped)} (query, route) pairs")
 
     agree = (np.asarray(ids_d) == ids_g).mean()
     print(f"paths agree on {agree:.1%} of returned ids "
-          f"(drops from dispatch capacity account for the rest)")
+          f"({int(n_dropped)} capacity drops account for the rest)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,278 @@
+"""Unified LIST query engine (DESIGN.md §3–§5).
+
+Every query-phase consumer — :class:`~repro.core.pipeline.ListRetriever`,
+the distributed dispatch path (core/serving.py), the baselines' reranker,
+and the benchmarks — goes through this module. It owns the three things
+that used to be duplicated (and therefore drifted) across them:
+
+1. **Backend selection.** ``backend="pallas" | "dense" | "auto"``:
+
+   * ``"pallas"`` — the gather-free fused kernel
+     (kernels/fused_topk_score_routed): routed cluster ids are
+     scalar-prefetched and the resident ``(c, cap, d)`` buffers are
+     block-indexed directly, so no ``(B, cr·cap, d)`` candidate copy is
+     ever materialized and the ``cr`` routed lists merge in-kernel.
+   * ``"dense"`` — the pure-jnp reference path (gather + one
+     ``jax.lax.top_k``). Always available, and the parity oracle.
+   * ``"auto"`` — ``"pallas"`` when a compiled TPU backend is present,
+     else ``"dense"`` (interpret-mode Pallas is a correctness tool, not a
+     fast path).
+
+   ``interpret`` for the Pallas kernels is auto-detected from the
+   platform (off-TPU ⇒ interpreter) and can be forced with the
+   ``REPRO_PALLAS_COMPILE=1`` env var, matching kernels/ops.py.
+
+2. **The ``score_candidates`` primitive.** One dense ST(q, o) scorer
+   (Eq. 5 serve form) with leading-dim broadcasting, used by the engine's
+   dense backend, serving's per-cluster batched score, and the baselines'
+   candidate reranking — so "the score" has exactly one definition.
+
+3. **Static-shape batch padding.** :func:`run_batched` pads the trailing
+   partial batch to the jitted batch shape (one compile per shape) and
+   trims the outputs; previously re-implemented in ``query``,
+   ``brute_force``, and ``_embed``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import index as index_lib
+from repro.core import relevance
+from repro.core import spatial as sp
+
+NEG_INF = -1e30
+
+BACKENDS = ("pallas", "dense", "auto")
+
+
+# ---------------------------------------------------------------------------
+# Backend selection
+# ---------------------------------------------------------------------------
+
+
+def default_interpret() -> bool:
+    """Interpret-mode default for the Pallas kernels: compiled on TPU (or
+    when forced via REPRO_PALLAS_COMPILE=1), interpreted everywhere else.
+    Shared with kernels/ops.py so every entry point agrees."""
+    from repro.kernels import ops as kops
+    return kops._interpret_default()
+
+
+def resolve_backend(backend: str = "auto",
+                    interpret: Optional[bool] = None) -> Tuple[str, bool]:
+    """→ (backend ∈ {"pallas", "dense"}, interpret flag for pallas).
+
+    "auto" keys on the HARDWARE (pallas iff a TPU backend is present),
+    not on the interpret flag — REPRO_PALLAS_COMPILE=1 on a CPU host
+    must not route auto callers into a Mosaic lowering that cannot
+    compile there."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    interpret = default_interpret() if interpret is None else interpret
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "dense"
+    return backend, interpret
+
+
+def legacy_backend(backend: Optional[str], use_pallas: bool) -> str:
+    """Resolve the legacy ``use_pallas`` flag: an explicit ``backend``
+    always wins; otherwise the bool maps to pallas/dense. The single
+    definition of this alias rule for every entry point."""
+    if backend is not None:
+        return backend
+    return "pallas" if use_pallas else "dense"
+
+
+# ---------------------------------------------------------------------------
+# The one scoring primitive (Eq. 5 serve form)
+# ---------------------------------------------------------------------------
+
+
+def score_candidates(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
+                     w_hat, *, dist_max: float):
+    """ST(q, o) = w_t·(q·o) + w_s·ŵ_s[⌊S_in·t⌋] over explicit candidates.
+
+    Shapes broadcast over leading dims: q_emb (..., d), q_loc (..., 2),
+    w_st (..., 2) against cand_emb (..., N, d), cand_loc (..., N, 2),
+    cand_ids (..., N). Returns (..., N) f32 with padding (ids < 0) masked
+    to NEG_INF (-1e30, finite — NOT -inf: the Pallas kernels use the same
+    sentinel, keeping backends bit-identical; filter results by
+    ``ids >= 0``, not ``isfinite(score)``). Callers:
+
+    * engine dense backend:  q (B, d)    × cand (B, N, d)
+    * serving per-cluster:   q (c, Q, d) × cand (c, 1, cap, d)
+    * baselines rerank:      q (d,)      × cand (N, d)
+    """
+    trel = jnp.einsum("...d,...nd->...n", q_emb.astype(jnp.float32),
+                      cand_emb.astype(jnp.float32))
+    d = jnp.linalg.norm(q_loc[..., None, :].astype(jnp.float32)
+                        - cand_loc.astype(jnp.float32), axis=-1)
+    s_in = 1.0 - jnp.clip(d / dist_max, 0.0, 1.0)
+    srel = sp.spatial_relevance_serve(w_hat, s_in)
+    st = w_st[..., :1] * trel + w_st[..., 1:2] * srel
+    return jnp.where(cand_ids >= 0, st, NEG_INF)
+
+
+def dense_routed_topk(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc, buf_ids,
+                      w_hat, *, k: int, dist_max: float):
+    """Dense reference for the routed query phase: gather + one top-k.
+
+    Returns (scores (B, k), ids (B, k) global object ids, -1 past-the-end)
+    — the exact contract of kernels/fused_topk_score_routed.
+    """
+    b = q_emb.shape[0]
+    cand_emb = buf_emb[top_c].reshape(b, -1, buf_emb.shape[-1])
+    cand_loc = buf_loc[top_c].reshape(b, -1, 2)
+    cand_ids = buf_ids[top_c].reshape(b, -1)
+    st = score_candidates(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
+                          w_hat, dist_max=dist_max)
+    scores, pos = jax.lax.top_k(st, k)
+    ids = jnp.take_along_axis(cand_ids, pos, axis=1)
+    return scores, ids
+
+
+# ---------------------------------------------------------------------------
+# The routed query phase: encode → route → score → top-k
+# ---------------------------------------------------------------------------
+
+
+def make_query_fn(cfg, *, cr: int = 1, k: int = 20, backend: str = "auto",
+                  interpret: Optional[bool] = None,
+                  dist_max: float = 1.4142, weight_mode: str = "mlp",
+                  block_n: int = 512):
+    """Build the jitted query-phase function (paper Algorithm 1).
+
+    signature: fn(rel_params, index_params, w_hat, norm,
+                  buf_emb, buf_loc, buf_ids, q_tokens, q_mask, q_loc)
+               -> (ids (B, k) global object ids, scores (B, k))
+
+    ``backend="pallas"`` runs gather-free (scalar-prefetched routing into
+    the resident buffers, in-kernel cr-merge); ``"dense"`` is the jnp
+    reference (gather + top-k); ``"auto"`` picks per platform.
+    """
+    backend, interpret = resolve_backend(backend, interpret)
+
+    def query_fn(rel_params, index_params, w_hat, norm, buf_emb, buf_loc,
+                 buf_ids, q_tokens, q_mask, q_loc):
+        q_emb = relevance.encode_queries(rel_params, q_tokens, q_mask, cfg)
+        feats = index_lib.build_features(q_emb, q_loc, norm)
+        top_c, _ = index_lib.route_queries(index_params, feats, cr=cr)
+        w = relevance.st_weights(rel_params, q_emb,
+                                 weight_mode=weight_mode)          # (B, 2)
+        if backend == "pallas":
+            from repro.kernels import fused_topk_score as fts
+            score, ids = fts.fused_topk_score_routed(
+                q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids, w_hat,
+                k=k, dist_max=dist_max, block_n=block_n,
+                interpret=interpret)
+        else:
+            score, ids = dense_routed_topk(
+                q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids, w_hat,
+                k=k, dist_max=dist_max)
+        return ids, score
+
+    return jax.jit(query_fn)
+
+
+# ---------------------------------------------------------------------------
+# Static-shape batch padding (one compile per batch shape)
+# ---------------------------------------------------------------------------
+
+
+def pad_leading(arr, batch: int):
+    """Zero-pad axis 0 of ``arr`` up to ``batch`` rows (numpy, no-op jit)."""
+    n = arr.shape[0]
+    if n == batch:
+        return arr
+    assert n < batch, (n, batch)
+    return np.pad(arr, ((0, batch - n),) + ((0, 0),) * (arr.ndim - 1))
+
+
+def run_batched(fn: Callable, arrays: Sequence[np.ndarray], *, batch: int):
+    """Map a jitted ``fn`` over ``arrays`` in static-shape chunks.
+
+    Every chunk fed to ``fn`` has exactly ``batch`` rows (the trailing
+    partial chunk is zero-padded, outputs trimmed) so the jit compiles
+    once. ``fn(*chunks) -> array | tuple``; returns np.ndarray(s)
+    concatenated back to the full leading dim.
+    """
+    n = arrays[0].shape[0]
+    assert all(a.shape[0] == n for a in arrays), [a.shape for a in arrays]
+    outs = None
+    for s in range(0, n, batch):
+        e = min(s + batch, n)
+        chunk = [pad_leading(np.asarray(a[s:e]), batch) for a in arrays]
+        res = fn(*[jnp.asarray(c) for c in chunk])
+        res = res if isinstance(res, (tuple, list)) else (res,)
+        if outs is None:
+            outs = [[] for _ in res]
+        for o, r in zip(outs, res):
+            o.append(np.asarray(r)[: e - s])
+    cat = tuple(np.concatenate(o, axis=0) for o in outs)
+    return cat if len(cat) > 1 else cat[0]
+
+
+# ---------------------------------------------------------------------------
+# Stateful façade
+# ---------------------------------------------------------------------------
+
+
+class QueryEngine:
+    """Bound (params + buffers) query engine with cached jitted plans.
+
+    Both the single-host path (``ListRetriever.query``) and callers that
+    hold raw artifacts use this; the distributed dispatch path shares
+    :func:`score_candidates` instead (its data movement is the point).
+    """
+
+    def __init__(self, cfg, rel_params, index_params, norm, buffers, *,
+                 dist_max: float, spatial_mode: str = "step",
+                 weight_mode: str = "mlp", backend: str = "auto",
+                 interpret: Optional[bool] = None):
+        self.cfg = cfg
+        self.rel_params = rel_params
+        self.index_params = index_params
+        self.norm = norm
+        self.buffers = buffers
+        self.dist_max = float(dist_max)
+        self.spatial_mode = spatial_mode
+        self.weight_mode = weight_mode
+        self.backend, self.interpret = resolve_backend(backend, interpret)
+        self._plans = {}
+
+    @property
+    def w_hat(self):
+        """Serve-form step table (Eq. 5), recomputed from the CURRENT
+        rel_params on every access — in-place updates of the spatial
+        sub-params are picked up without rebuilding the engine (it's a
+        jit argument, so no recompile either)."""
+        if self.spatial_mode == "step":
+            return sp.extract_lookup(self.rel_params["spatial"])
+        return jnp.linspace(0, 1, self.cfg.spatial_t)
+
+    def query_fn(self, *, k: int, cr: int, backend: Optional[str] = None):
+        backend = self.backend if backend is None else backend
+        key = (k, cr, backend)
+        if key not in self._plans:
+            self._plans[key] = make_query_fn(
+                self.cfg, cr=cr, k=k, backend=backend,
+                interpret=self.interpret, dist_max=self.dist_max,
+                weight_mode=self.weight_mode)
+        return self._plans[key]
+
+    def query(self, q_tokens, q_mask, q_loc, *, k: int = 20, cr: int = 1,
+              batch: int = 256, backend: Optional[str] = None):
+        """Batched routed query: (ids (n, k), scores (n, k)) numpy."""
+        fn = self.query_fn(k=k, cr=cr, backend=backend)
+        buf = self.buffers
+        w_hat = self.w_hat          # once per call, not per chunk
+        return run_batched(
+            lambda t, m, l: fn(self.rel_params, self.index_params,
+                               w_hat, self.norm, buf["emb"], buf["loc"],
+                               buf["ids"], t, m, l),
+            [q_tokens, q_mask, q_loc], batch=batch)

@@ -178,7 +178,15 @@ def route_queries(params, q_feats, *, cr: int = 1):
 
 
 def insert_objects(buffers, params, norm, new_emb, new_loc, new_ids):
-    """Route new objects through the trained index into their buffers."""
+    """Route new objects through the trained index into their buffers.
+
+    Falls back to the least-loaded cluster when the routed one is full;
+    if even that cluster has no free slot (the whole index is at
+    capacity) a ValueError is raised. Writes go to the first FREE slot
+    (``id == -1``) rather than ``counts[ci]`` — after delete_objects a
+    cluster has interior holes, and slot ``counts[ci]`` may hold a live
+    object (regression: tests/test_index_mutation.py).
+    """
     feats = build_features(new_emb, new_loc, norm)
     cl = np.asarray(assign_clusters(params, feats))
     emb_np = {k: np.asarray(v).copy() for k, v in buffers.items()
@@ -188,8 +196,17 @@ def insert_objects(buffers, params, norm, new_emb, new_loc, new_ids):
     for j, ci in enumerate(cl):
         ci = int(ci)
         if counts[ci] >= cap:
-            ci = int(np.argmin(counts))
-        slot = counts[ci]
+            ci = int(np.argmin(counts))       # least-loaded fallback
+        if counts[ci] >= cap:                 # fallback full too: all full
+            raise ValueError(
+                f"insert_objects: all clusters at capacity {cap} "
+                f"(inserted {j}/{len(cl)}); rebuild with higher capacity")
+        free = np.flatnonzero(emb_np["ids"][ci] < 0)
+        if free.size == 0:                    # counts out of sync with ids
+            raise ValueError(
+                f"insert_objects: cluster {ci} reports {counts[ci]} < "
+                f"cap={cap} but has no free slot; counts/ids inconsistent")
+        slot = int(free[0])
         emb_np["emb"][ci, slot] = np.asarray(new_emb[j])
         emb_np["loc"][ci, slot] = np.asarray(new_loc[j])
         emb_np["ids"][ci, slot] = int(new_ids[j])

@@ -8,9 +8,13 @@ Public API is the :class:`ListRetriever`:
     retriever.build()                        # indexing phase (cluster buffers)
     ids, scores = retriever.query(q_ids, k)  # query phase (route+score+topk)
 
-The query phase is a single jitted program: encode → features → route →
-gather cluster buffer → fused score → top-k. ``use_pallas=True`` swaps the
-score+topk inner loop for the Pallas kernel (kernels/fused_topk_score).
+The query phase is a single jitted program owned by the unified engine
+(core/engine.py): encode → features → route → fused score → top-k.
+``backend="pallas"`` (or the legacy ``use_pallas=True``) runs the
+GATHER-FREE kernel (kernels/fused_topk_score_routed): routed cluster ids
+are scalar-prefetched and the resident (c, cap, d) buffers block-indexed
+directly, so no (B, cr·cap, d) candidate copy is materialized and cr > 1
+merges in-kernel. ``backend="dense"`` is the jnp reference path.
 """
 from __future__ import annotations
 
@@ -22,6 +26,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine as engine_lib
 from repro.core import index as index_lib
 from repro.core import pseudo_labels, relevance
 from repro.core import spatial as sp
@@ -48,18 +53,8 @@ def embed_queries(params, corpus, cfg, query_ids=None, *,
 
 
 def _embed(encode, tokens, mask, batch):
-    n = tokens.shape[0]
     jfn = jax.jit(lambda t, m: encode(t, m))
-    outs = []
-    for s in range(0, n, batch):
-        e = min(s + batch, n)
-        t, m = tokens[s:e], mask[s:e]
-        if e - s < batch:  # pad to static shape to avoid recompiles
-            pad = batch - (e - s)
-            t = np.pad(t, ((0, pad), (0, 0)))
-            m = np.pad(m, ((0, pad), (0, 0)))
-        outs.append(np.asarray(jfn(t, m))[: e - s])
-    return np.concatenate(outs, axis=0)
+    return engine_lib.run_batched(jfn, [tokens, mask], batch=batch)
 
 
 # ---------------------------------------------------------------------------
@@ -226,47 +221,28 @@ def train_cluster_index(rel_params, corpus, cfg, *, obj_emb=None,
 
 
 # ---------------------------------------------------------------------------
-# Query phase (jitted): route → gather buffers → score → top-k
+# Query phase (jitted): route → score resident buffers → top-k
 # ---------------------------------------------------------------------------
 
 
 def make_query_fn(cfg, *, cr: int = 1, k: int = 20, use_pallas: bool = False,
-                  interpret: bool = True, dist_max: float = 1.4142):
-    """Build the jitted query-phase function.
+                  backend: Optional[str] = None,
+                  interpret: Optional[bool] = None,
+                  dist_max: float = 1.4142, weight_mode: str = "mlp"):
+    """Build the jitted query-phase function (thin wrapper over
+    core/engine.make_query_fn, kept for back-compat).
 
-    signature: fn(rel_params, index_params, w_hat, norm, buffers,
-                  q_tokens, q_mask, q_loc) -> (ids (B,k), scores (B,k))
+    signature: fn(rel_params, index_params, w_hat, norm,
+                  buf_emb, buf_loc, buf_ids, q_tokens, q_mask, q_loc)
+               -> (ids (B, k), scores (B, k))
+
+    ``use_pallas`` is the legacy alias for ``backend="pallas"``; prefer
+    ``backend`` ("pallas" | "dense" | "auto").
     """
-
-    def query_fn(rel_params, index_params, w_hat, norm, buf_emb, buf_loc,
-                 buf_ids, q_tokens, q_mask, q_loc):
-        q_emb = relevance.encode_queries(rel_params, q_tokens, q_mask, cfg)
-        feats = index_lib.build_features(q_emb, q_loc, norm)
-        top_c, _ = index_lib.route_queries(index_params, feats, cr=cr)  # (B,cr)
-
-        # gather routed cluster buffers: (B, cr·cap, ...)
-        cand_emb = buf_emb[top_c].reshape(q_emb.shape[0], -1, buf_emb.shape[-1])
-        cand_loc = buf_loc[top_c].reshape(q_emb.shape[0], -1, 2)
-        cand_ids = buf_ids[top_c].reshape(q_emb.shape[0], -1)
-
-        w = relevance.st_weights(rel_params, q_emb)                 # (B, 2)
-        if use_pallas:
-            from repro.kernels import ops as kops
-            score, loc_idx = kops.fused_topk_score(
-                q_emb, q_loc, w, cand_emb, cand_loc, cand_ids, w_hat,
-                k=k, dist_max=dist_max, interpret=interpret)
-        else:
-            trel = jnp.einsum("bd,bnd->bn", q_emb, cand_emb)
-            d = jnp.linalg.norm(q_loc[:, None] - cand_loc, axis=-1)
-            s_in = 1.0 - jnp.clip(d / dist_max, 0.0, 1.0)
-            srel = sp.spatial_relevance_serve(w_hat, s_in)
-            st = w[:, :1] * trel + w[:, 1:] * srel
-            st = jnp.where(cand_ids >= 0, st, -jnp.inf)             # pads out
-            score, loc_idx = jax.lax.top_k(st, k)
-        ids = jnp.take_along_axis(cand_ids, loc_idx, axis=1)
-        return ids, score
-
-    return jax.jit(query_fn)
+    backend = engine_lib.legacy_backend(backend, use_pallas)
+    return engine_lib.make_query_fn(
+        cfg, cr=cr, k=k, backend=backend, interpret=interpret,
+        dist_max=dist_max, weight_mode=weight_mode)
 
 
 # ---------------------------------------------------------------------------
@@ -324,38 +300,41 @@ class ListRetriever:
             np.asarray(top), self.obj_emb, obj_loc,
             n_clusters=self.cfg.n_clusters, capacity=capacity, spill=spill)
         self.obj_assign = np.asarray(top[:, 0])
+        self._engine = None            # buffers changed: invalidate plans
         return self.buffers
 
     # --- query phase --------------------------------------------------------
 
-    def query(self, query_ids, *, k: int = 20, cr: int = 1,
-              use_pallas: bool = False, batch: int = 256):
+    def engine(self) -> engine_lib.QueryEngine:
+        """The bound query engine (built lazily after build()).
+
+        Rebuilt whenever the retriever's params/buffers objects are
+        swapped (retraining, insert_objects/delete_objects returning new
+        buffer dicts) so queries never serve a stale snapshot."""
         assert self.buffers is not None, "build() first"
-        w_hat = (sp.extract_lookup(self.rel_params["spatial"])
-                 if self.spatial_mode == "step"
-                 else jnp.linspace(0, 1, self.cfg.spatial_t))
-        fn = make_query_fn(self.cfg, cr=cr, k=k, use_pallas=use_pallas,
-                           dist_max=float(self.corpus.dist_max))
+        key = (id(self.rel_params), id(self.index_params), id(self.norm),
+               id(self.buffers))
+        if (getattr(self, "_engine", None) is None
+                or getattr(self, "_engine_key", None) != key):
+            self._engine = engine_lib.QueryEngine(
+                self.cfg, self.rel_params, self.index_params, self.norm,
+                self.buffers, dist_max=float(self.corpus.dist_max),
+                spatial_mode=self.spatial_mode, weight_mode=self.weight_mode)
+            self._engine_key = key
+        return self._engine
+
+    def query(self, query_ids, *, k: int = 20, cr: int = 1,
+              use_pallas: bool = False, backend: Optional[str] = None,
+              batch: int = 256):
+        backend = engine_lib.legacy_backend(backend, use_pallas)
+        eng = self.engine()
         tokens, mask = self.corpus.query_tokens(query_ids)
         q_loc = self.corpus.q_loc[query_ids].astype(np.float32)
-        ids_out, sc_out = [], []
         t0 = time.perf_counter()
-        for s in range(0, len(query_ids), batch):
-            e = min(s + batch, len(query_ids))
-            t, m, l = tokens[s:e], mask[s:e], q_loc[s:e]
-            if e - s < batch:
-                pad = batch - (e - s)
-                t = np.pad(t, ((0, pad), (0, 0)))
-                m = np.pad(m, ((0, pad), (0, 0)))
-                l = np.pad(l, ((0, pad), (0, 0)))
-            ids, sc = fn(self.rel_params, self.index_params, w_hat, self.norm,
-                         self.buffers["emb"], self.buffers["loc"],
-                         self.buffers["ids"], jnp.asarray(t), jnp.asarray(m),
-                         jnp.asarray(l))
-            ids_out.append(np.asarray(ids)[: e - s])
-            sc_out.append(np.asarray(sc)[: e - s])
+        ids, sc = eng.query(tokens, mask, q_loc, k=k, cr=cr, batch=batch,
+                            backend=backend)
         self.last_query_seconds = time.perf_counter() - t0
-        return np.concatenate(ids_out), np.concatenate(sc_out)
+        return ids, sc
 
     # --- brute force (LIST-R over the whole corpus) -------------------------
 
@@ -364,7 +343,6 @@ class ListRetriever:
                               query_ids, batch=batch)
         q_loc = self.corpus.q_loc[query_ids].astype(np.float32)
         obj_loc = self.corpus.obj_loc.astype(np.float32)
-        outs, scs = [], []
 
         @jax.jit
         def score_top(qe, ql):
@@ -373,21 +351,14 @@ class ListRetriever:
                 jnp.asarray(obj_loc), self.cfg, dist_max=self.corpus.dist_max,
                 spatial_mode=self.spatial_mode, weight_mode=self.weight_mode,
                 train=False)
-            return jax.lax.top_k(st, k)
+            sc, ids = jax.lax.top_k(st, k)
+            return ids, sc
 
         t0 = time.perf_counter()
-        for s in range(0, len(query_ids), batch):
-            e = min(s + batch, len(query_ids))
-            qe, ql = q_emb[s:e], q_loc[s:e]
-            if e - s < batch:
-                pad = batch - (e - s)
-                qe = np.pad(qe, ((0, pad), (0, 0)))
-                ql = np.pad(ql, ((0, pad), (0, 0)))
-            sc, ids = score_top(jnp.asarray(qe), jnp.asarray(ql))
-            outs.append(np.asarray(ids)[: e - s])
-            scs.append(np.asarray(sc)[: e - s])
+        ids, sc = engine_lib.run_batched(score_top, [q_emb, q_loc],
+                                         batch=batch)
         self.last_query_seconds = time.perf_counter() - t0
-        return np.concatenate(outs), np.concatenate(scs)
+        return ids, sc
 
     # --- embedding accessor for baselines -----------------------------------
 
@@ -398,22 +369,23 @@ class ListRetriever:
 
     def score_fn(self):
         """score_fn(query_row_embedding context) for baseline reranking:
-        returns fn(q_emb_row, q_loc_row, cand_ids) -> scores."""
+        returns fn(q_emb_row, q_loc_row, cand_ids) -> scores.
+
+        Scoring goes through the engine's single ``score_candidates``
+        primitive so reranked baselines use the exact serve-path ST."""
         obj_loc = self.corpus.obj_loc.astype(np.float32)
         w_hat = (sp.extract_lookup(self.rel_params["spatial"])
-                 if self.spatial_mode == "step" else None)
+                 if self.spatial_mode == "step"
+                 else jnp.linspace(0, 1, self.cfg.spatial_t))
 
         def fn(q_emb_row, q_loc_row, cand):
             ce = jnp.asarray(self.obj_emb[cand])
             cl = jnp.asarray(obj_loc[cand])
-            trel = ce @ q_emb_row
-            d = jnp.linalg.norm(q_loc_row[None] - cl, axis=-1)
-            s_in = 1.0 - jnp.clip(d / self.corpus.dist_max, 0.0, 1.0)
-            if self.spatial_mode == "step":
-                srel = sp.spatial_relevance_serve(w_hat, s_in)
-            else:
-                srel = s_in
             w = relevance.st_weights(self.rel_params, q_emb_row[None],
                                      weight_mode=self.weight_mode)[0]
-            return np.asarray(w[0] * trel + w[1] * srel)
+            st = engine_lib.score_candidates(
+                q_emb_row, q_loc_row, w, ce, cl,
+                jnp.asarray(cand, jnp.int32), w_hat,
+                dist_max=float(self.corpus.dist_max))
+            return np.asarray(st)
         return fn

@@ -27,9 +27,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine as engine_lib
 from repro.core import index as index_lib
 from repro.core import relevance
-from repro.core import spatial as sp
 from repro.distributed.sharding import constrain
 
 
@@ -44,7 +44,12 @@ def dispatch_queries(top_c, q_feat, *, n_clusters: int, capacity: int):
 
     top_c: (B, cr) routed clusters; q_feat: (B, f) payload to dispatch.
     Returns (q_buf (c, Qcap, f), origin (c, Qcap) int32 in [0, B·cr],
-    pad row = B·cr).
+    pad row = B·cr, n_dropped () int32).
+
+    ``n_dropped`` counts (query, route) pairs that exceeded a cluster's
+    capacity and were NOT placed — overflow is surfaced, never silently
+    truncated. Callers decide whether to raise capacity or accept the
+    recall loss (the merged cr lists degrade gracefully).
     """
     b, cr = top_c.shape
     n = b * cr
@@ -58,6 +63,7 @@ def dispatch_queries(top_c, q_feat, *, n_clusters: int, capacity: int):
     pos = ar - run_start
     keep = pos < capacity
     slot = jnp.where(keep, sorted_c * capacity + pos, n_clusters * capacity)
+    n_dropped = jnp.sum(~keep).astype(jnp.int32)
 
     origin = jnp.full((n_clusters * capacity + 1,), n, jnp.int32)
     origin = origin.at[slot].set(sort_idx.astype(jnp.int32))
@@ -66,15 +72,17 @@ def dispatch_queries(top_c, q_feat, *, n_clusters: int, capacity: int):
     fpad = jnp.concatenate([q_feat[jnp.repeat(jnp.arange(b), cr)],
                             jnp.zeros((1,) + q_feat.shape[1:], q_feat.dtype)])
     q_buf = fpad[jnp.where(origin < n, origin, n)]
-    return q_buf, origin
+    return q_buf, origin, n_dropped
 
 
 def cluster_dispatch_query(rel_params, index_params, w_hat, norm,
                            buf_emb, buf_loc, buf_ids,
                            q_tokens, q_mask, q_loc, cfg, *,
                            k: int = 20, cr: int = 1, dist_max: float = 1.0,
-                           capacity: Optional[int] = None):
-    """The distributed query phase. Returns (ids (B, k), scores (B, k)).
+                           capacity: Optional[int] = None,
+                           return_dropped: bool = False):
+    """The distributed query phase. Returns (ids (B, k), scores (B, k)),
+    plus the dispatch overflow count n_dropped () when ``return_dropped``.
 
     buf_emb (c, cap, d) / buf_loc (c, cap, 2) / buf_ids (c, cap): the padded
     cluster buffers, sharded cluster-major ("all") on the production mesh.
@@ -92,21 +100,18 @@ def cluster_dispatch_query(rel_params, index_params, w_hat, norm,
     # 2. dispatch query payloads [emb, loc, w] to their clusters
     payload = jnp.concatenate(
         [q_emb, q_loc.astype(q_emb.dtype), w.astype(q_emb.dtype)], axis=-1)
-    q_buf, origin = dispatch_queries(top_c, payload,
-                                     n_clusters=c, capacity=qcap)
+    q_buf, origin, n_dropped = dispatch_queries(top_c, payload,
+                                                n_clusters=c, capacity=qcap)
     q_buf = constrain(q_buf, "all", None, None)     # (c, Qcap, d+4)
     qe = q_buf[..., :d]
     ql = q_buf[..., d:d + 2].astype(jnp.float32)
     qw = q_buf[..., d + 2:].astype(jnp.float32)
 
-    # 3. fused score per cluster — each chip against its resident shard
-    trel = jnp.einsum("cqd,ckd->cqk", qe, buf_emb)
-    dist = jnp.linalg.norm(ql[:, :, None, :] - buf_loc[:, None, :, :],
-                           axis=-1)
-    s_in = 1.0 - jnp.clip(dist / dist_max, 0.0, 1.0)
-    srel = sp.spatial_relevance_serve(w_hat, s_in)
-    st = qw[..., 0:1] * trel + qw[..., 1:2] * srel
-    st = jnp.where(buf_ids[:, None, :] >= 0, st, -jnp.inf)
+    # 3. fused score per cluster — each chip against its resident shard;
+    # the engine's score_candidates broadcasts (c, Q, d) × (c, 1, cap, d)
+    st = engine_lib.score_candidates(
+        qe, ql, qw, buf_emb[:, None], buf_loc[:, None], buf_ids[:, None],
+        w_hat, dist_max=dist_max)
     st = constrain(st, "all", None, None)
 
     # 4. per-cluster top-k, then undispatch + merge the cr candidate lists
@@ -127,4 +132,6 @@ def cluster_dispatch_query(rel_params, index_params, w_hat, norm,
     per_q_i = back_i[:n].reshape(b, cr * k)
     fv, fpos = jax.lax.top_k(per_q_v, k)
     fi = jnp.take_along_axis(per_q_i, fpos, axis=1)
+    if return_dropped:
+        return fi, fv, n_dropped
     return fi, fv

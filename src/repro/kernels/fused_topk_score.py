@@ -15,6 +15,22 @@ select into one pass is what reaches the HBM roofline.
 
 Grid: (B/block_m, N/block_n), last dim innermost (sequential) so output
 revisiting is legal on TPU.
+
+Two variants live here:
+
+* :func:`fused_topk_score` — the original gather-path kernel. The caller
+  materializes a ``(B, cr·cap, d)`` candidate copy (``buf[top_c]``) and the
+  kernel streams that copy. Simple, but the gather itself is an HBM round
+  trip the size of the scanned corpus slice.
+* :func:`fused_topk_score_routed` — the gather-free kernel (DESIGN.md §4).
+  The routed cluster ids are **scalar-prefetched**
+  (``pltpu.PrefetchScalarGridSpec``) so the BlockSpec index maps can
+  block-index the resident ``(c, cap, d)`` buffers directly: grid step
+  ``(b, r, j)`` DMAs tile ``j`` of cluster ``top_c[b, r]`` straight from the
+  buffer — no candidate copy exists at any point, and the ``cr`` routed
+  lists merge into one running top-k in VMEM instead of a second host-side
+  top-k. Output ids are global object ids (taken from ``buf_ids`` in-kernel)
+  so the caller needs no ``take_along_axis`` either.
 """
 from __future__ import annotations
 
@@ -23,6 +39,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
@@ -107,3 +124,115 @@ def fused_topk_score(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
         out_shape=out_shape,
         interpret=interpret,
     )(q_emb, q_loc, w_st, w_hat, cand_emb, cand_loc, cand_ids)
+
+
+# ---------------------------------------------------------------------------
+# Gather-free variant: scalar-prefetched routing into resident buffers
+# ---------------------------------------------------------------------------
+
+
+def _routed_kernel(tc_ref, q_ref, loc_ref, w_ref, wh_ref,
+                   be_ref, bl_ref, bi_ref, os_ref, oi_ref, *,
+                   k: int, t: int, dist_max: float):
+    r = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when((r == 0) & (j == 0))
+    def _init():
+        os_ref[...] = jnp.full_like(os_ref, NEG_INF)
+        oi_ref[...] = jnp.full_like(oi_ref, -1)
+
+    q = q_ref[...].astype(jnp.float32)              # (1, d)
+    ce = be_ref[...][0].astype(jnp.float32)         # (bn, d)
+    trel = jax.lax.dot_general(
+        q, ce, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (1, bn)
+
+    dloc = loc_ref[...][:, None, :] - bl_ref[...]    # (1, bn, 2)
+    dist = jnp.sqrt(jnp.sum(dloc * dloc, axis=-1))   # (1, bn)
+    s_in = 1.0 - jnp.clip(dist / dist_max, 0.0, 1.0)
+    idx = jnp.clip((s_in * t).astype(jnp.int32), 0, t - 1)
+    srel = jnp.take(wh_ref[...], idx)                # (1, bn)
+
+    w = w_ref[...].astype(jnp.float32)               # (1, 2)
+    st = w[:, :1] * trel + w[:, 1:2] * srel
+    ids = bi_ref[...]                                # (1, bn) object ids
+    st = jnp.where(ids >= 0, st, NEG_INF)            # mask buffer padding
+
+    # merge with the running top-k held in the revisited output block;
+    # carrying OBJECT ids (not positions) makes cr-merge order-free
+    cat_s = jnp.concatenate([os_ref[...], st], axis=1)   # (1, k+bn)
+    cat_i = jnp.concatenate([oi_ref[...], ids], axis=1)
+    vals, pos = jax.lax.top_k(cat_s, k)
+    os_ref[...] = vals
+    oi_ref[...] = jnp.take_along_axis(cat_i, pos, axis=1)
+
+
+def fused_topk_score_routed(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc,
+                            buf_ids, w_hat, *, k: int, dist_max: float,
+                            block_n: int = 512, interpret: bool = True):
+    """Gather-free fused score + top-k over routed cluster buffers.
+
+    q_emb (B, d); q_loc (B, 2); w_st (B, 2); top_c (B, cr) int32 routed
+    cluster ids (scalar-prefetched); buf_emb (c, cap, d); buf_loc
+    (c, cap, 2); buf_ids (c, cap) int32 (-1 pad); w_hat (t,) f32.
+
+    Returns (scores (B, k) f32, ids (B, k) i32 **global object ids**,
+    -1 where fewer than k valid candidates exist). The ``(B, cr·cap, d)``
+    candidate copy of the gather path never materializes: grid step
+    ``(b, r, j)`` streams tile ``j`` of resident cluster ``top_c[b, r]``
+    and the cr routed lists fold into one running top-k in VMEM.
+    """
+    b, d = q_emb.shape
+    c, cap, _ = buf_emb.shape
+    cr = top_c.shape[1]
+    t = w_hat.shape[0]
+    # tile size must divide cap: take the largest divisor ≤ block_n (NOT
+    # the gcd, which collapses to tiny tiles for e.g. cap=1000/block=512)
+    requested = min(block_n, cap)
+    block_n = requested
+    if cap % block_n:
+        block_n = next(d_ for d_ in range(block_n, 0, -1) if cap % d_ == 0)
+    if block_n < max(1, requested // 4):
+        import warnings
+        warnings.warn(
+            f"fused_topk_score_routed: capacity {cap} has no divisor near "
+            f"the requested tile size ({requested}); tiles collapsed to "
+            f"{block_n} — pathological grid. Prefer a capacity with a "
+            f"large power-of-two factor (build_cluster_buffers rounds to "
+            f"multiples of 128)", stacklevel=2)
+    grid = (b, cr, cap // block_n)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b_, r, j, tc: (b_, 0)),     # q_emb
+            pl.BlockSpec((1, 2), lambda b_, r, j, tc: (b_, 0)),     # q_loc
+            pl.BlockSpec((1, 2), lambda b_, r, j, tc: (b_, 0)),     # w_st
+            pl.BlockSpec((t,), lambda b_, r, j, tc: (0,)),          # w_hat
+            pl.BlockSpec((1, block_n, d),
+                         lambda b_, r, j, tc: (tc[b_, r], j, 0)),   # buf_emb
+            pl.BlockSpec((1, block_n, 2),
+                         lambda b_, r, j, tc: (tc[b_, r], j, 0)),   # buf_loc
+            pl.BlockSpec((1, block_n),
+                         lambda b_, r, j, tc: (tc[b_, r], j)),      # buf_ids
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda b_, r, j, tc: (b_, 0)),     # scores
+            pl.BlockSpec((1, k), lambda b_, r, j, tc: (b_, 0)),     # ids
+        ],
+    )
+    kern = functools.partial(_routed_kernel, k=k, t=t,
+                             dist_max=float(dist_max))
+    out_shape = [
+        jax.ShapeDtypeStruct((b, k), jnp.float32),
+        jax.ShapeDtypeStruct((b, k), jnp.int32),
+    ]
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(top_c.astype(jnp.int32), q_emb, q_loc, w_st, w_hat,
+      buf_emb, buf_loc, buf_ids)

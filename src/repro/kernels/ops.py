@@ -1,9 +1,9 @@
 """Jit'd dispatch wrappers for the Pallas kernels.
 
-``interpret=True`` (default on this CPU container) runs the kernel bodies in
-the Pallas interpreter for correctness validation; on a real TPU fleet the
-launcher flips ``interpret=False`` (env REPRO_PALLAS_COMPILE=1) and the same
-BlockSpecs compile to Mosaic.
+``interpret=None`` auto-detects: compiled to Mosaic on a real TPU (or when
+forced via env REPRO_PALLAS_COMPILE=1), Pallas interpreter everywhere else
+(this CPU container) for correctness validation. The same rule backs
+core/engine.default_interpret so every entry point agrees.
 """
 from __future__ import annotations
 
@@ -21,7 +21,9 @@ from repro.kernels import (
 
 
 def _interpret_default() -> bool:
-    return os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+    if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
+        return False
+    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("k", "dist_max", "block_m",
@@ -33,6 +35,18 @@ def fused_topk_score(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids, w_hat,
         q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids, w_hat, k=k,
         dist_max=dist_max, block_m=block_m, block_n=block_n,
         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "dist_max", "block_n",
+                                             "interpret"))
+def fused_topk_score_routed(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc,
+                            buf_ids, w_hat, *, k, dist_max, block_n=512,
+                            interpret=None):
+    """Gather-free query-phase kernel: scalar-prefetched cluster routing."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _fts.fused_topk_score_routed(
+        q_emb, q_loc, w_st, top_c, buf_emb, buf_loc, buf_ids, w_hat, k=k,
+        dist_max=dist_max, block_n=block_n, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",

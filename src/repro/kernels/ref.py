@@ -23,6 +23,12 @@ def fused_topk_score_ref(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
     return jax.lax.top_k(st, k)
 
 
+# NOTE: the routed (gather-free) kernel's dense oracle is
+# core/engine.dense_routed_topk — ONE definition, built on the engine's
+# score_candidates primitive, so the kernel tests and the engine parity
+# tests certify the same contract.
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0):
     """Dense softmax attention with GQA, causal/window masks. fp32 math."""
     b, sq, h, d = q.shape

@@ -35,7 +35,10 @@ def main(argv=None):
     ap.add_argument("--cr", type=int, default=1)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--serve-batch", type=int, default=64)
-    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="legacy alias for --backend pallas")
+    ap.add_argument("--backend", default=None,
+                    choices=["pallas", "dense", "auto"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -68,7 +71,9 @@ def main(argv=None):
     bf_ids, _ = r.brute_force(te, k=args.k, batch=args.serve_batch)
     t_bf = time.perf_counter() - t0
     t0 = time.perf_counter()
-    ids, _ = r.query(te, k=args.k, cr=args.cr, use_pallas=args.use_pallas,
+    from repro.core.engine import legacy_backend
+    ids, _ = r.query(te, k=args.k, cr=args.cr,
+                     backend=legacy_backend(args.backend, args.use_pallas),
                      batch=args.serve_batch)
     t_list = time.perf_counter() - t0
 

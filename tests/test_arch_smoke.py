@@ -35,6 +35,7 @@ def test_registry_complete():
 
 
 @pytest.mark.parametrize("arch", LM_ARCHS)
+@pytest.mark.slow
 def test_lm_train_step(arch):
     cfg = reduced(get_config(arch))
     params = tf.lm_init(KEY, cfg)

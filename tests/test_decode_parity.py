@@ -13,6 +13,7 @@ KEY = jax.random.PRNGKey(3)
 
 @pytest.mark.parametrize("arch", ["stablelm-1.6b", "gemma3-27b",
                                   "moonshot-v1-16b-a3b"])
+@pytest.mark.slow
 def test_decode_matches_full_forward(arch):
     import dataclasses
     from repro.configs.base import MoESpec
@@ -48,6 +49,7 @@ def test_decode_matches_full_forward(arch):
             err_msg=f"decode step {i} diverged from full forward")
 
 
+@pytest.mark.slow
 def test_ring_buffer_window_decode():
     """Decode far beyond the window: ring buffer must keep only the last
     `window` positions — logits must match a full forward."""

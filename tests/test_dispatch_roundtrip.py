@@ -1,0 +1,124 @@
+"""serving.dispatch_queries round-trip invariants (DESIGN.md §5).
+
+The sort-based scatter must (a) place every non-dropped (query, route)
+pair in its routed cluster's row, (b) be invertible through ``origin``,
+and (c) count capacity overflow in ``n_dropped`` instead of silently
+truncating.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import serving
+
+
+def _dispatch(top_c, feat, c, cap):
+    q_buf, origin, n_dropped = serving.dispatch_queries(
+        jnp.asarray(top_c), jnp.asarray(feat), n_clusters=c, capacity=cap)
+    return np.asarray(q_buf), np.asarray(origin), int(n_dropped)
+
+
+def _unique_payload(b, cr):
+    """Payload row j encodes the query id so origin inversion is checkable."""
+    return np.arange(b, dtype=np.float32)[:, None] + 1000.0
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("b,cr,c,cap", [
+    (16, 2, 4, 16),      # ample capacity
+    (32, 1, 8, 8),       # tight
+    (8, 4, 2, 32),       # few clusters, heavy multi-route
+])
+def test_roundtrip_invariants(b, cr, c, cap, seed):
+    rng = np.random.default_rng(seed)
+    top_c = rng.integers(0, c, size=(b, cr)).astype(np.int32)
+    feat = _unique_payload(b, cr)
+    q_buf, origin, n_dropped = _dispatch(top_c, feat, c, cap)
+
+    n = b * cr
+    placed = origin[origin < n]
+    # (a) + drop accounting: every pair is either placed once or counted
+    assert len(set(placed.tolist())) == len(placed)
+    assert len(placed) + n_dropped == n
+    # per-cluster demand vs what landed
+    flat = top_c.reshape(-1)
+    for ci in range(c):
+        demand = int((flat == ci).sum())
+        landed = int((origin[ci] < n).sum())
+        assert landed == min(demand, cap)
+    # (a) every placed pair sits in the cluster it was routed to,
+    # (b) origin inverts the scatter: the payload row matches the query
+    for ci in range(c):
+        for s in range(cap):
+            o = origin[ci, s]
+            if o < n:
+                assert flat[o] == ci
+                assert q_buf[ci, s, 0] == feat[o // cr, 0]
+    # pad slots carry the zero payload
+    pad_rows = q_buf[origin >= n]
+    assert (pad_rows == 0).all()
+
+
+def test_overflow_is_counted_not_silent():
+    """All queries route to one cluster; capacity only fits half."""
+    b, c, cap = 16, 4, 8
+    top_c = np.zeros((b, 1), np.int32)
+    q_buf, origin, n_dropped = _dispatch(top_c, _unique_payload(b, 1), c, cap)
+    assert n_dropped == b - cap
+    assert int((origin < b).sum()) == cap
+    # the kept pairs are the first `cap` in stable sort order
+    assert sorted(origin[0][origin[0] < b].tolist()) == list(range(cap))
+
+
+def test_no_drops_when_capacity_suffices():
+    b, cr, c, cap = 12, 2, 3, 24      # cap == b*cr: can never overflow
+    rng = np.random.default_rng(3)
+    top_c = rng.integers(0, c, size=(b, cr)).astype(np.int32)
+    _, origin, n_dropped = _dispatch(top_c, _unique_payload(b, cr), c, cap)
+    assert n_dropped == 0
+    assert int((origin < b * cr).sum()) == b * cr
+
+
+def test_cluster_dispatch_query_surfaces_drops(rng):
+    """End-to-end: return_dropped=True reports the overflow count and the
+    dropped queries degrade to empty lists rather than wrong results."""
+    import dataclasses
+    import jax
+    from repro.configs import get_config
+    from repro.core import index as il
+    from repro.core import relevance
+    from repro.core import spatial as sp
+
+    cfg = dataclasses.replace(
+        get_config("list-dual-encoder"),
+        n_layers=1, d_model=16, n_heads=2, d_ff=32, vocab_size=256,
+        max_len=8, spatial_t=20, n_clusters=2, index_mlp_hidden=(8,))
+    params = relevance.relevance_init(jax.random.PRNGKey(0), cfg)
+    n, c, cap, b, k = 64, 2, 32, 8, 4
+    obj_emb = rng.normal(size=(n, cfg.d_model)).astype(np.float32)
+    obj_loc = rng.uniform(size=(n, 2)).astype(np.float32)
+    norm = il.loc_normalizer(jnp.asarray(obj_loc))
+    iparams = il.index_init(jax.random.PRNGKey(1), cfg.d_model, c,
+                            hidden=(8,))
+    feats = il.build_features(jnp.asarray(obj_emb), jnp.asarray(obj_loc),
+                              norm)
+    top = np.asarray(il.assign_clusters(iparams, feats, top=1))[:, None]
+    buf = il.build_cluster_buffers(top, obj_emb, obj_loc, n_clusters=c,
+                                   capacity=cap)
+    w_hat = sp.extract_lookup(params["spatial"])
+    tok = jnp.asarray(rng.integers(2, 256, (b, 8)), jnp.int32)
+    msk = jnp.ones((b, 8), bool)
+    ql = jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32)
+
+    # qcap=1: at most one query per cluster survives dispatch
+    ids, sc, nd = serving.cluster_dispatch_query(
+        params, iparams, w_hat, norm, buf["emb"], buf["loc"], buf["ids"],
+        tok, msk, ql, cfg, k=k, cr=1, dist_max=1.414, capacity=1,
+        return_dropped=True)
+    assert int(nd) == b - len(np.unique(
+        np.asarray(il.route_queries(
+            iparams, il.build_features(
+                relevance.encode_queries(params, tok, msk, cfg), ql, norm),
+            cr=1)[0])))
+    dropped_rows = np.asarray(ids[(np.asarray(sc) == -np.inf).all(1)])
+    assert (dropped_rows == -1).all()

@@ -1,10 +1,11 @@
 """LIST-I: cluster classifier, buffers, pseudo-labels (paper §4.3)."""
-import hypothesis
-import hypothesis.strategies as st
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core import index as il
 from repro.core import pseudo_labels as pslab

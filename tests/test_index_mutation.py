@@ -1,0 +1,134 @@
+"""insert_objects / delete_objects bounds + bookkeeping regressions.
+
+Regression for the capacity bug: inserting into a full cluster used to
+take the least-loaded fallback WITHOUT re-checking capacity, writing at
+slot ``counts[ci] >= cap`` (an out-of-bounds row) when the whole index
+was full. Now it raises instead.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import index as il
+
+
+def _tiny_index(rng, *, n, c, cap, d=8):
+    emb = rng.normal(size=(n, d)).astype(np.float32)
+    loc = rng.uniform(size=(n, 2)).astype(np.float32)
+    norm = il.loc_normalizer(jnp.asarray(loc))
+    params = il.index_init(jax.random.PRNGKey(0), d, c, hidden=(8,))
+    feats = il.build_features(jnp.asarray(emb), jnp.asarray(loc), norm)
+    top = np.asarray(il.assign_clusters(params, feats, top=min(2, c)))
+    if top.ndim == 1:
+        top = top[:, None]
+    buf = il.build_cluster_buffers(top, emb, loc, n_clusters=c, capacity=cap)
+    return buf, params, norm, emb, loc
+
+
+def test_insert_overflow_raises_not_out_of_bounds(rng):
+    """Index filled to exact capacity: the next insert must raise."""
+    c, cap, d = 2, 4, 8
+    buf, params, norm, _, _ = _tiny_index(rng, n=c * cap, c=c, cap=cap, d=d)
+    assert int(np.asarray(buf["counts"]).sum()) == c * cap   # packed full
+    new_emb = jnp.asarray(rng.normal(size=(1, d)), jnp.float32)
+    new_loc = jnp.asarray(rng.uniform(size=(1, 2)), jnp.float32)
+    with pytest.raises(ValueError, match="capacity"):
+        il.insert_objects(buf, params, norm, new_emb, new_loc,
+                          np.array([999]))
+
+
+def test_insert_spills_to_least_loaded_within_bounds(rng):
+    """Routed cluster full, another has room: insert lands in-bounds."""
+    c, cap, d = 4, 8, 8
+    buf, params, norm, _, _ = _tiny_index(rng, n=8, c=c, cap=cap, d=d)
+    # force one cluster full, rest as-built
+    counts = np.asarray(buf["counts"]).copy()
+    full_ci = int(counts.argmax())
+    pad = cap - counts[full_ci]
+    if pad:
+        ids = np.asarray(buf["ids"]).copy()
+        ids[full_ci, counts[full_ci]:cap] = 10_000 + np.arange(pad)
+        counts[full_ci] = cap
+        buf = dict(buf)
+        buf["ids"] = jnp.asarray(ids)
+        buf["counts"] = jnp.asarray(counts)
+    n_new = 6
+    new_emb = jnp.asarray(rng.normal(size=(n_new, d)), jnp.float32)
+    new_loc = jnp.asarray(rng.uniform(size=(n_new, 2)), jnp.float32)
+    out = il.insert_objects(buf, params, norm, new_emb, new_loc,
+                            np.arange(500, 500 + n_new))
+    new_counts = np.asarray(out["counts"])
+    assert (new_counts <= cap).all()                     # never over cap
+    assert new_counts.sum() == counts.sum() + n_new      # all placed
+    ids = np.asarray(out["ids"])
+    for j in range(n_new):                               # each id stored once
+        assert int((ids == 500 + j).sum()) == 1
+
+
+def test_insert_after_delete_fills_hole_without_clobbering(rng):
+    """Regression: inserting after a lazy delete used to write at slot
+    ``counts[ci]``, overwriting a LIVE object past the interior hole."""
+    c, cap, d = 2, 4, 8
+    buf, params, norm, _, _ = _tiny_index(rng, n=c * cap, c=c, cap=cap, d=d)
+    live_before = set(np.asarray(buf["ids"]).reshape(-1).tolist())
+    victim = int(np.asarray(buf["ids"])[0, 0])       # hole at slot 0
+    buf2 = il.delete_objects(buf, [victim])
+    new_emb = jnp.asarray(rng.normal(size=(1, d)), jnp.float32)
+    new_loc = jnp.asarray(rng.uniform(size=(1, 2)), jnp.float32)
+    buf3 = il.insert_objects(buf2, params, norm, new_emb, new_loc,
+                             np.array([999]))
+    live_after = set(np.asarray(buf3["ids"]).reshape(-1).tolist())
+    # every pre-existing object except the deleted one survives
+    assert live_before - {victim} <= live_after
+    assert 999 in live_after
+    assert int(np.asarray(buf3["counts"]).sum()) == c * cap
+
+
+def test_retriever_engine_rebinds_after_mutation(rng, small_corpus,
+                                                 tiny_de_cfg):
+    """ListRetriever.query must not serve a stale engine snapshot after
+    buffers/params are swapped (insert_objects returns a NEW dict)."""
+    from repro.core import pipeline as pl
+    from repro.core import relevance
+
+    r = pl.ListRetriever(tiny_de_cfg, small_corpus)
+    r.rel_params = relevance.relevance_init(jax.random.PRNGKey(0),
+                                            tiny_de_cfg)
+    d = tiny_de_cfg.d_model
+    r.obj_emb = rng.normal(
+        size=(small_corpus.cfg.n_objects, d)).astype(np.float32)
+    r.index_params = il.index_init(jax.random.PRNGKey(1), d,
+                                   tiny_de_cfg.n_clusters, hidden=(16,))
+    r.norm = il.loc_normalizer(
+        jnp.asarray(small_corpus.obj_loc.astype(np.float32)))
+    r.build(capacity=256)
+    e1 = r.engine()
+    assert r.engine() is e1                       # cached while unchanged
+    new_emb = jnp.asarray(rng.normal(size=(1, d)), jnp.float32)
+    new_loc = jnp.asarray(rng.uniform(size=(1, 2)), jnp.float32)
+    r.buffers = il.insert_objects(r.buffers, r.index_params, r.norm,
+                                  new_emb, new_loc, np.array([99_999]))
+    e2 = r.engine()
+    assert e2 is not e1 and e2.buffers is r.buffers
+    # the freshly inserted object is actually visible to queries
+    # (k = every buffer slot across all clusters ⇒ all valid ids returned)
+    k_all = r.buffers["capacity"] * tiny_de_cfg.n_clusters
+    ids, _ = r.query(np.arange(8), k=k_all, cr=tiny_de_cfg.n_clusters)
+    assert (ids == 99_999).any()
+
+
+def test_delete_marks_padding_and_recounts(rng):
+    c, cap, d = 2, 8, 8
+    buf, params, norm, _, _ = _tiny_index(rng, n=10, c=c, cap=cap, d=d)
+    ids = np.asarray(buf["ids"])
+    victims = ids[ids >= 0][:3]
+    out = il.delete_objects(buf, victims)
+    out_ids = np.asarray(out["ids"])
+    assert not np.isin(out_ids, victims).any()
+    assert int(np.asarray(out["counts"]).sum()) == \
+        int(np.asarray(buf["counts"]).sum()) - 3
+    # deleted slots are masked for the scorer: emb zeroed, id -1
+    mask = np.isin(np.asarray(buf["ids"]), victims)
+    assert (np.asarray(out["emb"])[mask] == 0).all()
+    assert (out_ids[mask] == -1).all()

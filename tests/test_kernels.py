@@ -28,6 +28,33 @@ def test_fused_topk_score(b, n, d, t, k, rng):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("b,c,cap,d,t,k,cr", [
+    (8, 8, 256, 32, 50, 5, 1),
+    (4, 6, 128, 64, 100, 10, 2),
+    (5, 4, 64, 16, 20, 8, 4),
+])
+def test_fused_topk_score_routed(b, c, cap, d, t, k, cr, rng):
+    """Gather-free kernel == the dense oracle (engine.dense_routed_topk —
+    the single routed reference, shared with the engine parity tier)."""
+    from repro.core.engine import dense_routed_topk
+    q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    ql = jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 1.5, size=(b, 2)), jnp.float32)
+    be = jnp.asarray(rng.normal(size=(c, cap, d)), jnp.float32)
+    bl = jnp.asarray(rng.uniform(size=(c, cap, 2)), jnp.float32)
+    bi = jnp.asarray(np.arange(c * cap).reshape(c, cap), jnp.int32)
+    tc = jnp.asarray(rng.integers(0, c, size=(b, cr)), jnp.int32)
+    wh = jnp.asarray(np.cumsum(rng.uniform(0, 0.01, size=t)), jnp.float32)
+    s1, i1 = ops.fused_topk_score_routed(q, ql, w, tc, be, bl, bi, wh,
+                                         k=k, dist_max=1.414, block_n=64,
+                                         interpret=True)
+    s2, i2 = dense_routed_topk(q, ql, w, tc, be, bl, bi, wh,
+                               k=k, dist_max=1.414)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+    assert (np.sort(np.asarray(i1)) == np.sort(np.asarray(i2))).all()
+
+
 def test_fused_topk_masks_padding(rng):
     b, n, d, t, k = 4, 512, 16, 20, 8
     q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)

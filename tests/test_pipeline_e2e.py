@@ -29,6 +29,7 @@ def trained():
     return r
 
 
+@pytest.mark.slow
 def test_list_recall_close_to_brute_force(trained):
     r = trained
     tr, va, te = r.corpus.split()
@@ -42,6 +43,7 @@ def test_list_recall_close_to_brute_force(trained):
         f"LIST recall {rl} lost too much vs brute {rb}")
 
 
+@pytest.mark.slow
 def test_list_beats_tkq(trained):
     """The paper's headline: embedding relevance > BM25 TkQ (Table 3)."""
     r = trained
@@ -55,6 +57,7 @@ def test_list_beats_tkq(trained):
             > cm.recall_at_k(tkq_ids, positives, 10))
 
 
+@pytest.mark.slow
 def test_clusters_balanced_and_precise(trained):
     r = trained
     if_c = cm.imbalance_factor(r.obj_assign, r.cfg.n_clusters)
@@ -71,6 +74,7 @@ def test_clusters_balanced_and_precise(trained):
     assert pc > 0.4, f"cluster precision too low: P(C)={pc}"
 
 
+@pytest.mark.slow
 def test_pallas_query_path_matches_jnp(trained):
     r = trained
     tr, va, te = r.corpus.split()
@@ -80,6 +84,7 @@ def test_pallas_query_path_matches_jnp(trained):
     np.testing.assert_allclose(sc1, sc2, rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_query_efficiency_candidates(trained):
     """LIST scans ≈ cr·cap objects — a fraction of the corpus (Fig. 4)."""
     cap = trained.buffers["capacity"]
@@ -87,6 +92,7 @@ def test_query_efficiency_candidates(trained):
     assert cap * 1 < 0.8 * n
 
 
+@pytest.mark.slow
 def test_insertion_routes_new_objects(trained):
     r = trained
     rng = np.random.default_rng(0)

@@ -1,0 +1,270 @@
+"""Parity/property tier for the unified query engine (DESIGN.md §4–§5).
+
+The gather-free Pallas kernel (scalar-prefetched routing into resident
+(c, cap, d) buffers, in-kernel cr-merge) must be indistinguishable from
+the dense reference (gather + one top-k) across shapes, buffer padding,
+tie scores, and cr ∈ {1, 2, 4} — and its jaxpr must contain NO
+(B, cr·cap, d) candidate-sized intermediate (the point of the kernel).
+"""
+import dataclasses
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import engine
+from repro.core import index as il
+from repro.core import relevance
+from repro.core import spatial as sp
+from repro.kernels import ops
+
+DIST_MAX = 1.414
+
+
+# ---------------------------------------------------------------------------
+# Synthetic routed-query instances (no encoder: kernel-level parity)
+# ---------------------------------------------------------------------------
+
+
+def _mk_instance(rng, *, b, cr, c, cap, d, t=50, empty_clusters=(),
+                 valid_per_cluster=None, tie_embeddings=False):
+    """Random buffers + routed queries. -1 ids mark buffer padding."""
+    q = rng.normal(size=(b, d)).astype(np.float32)
+    ql = rng.uniform(size=(b, 2)).astype(np.float32)
+    w = rng.uniform(0.5, 1.5, size=(b, 2)).astype(np.float32)
+    be = rng.normal(size=(c, cap, d)).astype(np.float32)
+    bl = rng.uniform(size=(c, cap, 2)).astype(np.float32)
+    bi = np.arange(c * cap, dtype=np.int32).reshape(c, cap)
+    if valid_per_cluster is not None:        # partially-filled clusters
+        bi[:, valid_per_cluster:] = -1
+    for ci in empty_clusters:                # fully-empty clusters
+        bi[ci] = -1
+    be[bi < 0] = 0.0
+    bl[bi < 0] = 1e6
+    if tie_embeddings:                       # every candidate scores equal
+        be[:] = be[0, 0]
+        bl[:] = 0.25
+        ql[:] = 0.25
+    top_c = rng.integers(0, c, size=(b, cr)).astype(np.int32)
+    w_hat = np.cumsum(rng.uniform(0, 0.05, size=t)).astype(np.float32)
+    return tuple(jnp.asarray(x) for x in (q, ql, w, top_c, be, bl, bi, w_hat))
+
+
+def _both_backends(args, *, k, block_n=512):
+    s_p, i_p = ops.fused_topk_score_routed(*args, k=k, dist_max=DIST_MAX,
+                                           block_n=block_n, interpret=True)
+    s_d, i_d = engine.dense_routed_topk(*args, k=k, dist_max=DIST_MAX)
+    return (np.asarray(s_p), np.asarray(i_p),
+            np.asarray(s_d), np.asarray(i_d))
+
+
+# ---------------------------------------------------------------------------
+# Shape sweep: n < block_n, cap not a multiple of block_n, cr ∈ {1,2,4}
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cr", [1, 2, 4])
+@pytest.mark.parametrize("b,c,cap,d,k,block_n", [
+    (8, 6, 64, 32, 5, 512),      # cap < block_n: single-tile clusters
+    (16, 4, 128, 16, 10, 32),    # multi-tile streaming per cluster
+    (3, 5, 96, 8, 7, 64),        # odd b; block_n forced down to gcd=32
+    (1, 2, 32, 64, 32, 512),     # single query, k == cap
+])
+def test_routed_kernel_matches_dense_reference(b, c, cap, d, k, cr, block_n,
+                                               rng):
+    args = _mk_instance(rng, b=b, cr=cr, c=c, cap=cap, d=d)
+    s_p, i_p, s_d, i_d = _both_backends(args, k=k, block_n=block_n)
+    np.testing.assert_allclose(s_p, s_d, rtol=1e-4, atol=1e-4)
+    # identical id SETS per query (tie order inside equal scores is free)
+    assert (np.sort(i_p, axis=1) == np.sort(i_d, axis=1)).all()
+
+
+@pytest.mark.parametrize("cr", [1, 2, 4])
+def test_k_exceeds_valid_candidates(cr, rng):
+    """k > valid candidates: both backends pad with (-1, NEG_INF)."""
+    b, c, cap, d, k = 6, 4, 32, 16, 20
+    args = _mk_instance(rng, b=b, cr=cr, c=c, cap=cap, d=d,
+                        valid_per_cluster=3)        # ≤ 3·cr valid per query
+    s_p, i_p, s_d, i_d = _both_backends(args, k=k)
+    np.testing.assert_allclose(s_p, s_d, rtol=1e-4, atol=1e-4)
+    assert (np.sort(i_p, axis=1) == np.sort(i_d, axis=1)).all()
+    n_valid = (i_p >= 0).sum(1)
+    assert (n_valid <= 3 * cr).all()
+    assert ((s_p < -1e29) == (i_p < 0)).all()       # pads are NEG_INF/-1
+
+
+def test_fully_empty_routed_clusters(rng):
+    """Queries routed into all-padding clusters return only pads."""
+    b, c, cap, d, k, cr = 4, 4, 32, 16, 5, 2
+    args = list(_mk_instance(rng, b=b, cr=cr, c=c, cap=cap, d=d,
+                             empty_clusters=(1, 3)))
+    args[3] = jnp.asarray(np.array([[1, 3]] * b, np.int32))  # route to empties
+    s_p, i_p, s_d, i_d = _both_backends(tuple(args), k=k)
+    assert (i_p == -1).all() and (i_d == -1).all()
+    np.testing.assert_allclose(s_p, s_d)
+    # mixed routing: one empty + one live cluster still merges correctly
+    args[3] = jnp.asarray(np.array([[1, 0]] * b, np.int32))
+    s_p, i_p, s_d, i_d = _both_backends(tuple(args), k=k)
+    np.testing.assert_allclose(s_p, s_d, rtol=1e-4, atol=1e-4)
+    assert (np.sort(i_p, axis=1) == np.sort(i_d, axis=1)).all()
+    assert (i_p < cap).all()                        # only cluster-0 objects
+
+
+@pytest.mark.parametrize("cr", [1, 2, 4])
+def test_tie_scores(cr, rng):
+    """All candidates score identically: backends may order ties freely,
+    but scores must match exactly and every returned id must be a real,
+    distinct candidate from the routed clusters."""
+    b, c, cap, d, k = 5, 4, 32, 16, 8
+    args = _mk_instance(rng, b=b, cr=cr, c=c, cap=cap, d=d,
+                        tie_embeddings=True)
+    s_p, i_p, s_d, i_d = _both_backends(args, k=k)
+    np.testing.assert_allclose(s_p, s_d, rtol=1e-4, atol=1e-4)
+    top_c, bi = np.asarray(args[3]), np.asarray(args[6])
+    for row in range(b):
+        routed = set(bi[top_c[row]].reshape(-1).tolist()) - {-1}
+        picked = i_p[row].tolist()
+        assert len(set(picked)) == k                # no duplicates
+        assert set(picked) <= routed                # all from routed clusters
+
+
+# ---------------------------------------------------------------------------
+# Engine-level parity (encoder + router + kernel) and batch padding
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = dataclasses.replace(
+        get_config("list-dual-encoder"),
+        n_layers=2, d_model=32, n_heads=2, d_ff=64, vocab_size=512,
+        max_len=8, spatial_t=50, n_clusters=4, index_mlp_hidden=(16,))
+    rng = np.random.default_rng(7)
+    params = relevance.relevance_init(jax.random.PRNGKey(0), cfg)
+    n, c, cap = 160, cfg.n_clusters, 64
+    obj_emb = rng.normal(size=(n, cfg.d_model)).astype(np.float32)
+    obj_loc = rng.uniform(size=(n, 2)).astype(np.float32)
+    norm = il.loc_normalizer(jnp.asarray(obj_loc))
+    iparams = il.index_init(jax.random.PRNGKey(5), cfg.d_model, c,
+                            hidden=(16,))
+    feats = il.build_features(jnp.asarray(obj_emb), jnp.asarray(obj_loc),
+                              norm)
+    top = np.asarray(il.assign_clusters(iparams, feats, top=2))
+    buf = il.build_cluster_buffers(top, obj_emb, obj_loc, n_clusters=c,
+                                   capacity=cap)
+    w_hat = sp.extract_lookup(params["spatial"])
+    return cfg, params, iparams, norm, buf, w_hat
+
+
+@pytest.mark.parametrize("cr", [1, 2, 4])
+def test_engine_backend_parity_end_to_end(engine_setup, cr, rng):
+    cfg, params, iparams, norm, buf, w_hat = engine_setup
+    b, k = 8, 5
+    tok = jnp.asarray(rng.integers(2, 512, (b, 8)), jnp.int32)
+    msk = jnp.ones((b, 8), bool)
+    ql = jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32)
+    a = (params, iparams, w_hat, norm, buf["emb"], buf["loc"], buf["ids"],
+         tok, msk, ql)
+    fd = engine.make_query_fn(cfg, cr=cr, k=k, backend="dense",
+                              dist_max=DIST_MAX)
+    fp = engine.make_query_fn(cfg, cr=cr, k=k, backend="pallas",
+                              interpret=True, dist_max=DIST_MAX)
+    i_d, s_d = fd(*a)
+    i_p, s_p = fp(*a)
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_d),
+                               rtol=1e-4, atol=1e-4)
+    assert (np.sort(np.asarray(i_p)) == np.sort(np.asarray(i_d))).all()
+
+
+def test_run_batched_pads_partial_batches(rng):
+    """b % batch != 0: the static-shape padding trims outputs exactly."""
+    calls = []
+
+    def fn(x, y):
+        calls.append(x.shape[0])
+        return x * 2, y + 1
+
+    x = rng.normal(size=(23, 4)).astype(np.float32)
+    y = rng.normal(size=(23, 2)).astype(np.float32)
+    ox, oy = engine.run_batched(fn, [x, y], batch=8)
+    assert ox.shape == (23, 4) and oy.shape == (23, 2)
+    assert calls == [8, 8, 8]                  # every chunk static-shaped
+    np.testing.assert_allclose(ox, x * 2, rtol=1e-6)
+    np.testing.assert_allclose(oy, y + 1, rtol=1e-6)
+
+
+def test_resolve_backend_rules():
+    assert engine.resolve_backend("dense") == ("dense",
+                                               engine.default_interpret())
+    assert engine.resolve_backend("pallas", interpret=True) == ("pallas",
+                                                                True)
+    # auto keys on hardware, NOT the interpret flag: pallas iff on TPU
+    # (so REPRO_PALLAS_COMPILE=1 on CPU can't route auto into Mosaic)
+    expect = "pallas" if jax.default_backend() == "tpu" else "dense"
+    assert engine.resolve_backend("auto", interpret=True)[0] == expect
+    assert engine.resolve_backend("auto", interpret=False)[0] == expect
+    with pytest.raises(ValueError):
+        engine.resolve_backend("tpu")
+    # legacy alias: explicit backend wins over the bool
+    assert engine.legacy_backend(None, True) == "pallas"
+    assert engine.legacy_backend(None, False) == "dense"
+    assert engine.legacy_backend("auto", True) == "auto"
+
+
+# ---------------------------------------------------------------------------
+# The acceptance criterion: the pallas path's jaxpr has NO candidate copy
+# ---------------------------------------------------------------------------
+
+
+def _subjaxprs_of(params):
+    for val in params.values():
+        vals = val if isinstance(val, (tuple, list)) else (val,)
+        for v in vals:
+            if isinstance(v, jax.core.ClosedJaxpr):
+                yield v.jaxpr
+            elif isinstance(v, jax.core.Jaxpr):
+                yield v
+
+
+def _all_eqn_out_avals(jaxpr):
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                yield aval
+        for sub in _subjaxprs_of(eqn.params):
+            yield from _all_eqn_out_avals(sub)
+
+
+def test_pallas_jaxpr_has_no_candidate_gather(engine_setup, rng):
+    """The gather path materializes a (B, cr·cap, d) copy; the routed
+    kernel must not — assert no candidate-sized intermediate exists."""
+    cfg, params, iparams, norm, buf, w_hat = engine_setup
+    b, k, cr = 8, 5, 2
+    cap, d = buf["emb"].shape[1], buf["emb"].shape[2]
+    cand_size = b * cr * cap * d
+    tok = jnp.asarray(rng.integers(2, 512, (b, 8)), jnp.int32)
+    msk = jnp.ones((b, 8), bool)
+    ql = jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32)
+    a = (params, iparams, w_hat, norm, buf["emb"], buf["loc"], buf["ids"],
+         tok, msk, ql)
+
+    def sizes(backend):
+        fn = engine.make_query_fn(cfg, cr=cr, k=k, backend=backend,
+                                  interpret=True, dist_max=DIST_MAX)
+        jaxpr = jax.make_jaxpr(fn)(*a)
+        return [int(np.prod(av.shape))
+                for av in _all_eqn_out_avals(jaxpr.jaxpr)]
+
+    dense_sizes = sizes("dense")
+    assert cand_size in dense_sizes, (
+        "detector broken: dense path should materialize the candidate copy")
+    pallas_sizes = sizes("pallas")
+    assert cand_size not in pallas_sizes, (
+        "gather-free path materialized a (B, cr·cap, d)-sized intermediate")
+    assert max(pallas_sizes) < cand_size, (
+        f"pallas path has an intermediate ≥ candidate copy: "
+        f"{max(pallas_sizes)} vs {cand_size}")

@@ -94,8 +94,9 @@ def test_dispatch_roundtrip(rng):
     b, cr, c, cap = 16, 2, 4, 16
     top_c = jnp.asarray(rng.integers(0, c, size=(b, cr)), jnp.int32)
     feat = jnp.asarray(np.arange(b, dtype=np.float32)[:, None], jnp.float32)
-    q_buf, origin = serving.dispatch_queries(top_c, feat, n_clusters=c,
-                                             capacity=cap)
+    q_buf, origin, n_dropped = serving.dispatch_queries(
+        top_c, feat, n_clusters=c, capacity=cap)
+    assert int(n_dropped) == 0          # capacity b*cr/c*... is ample here
     org = np.asarray(origin)
     placed = org[org < b * cr]
     assert len(placed) == b * cr and len(set(placed.tolist())) == b * cr

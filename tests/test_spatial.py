@@ -1,10 +1,11 @@
 """Spatial step-function module (paper Eq. 4–5): invariants + equivalences."""
-import hypothesis
-import hypothesis.strategies as st
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core import spatial as sp
 

@@ -3,12 +3,13 @@ helpers (compression, straggler, elastic planner, sharding rules)."""
 import os
 import tempfile
 
-import hypothesis
-import hypothesis.strategies as st
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.checkpoint import CheckpointManager, latest_step, restore, save
 from repro.distributed import compression as comp
