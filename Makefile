@@ -1,13 +1,14 @@
 # Tiers:
-#   make test        - tier-1: fast unit/parity tests (minutes)
-#   make test-slow   - everything, including e2e training + interpret-mode
-#                      decode sweeps (tens of minutes on CPU)
-#   make bench-smoke - CI-scale benchmark smoke (--fast settings)
+#   make test          - tier-1: fast unit/parity tests (minutes)
+#   make test-slow     - everything, including e2e training + interpret-mode
+#                        decode sweeps (tens of minutes on CPU)
+#   make bench-smoke   - CI-scale benchmark smoke (--fast settings)
+#   make bench-serving - streaming-serving benchmark -> BENCH_serving.json
 
 PY      := python
 PYPATH  := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}
 
-.PHONY: test test-slow bench-smoke
+.PHONY: test test-slow bench-smoke bench-serving
 
 test:
 	$(PYPATH) $(PY) -m pytest -x -q -m "not slow"
@@ -16,4 +17,7 @@ test-slow:
 	$(PYPATH) $(PY) -m pytest -x -q
 
 bench-smoke:
-	$(PYPATH) $(PY) -m benchmarks.run --fast --only Kernel_fusion,Table4_memory
+	$(PYPATH) $(PY) -m benchmarks.run --fast --only Kernel_fusion,Table4_memory,Serving_stream
+
+bench-serving:
+	$(PYPATH) $(PY) -m benchmarks.bench_serving

@@ -1,0 +1,136 @@
+"""Streaming-serving benchmark: the micro-batcher + result caches
+(core/server.py, DESIGN.md §7) replaying a Zipf-skewed query workload
+against a trained retriever.
+
+Emits ``BENCH_serving.json`` (schema documented in README.md
+§Benchmarks) to start the serving perf trajectory: latency percentiles
+p50/p95/p99, achieved QPS, cache hit rate per tier, micro-batch fill —
+plus a pure cache-replay pass that bounds the hot-set ceiling.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--fast]
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import cluster_metrics as cm
+from repro.core import server as server_lib
+
+OUT_PATH = "BENCH_serving.json"
+
+BATCH = 64
+MAX_DELAY_MS = 2.0
+K = 10
+CR = 1
+SKEW = 1.05
+NEAR_CELLS = 64
+REQUESTS_PER_UNIQUE = 5
+JITTER_FRAC = 0.3          # requests re-issued a few meters away: these
+JITTER = 0.002             # miss the exact tier but hit the near tier
+
+
+def _replay(server, corpus, picks, *, jitter_rng=None):
+    tok, msk = corpus.query_tokens(picks)
+    loc = corpus.q_loc[picks].astype(np.float32)
+    if jitter_rng is not None:
+        rows = jitter_rng.random(len(picks)) < JITTER_FRAC
+        loc[rows] = np.clip(
+            loc[rows] + jitter_rng.uniform(-JITTER, JITTER,
+                                           size=(rows.sum(), 2)), 0.0, 1.0)
+    requests = [(tok[i], msk[i], loc[i]) for i in range(len(picks))]
+    t0 = time.perf_counter()
+    results = asyncio.run(server_lib.closed_loop(server, requests,
+                                                 concurrency=BATCH))
+    return results, time.perf_counter() - t0
+
+
+def run(out_path: str = OUT_PATH):
+    r = common.get_retriever()
+    corpus = common.get_corpus()
+    te, _ = common.test_split_positives(corpus)
+
+    server = server_lib.StreamingServer(r.engine(), server_lib.ServerConfig(
+        batch_size=BATCH, max_delay_ms=MAX_DELAY_MS, k=K, cr=CR,
+        near_cells=NEAR_CELLS))
+    compiles = server.warmup()
+
+    # --- skewed live pass: misses + exact/near hits mixed -----------------
+    rng = np.random.default_rng(common.SEED + 29)
+    n_requests = REQUESTS_PER_UNIQUE * len(te)
+    picks = te[server_lib.zipf_sample(rng, len(te), n_requests, a=SKEW)]
+    results, wall = _replay(server, corpus, picks, jitter_rng=rng)
+    m = server.metrics(wall_seconds=wall)
+    served_ids = np.stack([res[0] for res in results])
+    served_pos = [corpus.positives[q] for q in picks]
+    recall = cm.recall_at_k(served_ids, served_pos, K)
+
+    # --- pure replay pass: the whole hot set is cached --------------------
+    server.stats = server_lib.ServerStats()
+    _, wall_hot = _replay(server, corpus, picks)
+    m_hot = server.metrics(wall_seconds=wall_hot)
+
+    report = {
+        "bench": "serving",
+        "config": {
+            "n_objects": corpus.cfg.n_objects,
+            "n_unique_queries": int(len(te)),
+            "n_requests": int(n_requests),
+            "batch_size": BATCH, "max_delay_ms": MAX_DELAY_MS,
+            "k": K, "cr": CR, "backend": server.engine.backend,
+            "zipf_a": SKEW, "near_cells": NEAR_CELLS,
+        },
+        "latency_ms": m["latency_ms"],
+        "qps": m["qps"],
+        "cache": {
+            "exact_hit_rate": m["exact_hit_rate"],
+            "near_hit_rate": m["near_hit_rate"],
+            "hit_rate": m["hit_rate"],
+            "coalesced": m["coalesced"],
+        },
+        "batch_fill": m["batch_fill"],
+        "flushes": m["flushes"],
+        "engine_batches": m["engine_batches"],
+        "recall_at_k": recall,
+        "compile_seconds": compiles,
+        "hot_replay": {
+            "latency_ms": m_hot["latency_ms"],
+            "qps": m_hot["qps"],
+            "hit_rate": m_hot["hit_rate"],
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+
+    rows = [
+        common.fmt_row("serving(live,zipf)", {
+            "qps": m["qps"], "p50_ms": m["latency_ms"]["p50"],
+            "p95_ms": m["latency_ms"]["p95"],
+            "p99_ms": m["latency_ms"]["p99"],
+            "hit_rate": m["hit_rate"], "batch_fill": m["batch_fill"],
+            f"recall@{K}": recall}),
+        common.fmt_row("serving(hot-replay)", {
+            "qps": m_hot["qps"], "p50_ms": m_hot["latency_ms"]["p50"],
+            "p99_ms": m_hot["latency_ms"]["p99"],
+            "hit_rate": m_hot["hit_rate"]}),
+        common.fmt_row("serving(json)", {"path": out_path}),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI-scale training (same knobs as benchmarks.run)")
+    args = ap.parse_args()
+    if args.fast:
+        common.N_OBJECTS = 1500
+        common.N_QUERIES = 300
+        common.REL_STEPS = 120
+        common.IDX_STEPS = 250
+    print("\n".join(run()))

@@ -34,6 +34,7 @@ def main(argv=None):
         bench_neg_start,
         bench_relevance,
         bench_scalability,
+        bench_serving,
         bench_tradeoff,
     )
     suite = [
@@ -45,6 +46,7 @@ def main(argv=None):
         ("Table6_spatial_ablation", bench_ablation_spatial.run),
         ("Fig7_scalability", bench_scalability.run),
         ("Kernel_fusion", bench_kernels.run),
+        ("Serving_stream", bench_serving.run),
     ]
     only = {s for s in args.only.split(",") if s}
     failures = 0

@@ -1,12 +1,13 @@
-"""Serve batched spatial-keyword requests through a trained LIST index —
-both query-phase implementations:
+"""Serve spatial-keyword requests through a trained LIST index — all three
+serving layers:
 
-  * gather path (single host): route → gather cluster buffer → fused
-    score (optionally the Pallas kernel) → top-k
+  * streaming server (core/server.py): async micro-batcher + result
+    caches + warm-up over the unified engine — the long-lived path
+  * engine path (single host, one-shot): route → score → top-k
   * dispatch path (the multi-chip layout): clusters-as-experts dispatch
-    (core/serving.py), verified here against the gather path
+    (core/serving.py), verified here against the engine path
 
-    PYTHONPATH=src python examples/serve_queries.py [--use-pallas]
+    PYTHONPATH=src python examples/serve_queries.py [--backend dense]
 """
 import argparse
 import dataclasses
@@ -17,8 +18,10 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import cluster_metrics as cm
+from repro.core import server as server_lib
 from repro.core import serving
 from repro.core import spatial as sp
+from repro.core.engine import resolve_cli_backend
 from repro.core.pipeline import ListRetriever
 from repro.data import GeoCorpus, GeoCorpusConfig
 
@@ -26,7 +29,8 @@ from repro.data import GeoCorpus, GeoCorpusConfig
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--use-pallas", action="store_true",
-                    help="legacy alias for --backend pallas")
+                    help="DEPRECATED alias for --backend pallas "
+                         "(warns and forwards)")
     ap.add_argument("--backend", default=None,
                     choices=["pallas", "dense", "auto"],
                     help="engine backend: pallas = gather-free fused "
@@ -35,8 +39,7 @@ def main():
     ap.add_argument("--requests", type=int, default=128)
     ap.add_argument("--k", type=int, default=10)
     args = ap.parse_args()
-    from repro.core.engine import legacy_backend
-    backend = legacy_backend(args.backend, args.use_pallas)
+    backend = resolve_cli_backend(args.backend, args.use_pallas)
 
     corpus = GeoCorpus(GeoCorpusConfig(
         n_objects=2000, n_queries=400, n_topics=12, vocab_size=4096, seed=0))
@@ -54,24 +57,44 @@ def main():
     tr, va, te = corpus.split()
     req = te[: args.requests]
     positives = [corpus.positives[q] for q in req]
+    tok, msk = corpus.query_tokens(req)
+    loc = corpus.q_loc[req].astype(np.float32)
 
-    # engine path (backend-selected: gather-free pallas kernel or dense)
+    # streaming server: micro-batched requests over the engine, pre-warmed.
+    # batch_size matches the direct engine call below — the bit-identity
+    # guarantee holds per batch SHAPE (same shape ⇒ same jitted program)
+    server = server_lib.StreamingServer(r.engine(), server_lib.ServerConfig(
+        batch_size=64, max_delay_ms=2.0, k=args.k, cr=1, backend=backend))
+    server.warmup()
+    t0 = time.time()
+    ids_s, sc_s = server.serve_all(tok, msk, loc)
+    ids_s, sc_s = server.serve_all(tok, msk, loc)   # replay: cache hits
+    t_s = time.time() - t0
+    m = server.metrics(wall_seconds=t_s)
+    print(f"streaming server ({backend}): "
+          f"recall@{args.k}={cm.recall_at_k(ids_s, positives, args.k):.3f} "
+          f"{t_s:.2f}s for {m['requests']} requests "
+          f"(hit_rate={m['hit_rate']:.1%}, "
+          f"p95={m['latency_ms']['p95']:.1f}ms, "
+          f"{m['engine_batches']} engine batches)")
+
+    # engine path, one-shot (backend-selected: gather-free pallas or dense)
     t0 = time.time()
     ids_g, sc_g = r.query(req, k=args.k, cr=1, backend=backend, batch=64)
     t_g = time.time() - t0
     print(f"engine path ({backend}): "
           f"recall@{args.k}={cm.recall_at_k(ids_g, positives, args.k):.3f} "
           f"{t_g:.2f}s for {len(req)} requests")
+    assert (np.sort(ids_s, 1) == np.sort(ids_g, 1)).all(), \
+        "streaming server and direct engine path disagree"
 
     # dispatch path (the multi-pod serving layout, run on one host)
-    tok, msk = corpus.query_tokens(req)
     w_hat = sp.extract_lookup(r.rel_params["spatial"])
     t0 = time.time()
     ids_d, sc_d, n_dropped = serving.cluster_dispatch_query(
         r.rel_params, r.index_params, w_hat, r.norm,
         r.buffers["emb"], r.buffers["loc"], r.buffers["ids"],
-        jnp.asarray(tok), jnp.asarray(msk),
-        jnp.asarray(corpus.q_loc[req].astype(np.float32)), cfg,
+        jnp.asarray(tok), jnp.asarray(msk), jnp.asarray(loc), cfg,
         k=args.k, cr=1, dist_max=corpus.dist_max, return_dropped=True)
     t_d = time.time() - t0
     print(f"dispatch path (clusters-as-experts): "

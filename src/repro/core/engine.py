@@ -1,36 +1,73 @@
-"""Unified LIST query engine (DESIGN.md §3–§5).
+"""Unified LIST query engine (DESIGN.md §2–§6).
 
-Every query-phase consumer — :class:`~repro.core.pipeline.ListRetriever`,
-the distributed dispatch path (core/serving.py), the baselines' reranker,
-and the benchmarks — goes through this module. It owns the three things
-that used to be duplicated (and therefore drifted) across them:
+This module is the single entry point to the paper's **query phase**
+(Algorithm 1: encode the query → build index features → route to the
+top-``cr`` learned clusters → score those clusters' resident objects →
+top-k). Every consumer — :class:`~repro.core.pipeline.ListRetriever`,
+the streaming server (core/server.py), the distributed dispatch path
+(core/serving.py), the baselines' reranker, and the benchmarks — goes
+through it, so routing, scoring, and batching each have exactly one
+definition.
 
-1. **Backend selection.** ``backend="pallas" | "dense" | "auto"``:
+Public surface
+--------------
 
-   * ``"pallas"`` — the gather-free fused kernel
-     (kernels/fused_topk_score_routed): routed cluster ids are
-     scalar-prefetched and the resident ``(c, cap, d)`` buffers are
-     block-indexed directly, so no ``(B, cr·cap, d)`` candidate copy is
-     ever materialized and the ``cr`` routed lists merge in-kernel.
-   * ``"dense"`` — the pure-jnp reference path (gather + one
-     ``jax.lax.top_k``). Always available, and the parity oracle.
-   * ``"auto"`` — ``"pallas"`` when a compiled TPU backend is present,
-     else ``"dense"`` (interpret-mode Pallas is a correctness tool, not a
-     fast path).
+:func:`make_query_fn`
+    Build the jitted end-to-end query function for a model config.
+    Returns ``fn(rel_params, index_params, w_hat, norm, buf_emb,
+    buf_loc, buf_ids, q_tokens, q_mask, q_loc) -> (ids, scores)``.
+    This is the function a serving process compiles once and calls on
+    every batch.
 
-   ``interpret`` for the Pallas kernels is auto-detected from the
-   platform (off-TPU ⇒ interpreter) and can be forced with the
-   ``REPRO_PALLAS_COMPILE=1`` env var, matching kernels/ops.py.
+:func:`score_candidates`
+    The one dense scoring primitive: ST(q, o) over an explicit
+    candidate set, used by the dense backend, the dispatch path's
+    per-cluster score, and baseline reranking.
 
-2. **The ``score_candidates`` primitive.** One dense ST(q, o) scorer
-   (Eq. 5 serve form) with leading-dim broadcasting, used by the engine's
-   dense backend, serving's per-cluster batched score, and the baselines'
-   candidate reranking — so "the score" has exactly one definition.
+:func:`run_batched`
+    Static-shape batch execution: map a jitted function over arrays in
+    fixed-size chunks, zero-padding the trailing partial chunk so the
+    function compiles for exactly one batch shape.
 
-3. **Static-shape batch padding.** :func:`run_batched` pads the trailing
-   partial batch to the jitted batch shape (one compile per shape) and
-   trims the outputs; previously re-implemented in ``query``,
-   ``brute_force``, and ``_embed``.
+:class:`QueryEngine`
+    A stateful façade binding (params + cluster buffers) with a cache
+    of jitted plans keyed ``(k, cr, backend)`` — what the streaming
+    server and the retriever hold onto.
+
+:func:`resolve_backend` / :func:`legacy_backend` /
+:func:`resolve_cli_backend` / :data:`BACKENDS`
+    Backend-selection rules, including the deprecated ``--use-pallas``
+    alias handling (see below and DESIGN.md §6).
+
+Inputs, throughout: ``q_tokens (B, L) int32`` hashed token ids with
+token 0 = padding, ``q_mask (B, L) bool`` True on real tokens,
+``q_loc (B, 2) float32`` locations in the unit box, and the cluster
+buffers of ``index.build_cluster_buffers`` — ``buf_emb (c, cap, d)``,
+``buf_loc (c, cap, 2)``, ``buf_ids (c, cap)`` with ``-1`` marking
+padding slots. Outputs: ``ids (B, k)`` **global object ids** with
+``-1`` past-the-end, and ``scores (B, k)`` f32 descending.
+
+Backend selection
+-----------------
+
+``backend="pallas" | "dense" | "auto"``:
+
+* ``"pallas"`` — the gather-free fused kernel
+  (kernels/fused_topk_score_routed): routed cluster ids are
+  scalar-prefetched and the resident ``(c, cap, d)`` buffers are
+  block-indexed directly, so no ``(B, cr·cap, d)`` candidate copy is
+  ever materialized and the ``cr`` routed lists merge in-kernel.
+* ``"dense"`` — the pure-jnp reference path (gather + one
+  ``jax.lax.top_k``). Always available, and the parity oracle.
+* ``"auto"`` — ``"pallas"`` when a compiled TPU backend is present,
+  else ``"dense"`` (interpret-mode Pallas is a correctness tool, not a
+  fast path).
+
+``interpret`` for the Pallas kernels is auto-detected from the
+platform (off-TPU ⇒ interpreter) and can be forced with the
+``REPRO_PALLAS_COMPILE=1`` env var, matching kernels/ops.py. Backends
+are bit-compatible: parity across shapes, padding, ties, and ``cr`` is
+enforced by tests/test_query_engine_parity.py.
 """
 from __future__ import annotations
 
@@ -82,10 +119,33 @@ def resolve_backend(backend: str = "auto",
 def legacy_backend(backend: Optional[str], use_pallas: bool) -> str:
     """Resolve the legacy ``use_pallas`` flag: an explicit ``backend``
     always wins; otherwise the bool maps to pallas/dense. The single
-    definition of this alias rule for every entry point."""
+    definition of this alias rule for every library entry point
+    (CLI flags go through :func:`resolve_cli_backend` instead)."""
     if backend is not None:
         return backend
     return "pallas" if use_pallas else "dense"
+
+
+def resolve_cli_backend(backend: Optional[str], use_pallas: bool,
+                        *, default: str = "auto") -> str:
+    """The CLI flavor of the alias rule, shared by every driver:
+    ``--use-pallas`` is deprecated — warn and forward it to
+    ``--backend pallas``; an explicit ``--backend`` always wins (with a
+    warning that the alias was ignored — the flags never silently
+    coexist). Neither flag given → ``default`` ("auto": hardware picks).
+    """
+    if use_pallas:
+        import warnings
+        if backend is None:
+            warnings.warn("--use-pallas is deprecated; forwarding to "
+                          "--backend pallas", DeprecationWarning,
+                          stacklevel=2)
+            return "pallas"
+        if backend != "pallas":
+            warnings.warn(f"--use-pallas ignored: explicit --backend "
+                          f"{backend} wins", DeprecationWarning,
+                          stacklevel=2)
+    return backend or default
 
 
 # ---------------------------------------------------------------------------
@@ -95,7 +155,14 @@ def legacy_backend(backend: Optional[str], use_pallas: bool) -> str:
 
 def score_candidates(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
                      w_hat, *, dist_max: float):
-    """ST(q, o) = w_t·(q·o) + w_s·ŵ_s[⌊S_in·t⌋] over explicit candidates.
+    """Score an explicit candidate set with the paper's serve-form ST.
+
+    ST(q, o) = w_t·(q·o) + w_s·ŵ_s[⌊S_in·t⌋] (Eq. 5): textual relevance
+    is the embedding dot product; spatial relevance looks the normalized
+    proximity ``S_in = 1 − clip(dist/dist_max, 0, 1)`` up in the learned
+    monotone step table ``w_hat (t,)``; ``w_st (..., 2)`` holds the
+    per-query (textual, spatial) mixing weights from
+    ``relevance.st_weights``.
 
     Shapes broadcast over leading dims: q_emb (..., d), q_loc (..., 2),
     w_st (..., 2) against cand_emb (..., N, d), cand_loc (..., N, 2),
@@ -107,6 +174,9 @@ def score_candidates(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
     * engine dense backend:  q (B, d)    × cand (B, N, d)
     * serving per-cluster:   q (c, Q, d) × cand (c, 1, cap, d)
     * baselines rerank:      q (d,)      × cand (N, d)
+
+    This is the ONE definition of "the score" — if you are scoring
+    (query, object) pairs anywhere, call this, don't re-derive it.
     """
     trel = jnp.einsum("...d,...nd->...n", q_emb.astype(jnp.float32),
                       cand_emb.astype(jnp.float32))
@@ -147,13 +217,34 @@ def make_query_fn(cfg, *, cr: int = 1, k: int = 20, backend: str = "auto",
                   block_n: int = 512):
     """Build the jitted query-phase function (paper Algorithm 1).
 
+    The returned function runs the whole serve path in one XLA program:
+    encode queries (dual-encoder), build index features (Eq. 9–10),
+    route to the top-``cr`` clusters (Eq. 11), score those clusters'
+    resident objects, and keep the top ``k``.
+
     signature: fn(rel_params, index_params, w_hat, norm,
                   buf_emb, buf_loc, buf_ids, q_tokens, q_mask, q_loc)
                -> (ids (B, k) global object ids, scores (B, k))
 
-    ``backend="pallas"`` runs gather-free (scalar-prefetched routing into
-    the resident buffers, in-kernel cr-merge); ``"dense"`` is the jnp
-    reference (gather + top-k); ``"auto"`` picks per platform.
+    where ``rel_params`` / ``index_params`` are the trained relevance
+    and cluster-classifier params, ``w_hat (t,)`` is the serve-form
+    spatial step table (``spatial.extract_lookup``), ``norm`` the
+    location normalizer bounds (``index.loc_normalizer``), and
+    ``buf_*`` the padded cluster buffers (module docstring). Rows past
+    the valid candidates come back as ``(-1, NEG_INF)`` pairs.
+
+    Keyword args: ``cr`` routed clusters per query; ``k`` results per
+    query; ``backend``/``interpret`` per the module docstring
+    (``"pallas"`` runs gather-free — scalar-prefetched routing into the
+    resident buffers, in-kernel cr-merge; ``"dense"`` is the jnp
+    reference; ``"auto"`` picks per platform); ``dist_max`` the
+    distance normalizer of Eq. 5 (√2 for the unit box);
+    ``weight_mode`` how the (textual, spatial) mixing weights are
+    produced; ``block_n`` the Pallas streaming tile size.
+
+    The result is a ``jax.jit`` function: every distinct batch shape
+    triggers one compile, so serve fixed shapes via :func:`run_batched`
+    (or hold a :class:`QueryEngine`, which does both for you).
     """
     backend, interpret = resolve_backend(backend, interpret)
 
@@ -196,10 +287,25 @@ def pad_leading(arr, batch: int):
 def run_batched(fn: Callable, arrays: Sequence[np.ndarray], *, batch: int):
     """Map a jitted ``fn`` over ``arrays`` in static-shape chunks.
 
-    Every chunk fed to ``fn`` has exactly ``batch`` rows (the trailing
-    partial chunk is zero-padded, outputs trimmed) so the jit compiles
-    once. ``fn(*chunks) -> array | tuple``; returns np.ndarray(s)
-    concatenated back to the full leading dim.
+    ``arrays`` is a sequence of equal-leading-dim inputs (e.g. tokens,
+    mask, locations, each with ``n`` rows). They are walked in lockstep
+    ``batch`` rows at a time, and every chunk fed to ``fn`` has exactly
+    ``batch`` rows: the trailing partial chunk is zero-padded up to
+    ``batch`` (:func:`pad_leading`) and the corresponding output rows
+    trimmed. ``fn`` therefore sees ONE batch shape and jit-compiles
+    exactly once, no matter what ``n`` is.
+
+    ``fn(*chunks) -> array | tuple of arrays`` (leading dim ``batch``);
+    returns the per-chunk outputs concatenated back to leading dim
+    ``n`` as ``np.ndarray`` — a single array if ``fn`` returned one,
+    else a tuple.
+
+    Padding rows are all-zeros; make sure ``fn`` is row-independent
+    (every query-phase function here is), so pad rows can't perturb
+    real rows. This is the padding rule the whole repo shares: the
+    retriever, the brute-force oracle, corpus embedding, and the
+    streaming server's micro-batch flushes (core/server.py) — which is
+    why a micro-batched result is bit-identical to an offline one.
     """
     n = arrays[0].shape[0]
     assert all(a.shape[0] == n for a in arrays), [a.shape for a in arrays]
@@ -226,8 +332,14 @@ class QueryEngine:
     """Bound (params + buffers) query engine with cached jitted plans.
 
     Both the single-host path (``ListRetriever.query``) and callers that
-    hold raw artifacts use this; the distributed dispatch path shares
+    hold raw artifacts use this; the streaming server (core/server.py,
+    DESIGN.md §7) holds one and flushes micro-batches through
+    :meth:`query`. The distributed dispatch path shares
     :func:`score_candidates` instead (its data movement is the point).
+
+    ``buffers`` may be swapped in place after ``insert_objects`` /
+    ``delete_objects`` (they return new dicts); plans don't rebind —
+    buffers are jit *arguments*, so no recompile either.
     """
 
     def __init__(self, cfg, rel_params, index_params, norm, buffers, *,

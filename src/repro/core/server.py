@@ -1,0 +1,507 @@
+"""Streaming serving stack over the unified query engine (DESIGN.md §7).
+
+The engine (core/engine.py) answers *batches*; real traffic arrives as
+*individual* requests. This module is the production-shaped layer in
+between — everything a long-lived serving process needs so that no user
+request pays compile latency, repeated work, or a ragged-batch recompile:
+
+* :class:`StreamingServer` — an **async micro-batcher**. ``await
+  server.submit(tokens, mask, loc)`` enqueues one request; the queue is
+  flushed into a single engine call when it reaches the configured
+  static batch size (*size* flush) or when the oldest request has waited
+  ``max_delay_ms`` (*deadline* flush). Flushes go through
+  ``QueryEngine.query`` → ``engine.run_batched``, so a partial flush is
+  zero-padded to the jitted batch shape by exactly the same rule as any
+  direct engine call — micro-batched results are bit-identical to
+  offline ones (tests/test_server.py).
+
+* a **two-tier result cache** that exploits workload skew (WISK's
+  observation: real query logs are heavily repeated):
+
+  - *exact tier* — LRU keyed on the full request bytes
+    ``(k, cr, tokens, mask, loc)``; a repeat of a previously answered
+    request returns without touching the engine.
+  - *near-duplicate tier* (opt-in via ``near_cells > 0``) — keyed on the
+    **keyword signature** (sorted unique token ids) plus the **spatial
+    cell** (location quantized to a ``near_cells × near_cells`` grid).
+    Two queries with the same keywords issued a few meters apart share
+    one answer. This tier is an *approximation* — word order and
+    in-cell displacement are dropped — so it is off by default and
+    meant for skew-heavy traffic where the recall cost is measured
+    (benchmarks/bench_serving.py reports both tiers separately).
+
+  Identical requests that are *in flight* (submitted before the first
+  copy's flush completed) are coalesced onto one future instead of
+  occupying two batch slots.
+
+* **cache invalidation on index mutation** — :meth:`insert_objects` /
+  :meth:`delete_objects` wrap the buffer mutations of core/index.py,
+  swap the engine's resident buffers, and clear both cache tiers in the
+  same event-loop step, so a cached answer can never be served across a
+  corpus change.
+
+* a **warm-up manager** — :meth:`warmup` pre-traces the configured
+  (batch, backend) shapes through the *same* bound plan the flush path
+  uses, so the first live request hits an already-compiled program.
+  Per-shape compile seconds are recorded in the stats block.
+
+The event loop is single-threaded and the engine call blocks it for the
+duration of one batch — the right model for a single-host accelerator
+where query batches are executed serially anyway. A multi-host front
+tier would run one server per accelerator behind a router; the dispatch
+path (core/serving.py, DESIGN.md §5) is the intra-pod analogue.
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import engine as engine_lib
+from repro.core import index as index_lib
+
+
+# ---------------------------------------------------------------------------
+# Config + stats
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    """Knobs of the streaming server (DESIGN.md §7).
+
+    batch_size      static jitted batch shape; a full queue flushes
+                    immediately ("size" flush)
+    max_delay_ms    deadline flush: the oldest queued request never waits
+                    longer than this before its batch is launched
+    k, cr           top-k size and routed-clusters fanout of every answer
+    backend         engine backend for flushes (None → the engine's own)
+    cache_size      exact-tier LRU entries
+    near_cells      near-duplicate tier grid resolution per axis
+                    (0 disables the tier — the default: it approximates)
+    near_cache_size near-tier LRU entries
+    """
+    batch_size: int = 64
+    max_delay_ms: float = 2.0
+    k: int = 10
+    cr: int = 1
+    backend: Optional[str] = None
+    cache_size: int = 8192
+    near_cells: int = 0
+    near_cache_size: int = 8192
+
+
+LATENCY_WINDOW = 65536       # sliding window of most-recent request latencies
+
+
+@dataclasses.dataclass
+class ServerStats:
+    """Counters + per-request latencies; read via StreamingServer.metrics().
+
+    ``latencies_s`` is a bounded deque (most recent :data:`LATENCY_WINDOW`
+    requests) so a long-lived server neither grows without bound nor pays
+    an ever-increasing percentile cost in ``metrics()``.
+    """
+    n_requests: int = 0
+    exact_hits: int = 0
+    near_hits: int = 0
+    coalesced: int = 0
+    engine_batches: int = 0
+    engine_queries: int = 0            # real (unpadded) rows sent on-device
+    flushes: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"size": 0, "deadline": 0, "drain": 0})
+    invalidations: int = 0
+    compile_seconds: Dict[str, float] = dataclasses.field(default_factory=dict)
+    latencies_s: "collections.deque" = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
+
+
+def latency_percentiles(latencies_s: Sequence[float]) -> Dict[str, float]:
+    """→ {"p50", "p95", "p99", "mean"} in milliseconds (0.0 when empty)."""
+    if not len(latencies_s):
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0}
+    ms = np.asarray(latencies_s, np.float64) * 1e3
+    return {"p50": float(np.percentile(ms, 50)),
+            "p95": float(np.percentile(ms, 95)),
+            "p99": float(np.percentile(ms, 99)),
+            "mean": float(ms.mean())}
+
+
+def zipf_sample(rng, n_unique: int, size: int, *, a: float = 1.05):
+    """Rank-frequency Zipf draw over ``[0, n_unique)`` — the standard model
+    of query-log skew (WISK): p(rank r) ∝ 1/r^a. ``a <= 0`` → uniform."""
+    if a <= 0:
+        return rng.integers(0, n_unique, size=size)
+    p = 1.0 / np.arange(1, n_unique + 1, dtype=np.float64) ** a
+    return rng.choice(n_unique, size=size, p=p / p.sum())
+
+
+# ---------------------------------------------------------------------------
+# LRU cache (both tiers)
+# ---------------------------------------------------------------------------
+
+
+class LRUCache:
+    """Plain ordered-dict LRU; get() refreshes recency, put() evicts oldest."""
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self._d: "collections.OrderedDict" = collections.OrderedDict()
+
+    def get(self, key):
+        if key not in self._d:
+            return None
+        self._d.move_to_end(key)
+        return self._d[key]
+
+    def put(self, key, value):
+        if self.capacity <= 0:
+            return
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+
+    def clear(self):
+        self._d.clear()
+
+    def __len__(self):
+        return len(self._d)
+
+
+def exact_key(tokens: np.ndarray, mask: np.ndarray, loc: np.ndarray,
+              k: int, cr: int) -> tuple:
+    """Full-request cache key: every byte of the request participates."""
+    return (k, cr, tokens.tobytes(), mask.tobytes(), loc.tobytes())
+
+
+def near_key(tokens: np.ndarray, mask: np.ndarray, loc: np.ndarray,
+             k: int, cr: int, cells: int) -> tuple:
+    """Near-duplicate key: keyword signature (sorted unique token ids) +
+    spatial cell (loc quantized to a cells×cells grid over the unit box)."""
+    sig = tuple(sorted(set(tokens[mask].tolist())))
+    cell = tuple(np.clip((loc * cells).astype(np.int64), 0, cells - 1).tolist())
+    return (k, cr, sig, cell)
+
+
+# ---------------------------------------------------------------------------
+# The streaming server
+# ---------------------------------------------------------------------------
+
+
+class _Pending:
+    __slots__ = ("tokens", "mask", "loc", "ekey", "nkey", "future")
+
+    def __init__(self, tokens, mask, loc, ekey, nkey, future):
+        self.tokens, self.mask, self.loc = tokens, mask, loc
+        self.ekey, self.nkey, self.future = ekey, nkey, future
+
+
+class StreamingServer:
+    """Micro-batching, caching, pre-warmed front end for one QueryEngine.
+
+    Single-event-loop usage::
+
+        server = StreamingServer(retriever.engine(),
+                                 ServerConfig(batch_size=64, max_delay_ms=2))
+        server.warmup()
+        ids, scores = await server.submit(tokens_row, mask_row, loc_row)
+
+    ``submit`` answers one request: ``ids (k,)`` global object ids
+    (``-1`` past-the-end) and ``scores (k,)`` — the same contract as one
+    row of ``QueryEngine.query``. Batch replay without writing the async
+    plumbing: :meth:`serve_all`.
+    """
+
+    def __init__(self, engine: engine_lib.QueryEngine,
+                 config: Optional[ServerConfig] = None):
+        self.engine = engine
+        self.cfg = config or ServerConfig()
+        self.stats = ServerStats()
+        self._exact = LRUCache(self.cfg.cache_size)
+        self._near = LRUCache(self.cfg.near_cache_size)
+        self._inflight: Dict[tuple, asyncio.Future] = {}
+        self._pending: List[_Pending] = []
+        self._timer: Optional[asyncio.TimerHandle] = None
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+
+    # --- warm-up manager --------------------------------------------------
+
+    def warmup(self, batch_sizes: Optional[Sequence[int]] = None,
+               backends: Optional[Sequence[str]] = None) -> Dict[str, float]:
+        """Pre-trace every configured (batch, backend) shape.
+
+        Runs an all-padding batch through the *same* bound plan the flush
+        path uses (same ``(k, cr, backend)`` plan key, same batch shape),
+        so the jit cache is hot before the first live request. Returns
+        {"backend@batch": seconds} and records it in ``stats``.
+        """
+        L = self.engine.cfg.max_len
+        for backend in backends or (self.cfg.backend,):
+            for b in batch_sizes or (self.cfg.batch_size,):
+                tok = np.zeros((b, L), np.int32)
+                tok[:, 0] = 1                        # CLS: keep masks non-empty
+                msk = tok != 0
+                loc = np.zeros((b, 2), np.float32)
+                t0 = time.perf_counter()
+                self.engine.query(tok, msk, loc, k=self.cfg.k, cr=self.cfg.cr,
+                                  batch=b, backend=backend)
+                name = f"{backend or self.engine.backend}@{b}"
+                self.stats.compile_seconds[name] = time.perf_counter() - t0
+        return dict(self.stats.compile_seconds)
+
+    # --- index mutation + cache invalidation (DESIGN.md §7) ---------------
+
+    def insert_objects(self, new_emb, new_loc, new_ids):
+        """Route new objects into the resident buffers and invalidate the
+        result caches (index.insert_objects semantics, bounds-checked).
+
+        After a mutation the SERVER'S ENGINE is the source of truth for
+        the corpus: a ``ListRetriever`` that originally supplied the
+        engine still holds the pre-mutation ``buffers`` / ``obj_emb`` /
+        ``obj_assign``, so its offline oracles (``brute_force``, cluster
+        metrics) describe the old corpus until it is rebuilt. Mutate
+        through the retriever and ``apply_buffers`` the result if you
+        need the two to stay aligned."""
+        buf = index_lib.insert_objects(
+            self.engine.buffers, self.engine.index_params, self.engine.norm,
+            new_emb, new_loc, new_ids)
+        self.apply_buffers(buf)
+        return buf
+
+    def delete_objects(self, del_ids):
+        """Lazily delete objects (slots masked to -1) and invalidate."""
+        buf = index_lib.delete_objects(self.engine.buffers, del_ids)
+        self.apply_buffers(buf)
+        return buf
+
+    def apply_buffers(self, buffers):
+        """Swap the engine's resident cluster buffers for ``buffers`` and
+        drop every cached result — one atomic event-loop step, so a
+        pre-mutation answer is never served post-mutation. Requests
+        already queued are unaffected: they flush *after* the swap and
+        therefore score against the new buffers."""
+        self.engine.buffers = buffers
+        self.invalidate_cache()
+
+    def invalidate_cache(self):
+        self._exact.clear()
+        self._near.clear()
+        self.stats.invalidations += 1
+
+    # --- the micro-batcher ------------------------------------------------
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+    def _adopt_loop(self, loop):
+        """Bind the batcher state to ``loop``. Timer handles, pending
+        entries, and in-flight futures are per-event-loop objects: if a
+        previous ``asyncio.run`` was aborted mid-batch (engine error,
+        cancellation), its leftovers would poison a fresh loop — a timer
+        that never re-arms, flushes resolving futures of a closed loop,
+        duplicates coalescing onto dead futures. On loop change, drop
+        them (their awaiters are gone with the old loop)."""
+        if self._loop is not loop:
+            if self._timer is not None:
+                self._timer.cancel()
+                self._timer = None
+            self._pending.clear()
+            self._inflight.clear()
+            self._loop = loop
+
+    async def submit(self, tokens, mask, loc, *, t_arrival=None):
+        """Answer one spatial-keyword request: → (ids (k,), scores (k,)).
+
+        Cache hits return immediately; misses wait for the size- or
+        deadline-triggered flush of the current micro-batch. The
+        returned arrays are read-only (shared with the result cache);
+        ``.copy()`` before mutating.
+
+        ``t_arrival`` (a ``time.perf_counter()`` stamp) backdates the
+        latency measurement to the request's intended arrival time —
+        open-loop load generators pass it so queueing backlog under
+        overload is counted instead of omitted.
+        """
+        tokens = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        mask = np.ascontiguousarray(np.asarray(mask, bool))
+        loc = np.ascontiguousarray(np.asarray(loc, np.float32))
+        t0 = time.perf_counter() if t_arrival is None else t_arrival
+        self._adopt_loop(asyncio.get_running_loop())
+        self.stats.n_requests += 1
+        k, cr = self.cfg.k, self.cfg.cr
+
+        ekey = exact_key(tokens, mask, loc, k, cr)
+        hit = self._exact.get(ekey)
+        if hit is not None:
+            self.stats.exact_hits += 1
+            self.stats.latencies_s.append(time.perf_counter() - t0)
+            return hit
+        nkey = None
+        if self.cfg.near_cells > 0:
+            nkey = near_key(tokens, mask, loc, k, cr, self.cfg.near_cells)
+            hit = self._near.get(nkey)
+            if hit is not None:
+                self.stats.near_hits += 1
+                self.stats.latencies_s.append(time.perf_counter() - t0)
+                return hit
+
+        inflight = self._inflight.get(ekey)
+        if inflight is not None:                 # identical request queued:
+            self.stats.coalesced += 1            # share its future, don't
+            res = await inflight                 # spend a second batch slot
+            self.stats.latencies_s.append(time.perf_counter() - t0)
+            return res
+
+        loop = asyncio.get_running_loop()
+        fut: asyncio.Future = loop.create_future()
+        self._inflight[ekey] = fut
+        self._pending.append(_Pending(tokens, mask, loc, ekey, nkey, fut))
+        if len(self._pending) >= self.cfg.batch_size:
+            self._flush("size")
+        elif self._timer is None:
+            self._timer = loop.call_later(self.cfg.max_delay_ms / 1e3,
+                                          self._flush, "deadline")
+        res = await fut
+        self.stats.latencies_s.append(time.perf_counter() - t0)
+        return res
+
+    def flush_now(self):
+        """Force-flush the queue (used by drain loops and shutdown)."""
+        self._flush("drain")
+
+    def _flush(self, reason: str):
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+        if not self._pending:
+            return
+        pending, self._pending = self._pending, []
+        tok = np.stack([p.tokens for p in pending])
+        msk = np.stack([p.mask for p in pending])
+        loc = np.stack([p.loc for p in pending])
+        try:
+            # one padded static-shape chunk: run_batched's padding rules
+            ids, scores = self.engine.query(
+                tok, msk, loc, k=self.cfg.k, cr=self.cfg.cr,
+                batch=self.cfg.batch_size, backend=self.cfg.backend)
+        except Exception as e:                   # noqa: BLE001
+            for p in pending:
+                self._inflight.pop(p.ekey, None)
+                if not p.future.done():
+                    p.future.set_exception(e)
+            return
+        self.stats.flushes[reason] += 1
+        self.stats.engine_batches += 1
+        self.stats.engine_queries += len(pending)
+        for i, p in enumerate(pending):
+            res = (ids[i].copy(), scores[i].copy())
+            for arr in res:              # shared with the cache + every
+                arr.setflags(write=False)  # waiter: freeze, don't trust
+            self._exact.put(p.ekey, res)
+            if p.nkey is not None:
+                self._near.put(p.nkey, res)
+            self._inflight.pop(p.ekey, None)
+            if not p.future.done():
+                p.future.set_result(res)
+
+    # --- batch replay convenience ----------------------------------------
+
+    async def _drain(self, tasks):
+        """Resolve every submitted task: one loop tick lets each queued
+        submit run to its enqueue point (ready callbacks are FIFO, so
+        all of them go before we resume), one forced flush drains the
+        trailing partial batch, and the deadline timer backstops any
+        straggler — no busy-spinning over the task list."""
+        await asyncio.sleep(0)
+        self.flush_now()
+        return await asyncio.gather(*tasks)
+
+    async def submit_all(self, tokens, mask, locs):
+        """Submit every row of (n, L)/(n, L)/(n, 2), drain, and return
+        stacked (ids (n, k), scores (n, k)). Requests enqueue in row
+        order, so flush boundaries land exactly where a direct
+        ``engine.run_batched`` call would put its chunk boundaries."""
+        tasks = [asyncio.ensure_future(self.submit(tokens[i], mask[i],
+                                                   locs[i]))
+                 for i in range(len(tokens))]
+        out = await self._drain(tasks)
+        return (np.stack([o[0] for o in out]),
+                np.stack([o[1] for o in out]))
+
+    def serve_all(self, tokens, mask, locs):
+        """Synchronous wrapper around :meth:`submit_all` (owns the loop)."""
+        return asyncio.run(self.submit_all(tokens, mask, locs))
+
+    # --- reporting --------------------------------------------------------
+
+    def metrics(self, wall_seconds: Optional[float] = None) -> dict:
+        """One flat dict for drivers/benchmarks: hit rates, batch fill,
+        latency percentiles (ms), flush/invalidation counters, compile
+        seconds, and QPS when ``wall_seconds`` is given."""
+        s = self.stats
+        n = max(s.n_requests, 1)
+        filled = s.engine_batches * self.cfg.batch_size
+        out = {
+            "requests": s.n_requests,
+            "exact_hit_rate": s.exact_hits / n,
+            "near_hit_rate": s.near_hits / n,
+            "hit_rate": (s.exact_hits + s.near_hits) / n,
+            "coalesced": s.coalesced,
+            "engine_batches": s.engine_batches,
+            "engine_queries": s.engine_queries,
+            "batch_fill": s.engine_queries / filled if filled else 0.0,
+            "latency_ms": latency_percentiles(s.latencies_s),
+            "flushes": dict(s.flushes),
+            "invalidations": s.invalidations,
+            "compile_seconds": dict(s.compile_seconds),
+        }
+        if wall_seconds is not None and wall_seconds > 0:
+            out["qps"] = s.n_requests / wall_seconds
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Load generation (drivers + benchmarks)
+# ---------------------------------------------------------------------------
+
+
+async def open_loop(server: StreamingServer, requests, *, qps: float):
+    """Fixed-rate arrivals: one submit every 1/qps seconds regardless of
+    completions. Each submit is stamped with its INTENDED arrival time,
+    so when the engine can't keep up the backlog shows up as queueing
+    latency instead of being coordinated-omitted from the percentiles.
+    ``requests`` is a sequence of (tokens, mask, loc) rows."""
+    interval = 1.0 / qps
+    t_start = time.perf_counter()
+    tasks = []
+    for i, (tok, msk, loc) in enumerate(requests):
+        arrival = t_start + i * interval
+        delay = arrival - time.perf_counter()
+        if delay > 0:
+            await asyncio.sleep(delay)
+        tasks.append(asyncio.ensure_future(
+            server.submit(tok, msk, loc, t_arrival=arrival)))
+    return await server._drain(tasks)
+
+
+async def closed_loop(server: StreamingServer, requests, *,
+                      concurrency: int):
+    """Fixed-concurrency workers: each keeps exactly one request
+    outstanding, pulling the next from a shared iterator on completion."""
+    results = [None] * len(requests)
+    it = iter(range(len(requests)))
+
+    async def worker():
+        for i in it:
+            tok, msk, loc = requests[i]
+            results[i] = await server.submit(tok, msk, loc)
+
+    await asyncio.gather(*[worker()
+                           for _ in range(min(concurrency, len(requests)))])
+    return results

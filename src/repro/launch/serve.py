@@ -1,16 +1,24 @@
-"""LIST serving driver: train (or load) a retriever, then serve batched
-spatial-keyword queries through the learned index.
+"""LIST serving driver: train (or load) a retriever, then run a
+long-lived streaming server (core/server.py, DESIGN.md §7) and replay a
+skewed query workload against it — open-loop (fixed arrival rate) or
+closed-loop (fixed concurrency) load generation.
 
     PYTHONPATH=src python -m repro.launch.serve --objects 4000 --queries 600 \
-        --train-steps 200 --index-steps 400 --serve-batch 64
+        --train-steps 200 --index-steps 400 --serve-batch 64 \
+        --mode closed --concurrency 64 --requests 1200 --skew 1.05
 
-Reports the paper's serving metrics: Recall@k / NDCG@k vs brute force,
-latency per batch, candidates scanned (the 1/c search-space reduction),
-cluster quality P(C) / IF(C).
+Reports two layers of metrics:
+
+* quality (one-shot, as before): Recall@k / NDCG@k vs brute force,
+  candidates scanned (the 1/c search-space reduction), P(C) / IF(C);
+* serving (streamed): p50/p95/p99 latency, achieved QPS, cache hit
+  rates per tier, micro-batch fill, flush-reason counts, and per-shape
+  warm-up compile seconds.
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import dataclasses
 import time
 
@@ -21,7 +29,31 @@ from repro.configs import get_config
 from repro.core import cluster_metrics as cm
 from repro.core import index as index_lib
 from repro.core import pipeline as pl
+from repro.core import server as server_lib
+from repro.core.engine import resolve_cli_backend
 from repro.data import GeoCorpus, GeoCorpusConfig
+
+
+# ---------------------------------------------------------------------------
+# Workload construction (load-gen loops live next to the server:
+# server_lib.open_loop / server_lib.closed_loop)
+# ---------------------------------------------------------------------------
+
+
+def build_workload(corpus, query_ids, n_requests: int, *, skew: float,
+                   seed: int):
+    """Zipf-skewed replay of the test split: (request list, query ids)."""
+    rng = np.random.default_rng(seed + 13)
+    picks = query_ids[server_lib.zipf_sample(rng, len(query_ids), n_requests,
+                                             a=skew)]
+    tok, msk = corpus.query_tokens(picks)
+    loc = corpus.q_loc[picks].astype(np.float32)
+    return [(tok[i], msk[i], loc[i]) for i in range(n_requests)], picks
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
 
 
 def main(argv=None):
@@ -34,13 +66,35 @@ def main(argv=None):
     ap.add_argument("--clusters", type=int, default=8)
     ap.add_argument("--cr", type=int, default=1)
     ap.add_argument("--k", type=int, default=10)
-    ap.add_argument("--serve-batch", type=int, default=64)
     ap.add_argument("--use-pallas", action="store_true",
-                    help="legacy alias for --backend pallas")
+                    help="DEPRECATED alias for --backend pallas "
+                         "(warns and forwards)")
     ap.add_argument("--backend", default=None,
                     choices=["pallas", "dense", "auto"])
     ap.add_argument("--seed", type=int, default=0)
+    # --- streaming-server knobs ---
+    ap.add_argument("--serve-batch", type=int, default=64,
+                    help="micro-batch size (the static jitted batch shape)")
+    ap.add_argument("--max-delay-ms", type=float, default=2.0,
+                    help="deadline flush: max queueing delay per request")
+    ap.add_argument("--cache-size", type=int, default=8192)
+    ap.add_argument("--near-cells", type=int, default=0,
+                    help="near-duplicate cache grid (0 = exact tier only)")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip pre-tracing (the first query run — here the "
+                         "quality snapshot — then pays the compile)")
+    # --- load generation ---
+    ap.add_argument("--mode", default="closed", choices=["open", "closed"])
+    ap.add_argument("--requests", type=int, default=1200,
+                    help="total requests replayed against the server")
+    ap.add_argument("--qps", type=float, default=500.0,
+                    help="open-loop arrival rate")
+    ap.add_argument("--concurrency", type=int, default=64,
+                    help="closed-loop outstanding requests")
+    ap.add_argument("--skew", type=float, default=1.05,
+                    help="Zipf exponent of the query workload (0 = uniform)")
     args = ap.parse_args(argv)
+    backend = resolve_cli_backend(args.backend, args.use_pallas)
 
     cfg = dataclasses.replace(
         get_config("list-dual-encoder"),
@@ -67,19 +121,29 @@ def main(argv=None):
     tr, va, te = corpus.split()
     positives = [corpus.positives[q] for q in te]
 
+    # --- the streaming server (DESIGN.md §7) ------------------------------
+    # built and warmed BEFORE any other query runs: the quality snapshot
+    # below uses the same (k, cr, backend, batch) plan, so warming later
+    # would measure a hot cache and report bogus compile seconds
+    server = server_lib.StreamingServer(r.engine(), server_lib.ServerConfig(
+        batch_size=args.serve_batch, max_delay_ms=args.max_delay_ms,
+        k=args.k, cr=args.cr, backend=backend,
+        cache_size=args.cache_size, near_cells=args.near_cells))
+    if not args.no_warmup:
+        compiles = server.warmup()
+        print("== warm-up: pre-traced "
+              + ", ".join(f"{k} in {v:.2f}s" for k, v in compiles.items())
+              + " ==")
+
+    # --- quality snapshot (one-shot, vs brute force) ----------------------
     t0 = time.perf_counter()
     bf_ids, _ = r.brute_force(te, k=args.k, batch=args.serve_batch)
     t_bf = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    from repro.core.engine import legacy_backend
-    ids, _ = r.query(te, k=args.k, cr=args.cr,
-                     backend=legacy_backend(args.backend, args.use_pallas),
+    ids, _ = r.query(te, k=args.k, cr=args.cr, backend=backend,
                      batch=args.serve_batch)
-    t_list = time.perf_counter() - t0
-
     cap = buf["capacity"]
     scanned = args.cr * cap
-    print(f"\n== serving {len(te)} queries (batch={args.serve_batch}) ==")
+    print(f"\n== quality over {len(te)} held-out queries ==")
     print(f"brute force : recall@{args.k}="
           f"{cm.recall_at_k(bf_ids, positives, args.k):.4f} "
           f"ndcg@5={cm.ndcg_at_k(bf_ids, positives, 5):.4f} "
@@ -87,7 +151,7 @@ def main(argv=None):
     print(f"LIST cr={args.cr}  : recall@{args.k}="
           f"{cm.recall_at_k(ids, positives, args.k):.4f} "
           f"ndcg@5={cm.ndcg_at_k(ids, positives, 5):.4f} "
-          f"({t_list:.2f}s, scans ≤{scanned} objects/query = "
+          f"(scans ≤{scanned} objects/query = "
           f"{scanned / args.objects:.1%} of corpus)")
 
     q_emb = pl.embed_queries(r.rel_params, corpus, cfg, te)
@@ -98,6 +162,37 @@ def main(argv=None):
     pc, _ = cm.cluster_precision(qa, positives, r.obj_assign, cfg.n_clusters)
     print(f"cluster quality: P(C)={pc:.4f} "
           f"IF(C)={cm.imbalance_factor(r.obj_assign, cfg.n_clusters):.3f}")
+
+    # --- streamed load against the pre-built server -----------------------
+    requests, picks = build_workload(corpus, te, args.requests,
+                                     skew=args.skew, seed=args.seed)
+    print(f"== streaming {args.requests} requests "
+          f"({len(set(picks.tolist()))} unique, zipf a={args.skew}) "
+          f"mode={args.mode} ==")
+    t0 = time.perf_counter()
+    if args.mode == "open":
+        results = asyncio.run(
+            server_lib.open_loop(server, requests, qps=args.qps))
+    else:
+        results = asyncio.run(
+            server_lib.closed_loop(server, requests,
+                                   concurrency=args.concurrency))
+    wall = time.perf_counter() - t0
+
+    m = server.metrics(wall_seconds=wall)
+    lat = m["latency_ms"]
+    served_ids = np.stack([res[0] for res in results])
+    served_pos = [corpus.positives[q] for q in picks]
+    print(f"served QPS  : {m['qps']:.1f} ({wall:.2f}s wall)")
+    print(f"latency ms  : p50={lat['p50']:.2f} p95={lat['p95']:.2f} "
+          f"p99={lat['p99']:.2f} mean={lat['mean']:.2f}")
+    print(f"cache       : hit_rate={m['hit_rate']:.1%} "
+          f"(exact={m['exact_hit_rate']:.1%} near={m['near_hit_rate']:.1%} "
+          f"coalesced={m['coalesced']})")
+    print(f"micro-batch : {m['engine_batches']} engine batches, "
+          f"fill={m['batch_fill']:.1%}, flushes={m['flushes']}")
+    print(f"recall@{args.k} under serving: "
+          f"{cm.recall_at_k(served_ids, served_pos, args.k):.4f}")
     return 0
 
 

@@ -1,0 +1,344 @@
+"""Streaming-server tier (core/server.py, DESIGN.md §7).
+
+Covers the acceptance criteria of the serving stack:
+
+* micro-batched results are BIT-IDENTICAL to direct engine.run_batched
+  calls — including across a flush boundary and after an insert_objects
+  cache invalidation;
+* a cached repeat query returns without invoking the engine (call-count
+  spy on QueryEngine.query);
+* flush triggers: size vs deadline; partial batches pad by the engine's
+  run_batched rule;
+* cache tiers: exact LRU, near-duplicate (cell + keyword signature),
+  in-flight coalescing, and invalidation on insert/delete.
+"""
+import asyncio
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import engine as engine_lib
+from repro.core import index as il
+from repro.core import relevance
+from repro.core import server as server_lib
+
+DIST_MAX = 1.414
+
+
+# ---------------------------------------------------------------------------
+# Fixture: a tiny bound engine (random params — serving is quality-agnostic)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def engine_parts():
+    cfg = dataclasses.replace(
+        get_config("list-dual-encoder"),
+        n_layers=2, d_model=32, n_heads=2, d_ff=64, vocab_size=512,
+        max_len=8, spatial_t=50, n_clusters=4, index_mlp_hidden=(16,))
+    rng = np.random.default_rng(11)
+    params = relevance.relevance_init(jax.random.PRNGKey(0), cfg)
+    n, c, cap = 96, cfg.n_clusters, 64       # headroom for inserts
+    obj_emb = rng.normal(size=(n, cfg.d_model)).astype(np.float32)
+    obj_loc = rng.uniform(size=(n, 2)).astype(np.float32)
+    norm = il.loc_normalizer(jnp.asarray(obj_loc))
+    iparams = il.index_init(jax.random.PRNGKey(5), cfg.d_model, c,
+                            hidden=(16,))
+    feats = il.build_features(jnp.asarray(obj_emb), jnp.asarray(obj_loc),
+                              norm)
+    top = np.asarray(il.assign_clusters(iparams, feats, top=2))
+    buf = il.build_cluster_buffers(top, obj_emb, obj_loc, n_clusters=c,
+                                   capacity=cap)
+    return cfg, params, iparams, norm, buf
+
+
+def make_engine(engine_parts):
+    cfg, params, iparams, norm, buf = engine_parts
+    return engine_lib.QueryEngine(cfg, params, iparams, norm, buf,
+                                  dist_max=DIST_MAX, backend="dense")
+
+
+def make_server(engine_parts, **over):
+    eng = make_engine(engine_parts)
+    kw = dict(batch_size=4, max_delay_ms=30.0, k=5, cr=2, backend="dense")
+    kw.update(over)
+    return server_lib.StreamingServer(eng, server_lib.ServerConfig(**kw))
+
+
+def make_requests(rng, n, cfg):
+    tok = rng.integers(2, cfg.vocab_size, (n, cfg.max_len)).astype(np.int32)
+    tok[:, 0] = 1
+    msk = np.ones((n, cfg.max_len), bool)
+    loc = rng.uniform(size=(n, 2)).astype(np.float32)
+    return tok, msk, loc
+
+
+def spy_on(eng):
+    """Wrap eng.query with a call counter (the acceptance-criterion spy)."""
+    calls = []
+    orig = eng.query
+
+    def counted(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    eng.query = counted
+    return calls
+
+
+def direct(eng, tok, msk, loc, *, k=5, cr=2, batch=4):
+    """The oracle: the same queries straight through engine.run_batched."""
+    return eng.query(tok, msk, loc, k=k, cr=cr, batch=batch, backend="dense")
+
+
+# ---------------------------------------------------------------------------
+# Flush triggers
+# ---------------------------------------------------------------------------
+
+
+def test_flush_on_size(engine_parts, rng):
+    server = make_server(engine_parts, max_delay_ms=60_000.0)  # never fires
+    tok, msk, loc = make_requests(rng, 4, server.engine.cfg)
+
+    async def go():
+        tasks = [asyncio.ensure_future(server.submit(tok[i], msk[i], loc[i]))
+                 for i in range(4)]
+        return await asyncio.gather(*tasks)
+
+    out = asyncio.run(go())
+    assert server.stats.flushes == {"size": 1, "deadline": 0, "drain": 0}
+    ids_d, sc_d = direct(make_engine(engine_parts), tok, msk, loc)
+    for i, (ids, sc) in enumerate(out):
+        assert np.array_equal(ids, ids_d[i]) and np.array_equal(sc, sc_d[i])
+
+
+def test_flush_on_deadline(engine_parts, rng):
+    server = make_server(engine_parts, batch_size=8, max_delay_ms=25.0)
+    tok, msk, loc = make_requests(rng, 3, server.engine.cfg)
+
+    async def go():
+        tasks = [asyncio.ensure_future(server.submit(tok[i], msk[i], loc[i]))
+                 for i in range(3)]
+        return await asyncio.gather(*tasks)
+
+    t0 = time.perf_counter()
+    out = asyncio.run(go())
+    assert time.perf_counter() - t0 >= 0.025    # waited for the deadline
+    assert server.stats.flushes == {"size": 0, "deadline": 1, "drain": 0}
+    assert server.stats.engine_queries == 3     # partial batch, one flush
+    ids_d, sc_d = direct(make_engine(engine_parts), tok, msk, loc, batch=8)
+    for i, (ids, sc) in enumerate(out):
+        assert np.array_equal(ids, ids_d[i]) and np.array_equal(sc, sc_d[i])
+
+
+# ---------------------------------------------------------------------------
+# Bit-identical parity with direct engine.run_batched calls
+# ---------------------------------------------------------------------------
+
+
+def test_bit_identical_across_flush_boundary(engine_parts, rng):
+    """10 requests through a batch-4 server → flushes [4, 4, 2]; the
+    direct run_batched call chunks identically. Every id AND score bit
+    must match, including the padded trailing chunk."""
+    server = make_server(engine_parts)
+    tok, msk, loc = make_requests(rng, 10, server.engine.cfg)
+    ids_s, sc_s = server.serve_all(tok, msk, loc)
+    assert server.stats.flushes["size"] == 2          # two full batches
+    assert server.stats.engine_queries == 10
+    ids_d, sc_d = direct(make_engine(engine_parts), tok, msk, loc)
+    assert np.array_equal(ids_s, ids_d)
+    assert np.array_equal(sc_s, sc_d)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def test_cached_repeat_skips_engine(engine_parts, rng):
+    """Acceptance criterion: a repeat query is answered WITHOUT invoking
+    the engine (call-count spy), and bit-identically."""
+    server = make_server(engine_parts, batch_size=2)
+    calls = spy_on(server.engine)
+    tok, msk, loc = make_requests(rng, 2, server.engine.cfg)
+    ids1, sc1 = server.serve_all(tok, msk, loc)
+    assert len(calls) == 1
+    ids2, sc2 = server.serve_all(tok, msk, loc)       # exact repeats
+    assert len(calls) == 1                            # engine NOT invoked
+    assert server.stats.exact_hits == 2
+    assert np.array_equal(ids1, ids2) and np.array_equal(sc1, sc2)
+
+
+def test_inflight_duplicates_coalesce(engine_parts, rng):
+    """An identical request submitted before the first copy flushed shares
+    its future instead of occupying a second batch slot."""
+    server = make_server(engine_parts, batch_size=3, max_delay_ms=60_000.0)
+    tok, msk, loc = make_requests(rng, 3, server.engine.cfg)
+
+    async def go():
+        dup = asyncio.ensure_future(server.submit(tok[0], msk[0], loc[0]))
+        dup2 = asyncio.ensure_future(server.submit(tok[0], msk[0], loc[0]))
+        rest = [asyncio.ensure_future(server.submit(tok[i], msk[i], loc[i]))
+                for i in (1, 2)]
+        return await asyncio.gather(dup, dup2, *rest)
+
+    out = asyncio.run(go())
+    assert server.stats.coalesced == 1
+    assert server.stats.engine_queries == 3           # 3 unique rows only
+    assert server.stats.flushes["size"] == 1          # coalesce didn't block
+    assert np.array_equal(out[0][0], out[1][0])
+    assert np.array_equal(out[0][1], out[1][1])
+
+
+def test_near_duplicate_tier(engine_parts, rng):
+    """Same keyword signature + same spatial cell → near-tier hit; a
+    different cell misses. The tier is opt-in (near_cells > 0)."""
+    server = make_server(engine_parts, batch_size=1, near_cells=16)
+    calls = spy_on(server.engine)
+    tok, msk, loc = make_requests(rng, 1, server.engine.cfg)
+    loc[0] = [0.403, 0.519]
+    server.serve_all(tok, msk, loc)
+    assert len(calls) == 1
+    near = loc.copy()
+    near[0] += 0.002                                  # same 1/16 cell
+    server.serve_all(tok, msk, near)
+    assert len(calls) == 1 and server.stats.near_hits == 1
+    far = loc.copy()
+    far[0] = [0.91, 0.08]                             # different cell
+    server.serve_all(tok, msk, far)
+    assert len(calls) == 2 and server.stats.near_hits == 1
+
+
+def test_exact_lru_evicts(engine_parts, rng):
+    server = make_server(engine_parts, batch_size=1, cache_size=2)
+    tok, msk, loc = make_requests(rng, 3, server.engine.cfg)
+    for i in range(3):                                # fills + evicts row 0
+        server.serve_all(tok[i:i + 1], msk[i:i + 1], loc[i:i + 1])
+    calls = spy_on(server.engine)
+    server.serve_all(tok[0:1], msk[0:1], loc[0:1])    # evicted → recompute
+    assert len(calls) == 1
+    server.serve_all(tok[2:3], msk[2:3], loc[2:3])    # still resident
+    assert len(calls) == 1
+
+
+# ---------------------------------------------------------------------------
+# Invalidation on index mutation
+# ---------------------------------------------------------------------------
+
+
+def test_insert_invalidates_and_stays_bit_identical(engine_parts, rng):
+    """Acceptance criterion: after insert_objects the cached answer is
+    dropped, the engine is re-invoked, and the fresh answer is
+    bit-identical to a direct engine call on the mutated buffers."""
+    cfg = engine_parts[0]
+    server = make_server(engine_parts, batch_size=2)
+    calls = spy_on(server.engine)
+    tok, msk, loc = make_requests(rng, 2, server.engine.cfg)
+    server.serve_all(tok, msk, loc)
+    assert len(calls) == 1
+
+    new_emb = rng.normal(size=(5, cfg.d_model)).astype(np.float32)
+    new_loc = rng.uniform(size=(5, 2)).astype(np.float32)
+    new_ids = np.arange(1000, 1005)
+    server.insert_objects(jnp.asarray(new_emb), jnp.asarray(new_loc),
+                          new_ids)
+    assert server.stats.invalidations == 1
+
+    ids_s, sc_s = server.serve_all(tok, msk, loc)
+    assert len(calls) == 2                            # cache was dropped
+    eng2 = make_engine(engine_parts)
+    eng2.buffers = server.engine.buffers              # the mutated buffers
+    ids_d, sc_d = direct(eng2, tok, msk, loc, batch=2)
+    assert np.array_equal(ids_s, ids_d)
+    assert np.array_equal(sc_s, sc_d)
+    # and the inserted ids are actually retrievable by the server
+    assert set(np.unique(ids_s)) <= set(
+        np.asarray(server.engine.buffers["ids"]).ravel().tolist())
+
+
+def test_delete_invalidates(engine_parts, rng):
+    server = make_server(engine_parts, batch_size=1)
+    calls = spy_on(server.engine)
+    tok, msk, loc = make_requests(rng, 1, server.engine.cfg)
+    ids1, _ = server.serve_all(tok, msk, loc)
+    victims = [int(i) for i in ids1[0] if i >= 0][:2]
+    server.delete_objects(victims)
+    ids2, _ = server.serve_all(tok, msk, loc)
+    assert len(calls) == 2                            # recomputed
+    assert not set(victims) & set(ids2[0].tolist())   # victims gone
+
+
+def test_stale_loop_state_is_dropped(engine_parts, rng):
+    """An aborted asyncio.run (flush raised mid-batch) must not poison
+    the next run on a fresh loop: stale pending/timer/inflight state is
+    dropped on loop change and serving proceeds normally."""
+    server = make_server(engine_parts, batch_size=2, max_delay_ms=25.0)
+    tok, msk, loc = make_requests(rng, 3, server.engine.cfg)
+    orig = server.engine.query
+    server.engine.query = lambda *a, **kw: (_ for _ in ()).throw(
+        RuntimeError("engine down"))
+
+    async def aborted():
+        # one queued request, then the flush blows up
+        t = asyncio.ensure_future(server.submit(tok[0], msk[0], loc[0]))
+        await asyncio.sleep(0)
+        server.flush_now()
+        await t
+
+    with pytest.raises(RuntimeError):
+        asyncio.run(aborted())
+    server._pending.append("stale-sentinel")      # simulate an abort that
+    server.engine.query = orig                    # left a queued request
+    ids_s, sc_s = server.serve_all(tok, msk, loc)     # fresh loop: works
+    assert server.n_pending == 0
+    ids_d, sc_d = direct(make_engine(engine_parts), tok, msk, loc, batch=2)
+    assert np.array_equal(ids_s, ids_d) and np.array_equal(sc_s, sc_d)
+
+
+def test_results_are_frozen(engine_parts, rng):
+    """Cached result arrays are read-only: a caller mutating its answer
+    cannot corrupt what later cache hits are served."""
+    server = make_server(engine_parts, batch_size=1)
+    tok, msk, loc = make_requests(rng, 1, server.engine.cfg)
+
+    async def go():
+        return await server.submit(tok[0], msk[0], loc[0])
+
+    ids1, sc1 = asyncio.run(go())
+    with pytest.raises(ValueError):
+        ids1[0] = -7
+    ids2, _ = asyncio.run(go())                   # exact hit, unpolluted
+    assert np.array_equal(ids1, ids2)
+
+
+def test_cli_backend_alias():
+    from repro.core.engine import resolve_cli_backend
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        assert resolve_cli_backend(None, True) == "pallas"
+    with pytest.warns(DeprecationWarning, match="ignored"):
+        assert resolve_cli_backend("dense", True) == "dense"
+    assert resolve_cli_backend(None, False) == "auto"
+    assert resolve_cli_backend("pallas", False) == "pallas"
+
+
+# ---------------------------------------------------------------------------
+# Warm-up manager
+# ---------------------------------------------------------------------------
+
+
+def test_warmup_pretraces_the_flush_plan(engine_parts, rng):
+    server = make_server(engine_parts)
+    compiles = server.warmup()
+    assert compiles == {"dense@4": pytest.approx(compiles["dense@4"])}
+    assert compiles["dense@4"] > 0
+    plans_after_warmup = set(server.engine._plans)
+    assert (5, 2, "dense") in plans_after_warmup      # the (k, cr, backend)
+    tok, msk, loc = make_requests(rng, 4, server.engine.cfg)
+    server.serve_all(tok, msk, loc)
+    # serving created no new plan: the warm-up traced the real flush path
+    assert set(server.engine._plans) == plans_after_warmup
