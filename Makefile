@@ -1,20 +1,26 @@
 # Tiers:
-#   make test          - tier-1: fast unit/parity tests (minutes)
-#   make test-slow     - everything, including e2e training + interpret-mode
-#                        decode sweeps (tens of minutes on CPU)
-#   make bench-smoke   - CI-scale benchmark smoke (--fast settings)
-#   make bench-serving - streaming-serving benchmark -> BENCH_serving.json
+#   make test               - tier-1: fast unit/parity tests (minutes)
+#   make test-slow          - everything, including e2e training +
+#                             interpret-mode decode sweeps (tens of
+#                             minutes on CPU)
+#   make snapshot-roundtrip - IndexSnapshot save->load->query bit-identity
+#                             self-test on both backends (seconds)
+#   make bench-smoke        - CI-scale benchmark smoke (--fast settings)
+#   make bench-serving      - streaming-serving benchmark -> BENCH_serving.json
 
 PY      := python
 PYPATH  := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}
 
-.PHONY: test test-slow bench-smoke bench-serving
+.PHONY: test test-slow snapshot-roundtrip bench-smoke bench-serving
 
 test:
 	$(PYPATH) $(PY) -m pytest -x -q -m "not slow"
 
 test-slow:
 	$(PYPATH) $(PY) -m pytest -x -q
+
+snapshot-roundtrip:
+	$(PYPATH) $(PY) -m repro.api
 
 bench-smoke:
 	$(PYPATH) $(PY) -m benchmarks.run --fast --only Kernel_fusion,Table4_memory,Serving_stream

@@ -13,9 +13,10 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks import common
+from repro import api
 from repro.core import index as il
 from repro.core import pipeline as pl
-from repro.core import spatial as sp
+from repro.core.snapshot import IndexSnapshot
 from repro.data import GeoCorpus, GeoCorpusConfig
 
 
@@ -57,11 +58,16 @@ def run():
         jax.tree.leaves(out)[0].block_until_ready()
         t_brute = (time.perf_counter() - t0) / 3
 
-        # LIST timing (route + gather + fused score)
-        w_hat = sp.extract_lookup(r.rel_params["spatial"])
-        qfn = pl.make_query_fn(cfg, cr=1, k=10, dist_max=float(big.dist_max))
-        args = (r.rel_params, r.index_params, w_hat, r.norm, buf["emb"],
-                buf["loc"], buf["ids"])
+        # LIST timing (route + gather + fused score): the same traced
+        # plan api.Searcher serves, taken from a from_parts snapshot of
+        # the grown corpus
+        snap = IndexSnapshot.from_parts(
+            cfg, r.rel_params, r.index_params, r.norm, buf,
+            dist_max=float(big.dist_max))
+        eng = api.Searcher(snap).engine
+        qfn = eng.query_fn(k=10, cr=1, batch=64)
+        args = (snap.rel_params, snap.index_params, snap.w_hat, snap.norm,
+                buf["emb"], buf["loc"], buf["ids"])
         tok, msk = big.query_tokens(np.arange(64))
         qa = (jnp.asarray(tok), jnp.asarray(msk), jnp.asarray(q_loc))
         qfn(*args, *qa)  # warm

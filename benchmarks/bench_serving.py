@@ -5,7 +5,9 @@ against a trained retriever.
 Emits ``BENCH_serving.json`` (schema documented in README.md
 §Benchmarks) to start the serving perf trajectory: latency percentiles
 p50/p95/p99, achieved QPS, cache hit rate per tier, micro-batch fill —
-plus a pure cache-replay pass that bounds the hot-set ceiling.
+plus a pure cache-replay pass that bounds the hot-set ceiling, and the
+artifact-lifecycle costs (snapshot save / load / atomic hot-swap
+seconds) a deploy pipeline budgets around.
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--fast]
 """
@@ -13,11 +15,14 @@ from __future__ import annotations
 
 import asyncio
 import json
+import shutil
+import tempfile
 import time
 
 import numpy as np
 
 from benchmarks import common
+from repro import api
 from repro.core import cluster_metrics as cm
 from repro.core import server as server_lib
 
@@ -74,6 +79,27 @@ def run(out_path: str = OUT_PATH):
     _, wall_hot = _replay(server, corpus, picks)
     m_hot = server.metrics(wall_seconds=wall_hot)
 
+    # --- artifact lifecycle: save → load → atomic hot-swap ----------------
+    snap = server.engine.snapshot
+    art_dir = tempfile.mkdtemp(prefix="bench_snapshot_")
+    try:
+        t0 = time.perf_counter()
+        api.save(snap, art_dir)
+        t_save = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        loaded = api.load(art_dir)
+        t_load = time.perf_counter() - t0
+        # publish a version-bumped successor into the LIVE server: the
+        # swap is one digest-checked reference assignment + cache clear
+        t0 = time.perf_counter()
+        server.publish(loaded.with_buffers(loaded.buffers))
+        t_swap = time.perf_counter() - t0
+    finally:
+        shutil.rmtree(art_dir, ignore_errors=True)
+    snapshot_ms = {"save_ms": t_save * 1e3, "load_ms": t_load * 1e3,
+                   "swap_ms": t_swap * 1e3,
+                   "version_after_swap": server.engine.snapshot.meta.version}
+
     report = {
         "bench": "serving",
         "config": {
@@ -102,6 +128,7 @@ def run(out_path: str = OUT_PATH):
             "qps": m_hot["qps"],
             "hit_rate": m_hot["hit_rate"],
         },
+        "snapshot": snapshot_ms,
     }
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
@@ -117,6 +144,10 @@ def run(out_path: str = OUT_PATH):
             "qps": m_hot["qps"], "p50_ms": m_hot["latency_ms"]["p50"],
             "p99_ms": m_hot["latency_ms"]["p99"],
             "hit_rate": m_hot["hit_rate"]}),
+        common.fmt_row("serving(snapshot)", {
+            "save_ms": snapshot_ms["save_ms"],
+            "load_ms": snapshot_ms["load_ms"],
+            "swap_ms": snapshot_ms["swap_ms"]}),
         common.fmt_row("serving(json)", {"path": out_path}),
     ]
     return rows

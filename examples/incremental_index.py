@@ -1,7 +1,10 @@
-"""Insertion/deletion + index-only retraining (paper §4.3 "Insertion and
-Deletion Policy"): new POIs stream in, get routed by the trained index with
-NO relevance-model retraining; deletions are lazy. When drift accumulates,
-only the (tiny) index MLP is retrained.
+"""Insertion/deletion via atomic snapshot publication (paper §4.3
+"Insertion and Deletion Policy" + DESIGN.md §8): new POIs stream in, get
+routed by the trained index with NO relevance-model retraining, and
+become visible to queries the instant the successor `IndexSnapshot` is
+published to the live server; deletions are lazy. The resident index is
+never mutated in place — each mutation derives version N+1 and swaps it
+atomically, so concurrent traffic is never served a torn index.
 
     PYTHONPATH=src python examples/incremental_index.py
 """
@@ -10,11 +13,13 @@ import dataclasses
 import numpy as np
 import jax.numpy as jnp
 
+from repro import api
 from repro.configs import get_config
-from repro.core import cluster_metrics as cm
-from repro.core import index as il
 from repro.core import pipeline as pl
+from repro.core import server as server_lib
 from repro.data import GeoCorpus, GeoCorpusConfig
+
+NEW_ID_BASE = 10_000
 
 
 def main():
@@ -25,38 +30,56 @@ def main():
         n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab_size=4096,
         max_len=16, spatial_t=100, n_clusters=8, neg_start=1000,
         neg_end=1200, index_mlp_hidden=(64,))
-    r = pl.ListRetriever(cfg, corpus)
-    r.train_relevance(steps=200, batch=64, lr=1.5e-3, log_every=10**9)
-    r.train_index(steps=400, batch=64, lr=3e-3, log_every=10**9)
-    r.build()
-    print("initial cluster sizes:",
-          np.asarray(r.buffers["counts"]).tolist())
+    snap = api.build(cfg, corpus, rel_steps=200, idx_steps=400,
+                     rel_lr=1.5e-3, idx_lr=3e-3, log_every=10**9)
+    print(f"snapshot v{snap.meta.version}: cluster sizes "
+          f"{np.asarray(snap.buffers['counts']).tolist()}")
 
-    # --- a new batch of POIs opens downtown --------------------------------
+    # a live server over the snapshot (micro-batcher + result caches)
+    server = api.Searcher(snap).serve(server_lib.ServerConfig(
+        batch_size=32, max_delay_ms=2.0, k=20, cr=cfg.n_clusters))
+
+    # probe workload: the held-out queries of a NEW downtown district
     new_city = GeoCorpus(GeoCorpusConfig(
-        n_objects=200, n_queries=10, n_topics=12, vocab_size=4096, seed=9))
-    new_emb = pl.embed_objects(r.rel_params, new_city, cfg)
+        n_objects=200, n_queries=40, n_topics=12, vocab_size=4096, seed=9))
+    probe_ids = np.arange(new_city.cfg.n_queries)
+    tok, msk = new_city.query_tokens(probe_ids)
+    loc = new_city.q_loc[probe_ids].astype(np.float32)
+
+    ids_before, _ = server.serve_all(tok, msk, loc)
+    assert not (ids_before >= NEW_ID_BASE).any()     # nothing to see yet
+
+    # --- the new district's POIs open: embed, route, PUBLISH --------------
+    new_emb = pl.embed_objects(snap.rel_params, new_city, cfg)
     new_loc = new_city.obj_loc.astype(np.float32)
-    buf2 = il.insert_objects(
-        r.buffers, r.index_params, r.norm, jnp.asarray(new_emb),
-        jnp.asarray(new_loc), np.arange(10_000, 10_200))
-    print("after 200 insertions:", np.asarray(buf2["counts"]).tolist(),
-          "(insertion = index MLP inference, no retraining)")
+    new_ids = np.arange(NEW_ID_BASE, NEW_ID_BASE + new_city.cfg.n_objects)
+    snap2 = server.insert_objects(jnp.asarray(new_emb), jnp.asarray(new_loc),
+                                  new_ids)
+    assert snap2.meta.version == snap.meta.version + 1
+    assert server.engine.snapshot is snap2           # atomically published
+    print(f"published v{snap2.meta.version}: "
+          f"{np.asarray(snap2.buffers['counts']).tolist()} "
+          f"({snap2.meta.n_objects} objects; index-MLP inference only, "
+          f"no retraining)")
 
-    # --- some POIs close ----------------------------------------------------
-    buf3 = il.delete_objects(buf2, list(range(0, 100)))
-    print("after 100 deletions:", np.asarray(buf3["counts"]).tolist(),
-          "(lazy: ids masked, compaction deferred to next rebuild)")
+    # --- post-insert queries MUST see the new objects ----------------------
+    ids_after, _ = server.serve_all(tok, msk, loc)
+    n_new_hits = int((ids_after >= NEW_ID_BASE).sum())
+    assert n_new_hits > 0, "published objects not visible to queries"
+    print(f"post-publish: {n_new_hits} of the new district's POIs surface "
+          f"in the probe queries' top-20 (cache invalidated: "
+          f"{server.stats.invalidations} publish)")
+    # the original snapshot object is untouched — immutable artifacts
+    assert not (np.asarray(snap.buffers["ids"]) >= NEW_ID_BASE).any()
 
-    # --- drift: retrain ONLY the index (paper: relevance model untouched) --
-    r.train_index(steps=200, batch=64, lr=3e-3, log_every=10**9)
-    r.build()
-    if_c = cm.imbalance_factor(r.obj_assign, cfg.n_clusters)
-    import jax
-    n_mlp = sum(int(np.prod(x.shape))
-                for x in jax.tree.leaves(r.index_params))
-    print(f"after index-only retrain: IF(C)={if_c:.3f} "
-          f"(index MLP = {n_mlp:,} params; the dual encoder was not touched)")
+    # --- some POIs close: lazy delete, same publish protocol ---------------
+    victims = [int(i) for i in np.unique(ids_after[ids_after >= NEW_ID_BASE])
+               ][:50]
+    snap3 = server.delete_objects(victims)
+    ids_del, _ = server.serve_all(tok, msk, loc)
+    assert not np.isin(ids_del, victims).any()       # victims gone
+    print(f"published v{snap3.meta.version}: {len(victims)} lazy deletions "
+          f"(ids masked, compaction deferred to next rebuild)")
 
 
 if __name__ == "__main__":

@@ -1,15 +1,18 @@
-"""Quickstart: train LIST end-to-end on a small synthetic city and answer
-spatial keyword queries — the whole paper in ~3 minutes on a laptop CPU.
+"""Quickstart: train LIST end-to-end on a small synthetic city, freeze
+the built index into a durable `IndexSnapshot` artifact, reload it, and
+answer spatial keyword queries — the whole paper (plus the artifact
+lifecycle) in ~3 minutes on a laptop CPU.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import dataclasses
+import tempfile
 
 import numpy as np
 
+from repro import api
 from repro.configs import get_config
 from repro.core import cluster_metrics as cm
-from repro.core.pipeline import ListRetriever
 from repro.data import GeoCorpus, GeoCorpusConfig
 
 
@@ -19,34 +22,40 @@ def main():
     corpus = GeoCorpus(GeoCorpusConfig(
         n_objects=2000, n_queries=400, n_topics=12, vocab_size=4096, seed=0))
 
-    # 2. LIST = dual-encoder relevance model + learned cluster index
+    # 2. LIST = dual-encoder relevance model + learned cluster index;
+    #    api.build runs Eq. 8 contrastive training, Eq. 13/14 index
+    #    training, and packs the cluster buffers
     cfg = dataclasses.replace(
         get_config("list-dual-encoder"),
         n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab_size=4096,
         max_len=16, spatial_t=100, n_clusters=8,
         neg_start=1000, neg_end=1200, index_mlp_hidden=(64,))
-    r = ListRetriever(cfg, corpus)
+    snap = api.build(cfg, corpus, rel_steps=200, idx_steps=400,
+                     rel_lr=1.5e-3, idx_lr=3e-3, verbose=True, log_every=100)
+    print("cluster sizes:", np.asarray(snap.buffers["counts"]).tolist())
 
-    print("training relevance model (contrastive, Eq. 8) ...")
-    r.train_relevance(steps=200, batch=64, lr=1.5e-3, verbose=True,
-                      log_every=100)
-    print("training index (pseudo-labels Eq. 13 + MCL Eq. 14) ...")
-    r.train_index(steps=400, batch=64, lr=3e-3, verbose=True, log_every=200)
-    buf = r.build()
-    print("cluster sizes:", np.asarray(buf["counts"]).tolist())
+    # 3. the built index is an immutable artifact: save → load round-trips
+    #    to bit-identical results (this is what a serving fleet deploys)
+    art_dir = tempfile.mkdtemp(prefix="list_snapshot_")
+    path = api.save(snap, art_dir)
+    snap = api.load(art_dir)
+    print(f"snapshot v{snap.meta.version} ({snap.meta.n_objects} objects, "
+          f"cfg digest {snap.meta.cfg_digest}) round-tripped via {path}")
 
-    # 3. answer the held-out queries
+    # 4. answer the held-out queries from the LOADED artifact
+    searcher = api.Searcher(snap)
     tr, va, te = corpus.split()
     positives = [corpus.positives[q] for q in te]
-    ids, scores = r.query(te, k=10, cr=1)
-    bf_ids, _ = r.brute_force(te, k=10)
+    ids, scores = searcher.query_corpus(corpus, te, k=10, cr=1)
+    bf_ids, _ = api.brute_force(snap, corpus, te, k=10)
+    cap = snap.buffers["capacity"]
     print(f"\nLIST        recall@10 = {cm.recall_at_k(ids, positives, 10):.3f}"
-          f"  (scans ≤{buf['capacity']} of {corpus.cfg.n_objects} objects)")
+          f"  (scans ≤{cap} of {corpus.cfg.n_objects} objects)")
     print(f"brute force recall@10 = "
           f"{cm.recall_at_k(bf_ids, positives, 10):.3f}"
           f"  (scans all {corpus.cfg.n_objects})")
 
-    # 4. one concrete query, end to end
+    # 5. one concrete query, end to end
     q = te[0]
     print(f"\nquery {q}: keywords={corpus.q_doc[q].tolist()} "
           f"loc={np.round(corpus.q_loc[q], 3).tolist()}")

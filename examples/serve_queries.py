@@ -1,5 +1,5 @@
 """Serve spatial-keyword requests through a trained LIST index — all three
-serving layers:
+serving layers, all fed by ONE immutable `IndexSnapshot` (repro.api):
 
   * streaming server (core/server.py): async micro-batcher + result
     caches + warm-up over the unified engine — the long-lived path
@@ -14,15 +14,13 @@ import dataclasses
 import time
 
 import numpy as np
-import jax.numpy as jnp
 
+from repro import api
 from repro.configs import get_config
 from repro.core import cluster_metrics as cm
 from repro.core import server as server_lib
 from repro.core import serving
-from repro.core import spatial as sp
 from repro.core.engine import resolve_cli_backend
-from repro.core.pipeline import ListRetriever
 from repro.data import GeoCorpus, GeoCorpusConfig
 
 
@@ -48,11 +46,10 @@ def main():
         n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab_size=4096,
         max_len=16, spatial_t=100, n_clusters=8, neg_start=1000,
         neg_end=1200, index_mlp_hidden=(64,))
-    r = ListRetriever(cfg, corpus)
     print("training retriever ...")
-    r.train_relevance(steps=200, batch=64, lr=1.5e-3, log_every=10**9)
-    r.train_index(steps=400, batch=64, lr=3e-3, log_every=10**9)
-    r.build()
+    snap = api.build(cfg, corpus, rel_steps=200, idx_steps=400,
+                     rel_lr=1.5e-3, idx_lr=3e-3, log_every=10**9)
+    searcher = api.Searcher(snap)
 
     tr, va, te = corpus.split()
     req = te[: args.requests]
@@ -63,7 +60,7 @@ def main():
     # streaming server: micro-batched requests over the engine, pre-warmed.
     # batch_size matches the direct engine call below — the bit-identity
     # guarantee holds per batch SHAPE (same shape ⇒ same jitted program)
-    server = server_lib.StreamingServer(r.engine(), server_lib.ServerConfig(
+    server = searcher.serve(server_lib.ServerConfig(
         batch_size=64, max_delay_ms=2.0, k=args.k, cr=1, backend=backend))
     server.warmup()
     t0 = time.time()
@@ -80,7 +77,8 @@ def main():
 
     # engine path, one-shot (backend-selected: gather-free pallas or dense)
     t0 = time.time()
-    ids_g, sc_g = r.query(req, k=args.k, cr=1, backend=backend, batch=64)
+    ids_g, sc_g = searcher.query(tok, msk, loc, k=args.k, cr=1,
+                                 backend=backend, batch=64)
     t_g = time.time() - t0
     print(f"engine path ({backend}): "
           f"recall@{args.k}={cm.recall_at_k(ids_g, positives, args.k):.3f} "
@@ -88,14 +86,11 @@ def main():
     assert (np.sort(ids_s, 1) == np.sort(ids_g, 1)).all(), \
         "streaming server and direct engine path disagree"
 
-    # dispatch path (the multi-pod serving layout, run on one host)
-    w_hat = sp.extract_lookup(r.rel_params["spatial"])
+    # dispatch path (the multi-pod serving layout, run on one host) —
+    # same snapshot, same score_candidates scoring surface
     t0 = time.time()
     ids_d, sc_d, n_dropped = serving.cluster_dispatch_query(
-        r.rel_params, r.index_params, w_hat, r.norm,
-        r.buffers["emb"], r.buffers["loc"], r.buffers["ids"],
-        jnp.asarray(tok), jnp.asarray(msk), jnp.asarray(loc), cfg,
-        k=args.k, cr=1, dist_max=corpus.dist_max, return_dropped=True)
+        snap, tok, msk, loc, k=args.k, cr=1, return_dropped=True)
     t_d = time.time() - t0
     print(f"dispatch path (clusters-as-experts): "
           f"recall@{args.k}={cm.recall_at_k(np.asarray(ids_d), positives, args.k):.3f} "

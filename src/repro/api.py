@@ -1,0 +1,241 @@
+"""repro.api — the stable top-level surface of the LIST reproduction.
+
+Everything a user of the system (driver, example, benchmark, notebook)
+needs is four names; the artifact in the middle is the immutable,
+versioned :class:`~repro.core.snapshot.IndexSnapshot` (DESIGN.md §8):
+
+    from repro import api
+
+    snap = api.build(cfg, corpus, rel_steps=300, idx_steps=600)   # train
+    api.save(snap, "artifacts/index")          # durable, atomic commit
+    snap = api.load("artifacts/index")         # any process, any host
+
+    searcher = api.Searcher(snap)              # stateless query engine
+    ids, scores = searcher.query(tokens, mask, loc, k=10)
+
+    server = searcher.serve(ServerConfig(batch_size=64))   # long-lived
+    ids, scores = await server.submit(tok_row, msk_row, loc_row)
+
+The guarantee the whole stack rests on: ``save(dir)`` → ``load(dir)`` →
+``Searcher.query`` is **bit-identical** to querying the in-memory
+snapshot, on every backend (tests/test_snapshot.py), and a snapshot
+published to a live server swaps atomically — zero torn or failed
+requests (core/server.py).
+
+``python -m repro.api`` runs the save→load→query round-trip self-test
+on a small random index (``make snapshot-roundtrip``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine as engine_lib
+from repro.core import pipeline as pipeline_lib
+from repro.core import server as server_lib
+from repro.core import snapshot as snapshot_lib
+from repro.core.snapshot import IndexSnapshot
+
+__all__ = ["build", "save", "load", "Searcher", "brute_force",
+           "IndexSnapshot"]
+
+
+# ---------------------------------------------------------------------------
+# build / save / load
+# ---------------------------------------------------------------------------
+
+
+def build(cfg, corpus, *, rel_steps: int = 200, idx_steps: int = 400,
+          batch: int = 64, rel_lr: float = 1.5e-3, idx_lr: float = 3e-3,
+          capacity: Optional[int] = None, spill: int = 3,
+          spatial_mode: str = "step", weight_mode: str = "mlp",
+          seed: int = 0, verbose: bool = False,
+          log_every: Optional[int] = None, return_retriever: bool = False):
+    """Train LIST end-to-end and return the built :class:`IndexSnapshot`.
+
+    Runs the paper's three phases — relevance training (Eq. 8), index
+    training (Eq. 13 pseudo-labels + Eq. 14 MCL), buffer packing — via
+    :class:`~repro.core.pipeline.ListRetriever` and freezes the result.
+
+    ``return_retriever=True`` additionally returns the retriever, for
+    callers that need training-time state the artifact deliberately
+    omits (training histories, object↦cluster assignments for cluster-
+    quality metrics). The snapshot alone is sufficient to serve.
+    """
+    log = log_every if log_every is not None else max(rel_steps, 1)
+    r = pipeline_lib.ListRetriever(cfg, corpus, spatial_mode=spatial_mode,
+                                   weight_mode=weight_mode)
+    r.train_relevance(steps=rel_steps, batch=batch, lr=rel_lr, seed=seed,
+                      verbose=verbose, log_every=log)
+    r.train_index(steps=idx_steps, batch=batch, lr=idx_lr, seed=seed,
+                  verbose=verbose, log_every=log)
+    r.build(capacity=capacity, spill=spill)
+    snap = r.snapshot()
+    return (snap, r) if return_retriever else snap
+
+
+def save(snapshot: IndexSnapshot, directory: str, *, keep: int = 3) -> str:
+    """Persist ``snapshot`` under ``directory`` (atomic commit; one ckpt
+    step per snapshot version). Returns the committed path."""
+    return snapshot.save(directory, keep=keep)
+
+
+def load(directory: str, *, step: Optional[int] = None) -> IndexSnapshot:
+    """Load the latest (or a specific ``step``/version) committed
+    snapshot. Raises a clear error on schema-version mismatch."""
+    return IndexSnapshot.load(directory, step=step)
+
+
+# ---------------------------------------------------------------------------
+# Searcher
+# ---------------------------------------------------------------------------
+
+
+class Searcher:
+    """A stateless query façade over one :class:`IndexSnapshot`.
+
+    Thin sugar over :class:`~repro.core.engine.QueryEngine`: binds the
+    snapshot once, answers batched queries, and spawns the streaming
+    server for live traffic. Swapping to a successor snapshot
+    (:meth:`publish`) is atomic and keeps every traced plan.
+    """
+
+    def __init__(self, snapshot: IndexSnapshot, *, backend: str = "auto",
+                 interpret: Optional[bool] = None):
+        self.engine = engine_lib.QueryEngine.from_snapshot(
+            snapshot, backend=backend, interpret=interpret)
+
+    @property
+    def snapshot(self) -> IndexSnapshot:
+        return self.engine.snapshot
+
+    def publish(self, snapshot: IndexSnapshot) -> IndexSnapshot:
+        """Atomically swap the served snapshot (cfg-digest checked).
+        Long-lived servers publish through StreamingServer.publish
+        instead, which also drops their result caches."""
+        self.engine.publish(snapshot)
+        return snapshot
+
+    def query(self, tokens, mask, loc, *, k: int = 10, cr: int = 1,
+              batch: int = 256, backend: Optional[str] = None):
+        """Batched spatial-keyword query → (ids (n, k), scores (n, k)).
+
+        tokens (n, L) int32 / mask (n, L) bool / loc (n, 2) float32 per
+        the engine contract; ids are global object ids, -1 past-the-end.
+        """
+        return self.engine.query(tokens, mask, loc, k=k, cr=cr, batch=batch,
+                                 backend=backend)
+
+    def query_corpus(self, corpus, query_ids, *, k: int = 10, cr: int = 1,
+                     batch: int = 256, backend: Optional[str] = None):
+        """Convenience: answer a corpus's queries by id."""
+        tokens, mask = corpus.query_tokens(query_ids)
+        loc = corpus.q_loc[query_ids].astype(np.float32)
+        return self.query(tokens, mask, loc, k=k, cr=cr, batch=batch,
+                          backend=backend)
+
+    def serve(self, config: Optional["server_lib.ServerConfig"] = None
+              ) -> "server_lib.StreamingServer":
+        """A streaming server (micro-batcher + caches, DESIGN.md §7)
+        over this searcher's engine."""
+        return server_lib.StreamingServer(self.engine, config)
+
+
+# ---------------------------------------------------------------------------
+# Offline oracle
+# ---------------------------------------------------------------------------
+
+
+def brute_force(snapshot: IndexSnapshot, corpus, query_ids, *, k: int = 20,
+                batch: int = 256):
+    """Exhaustive LIST-R scoring over the whole corpus — the recall
+    oracle for a snapshot (re-embeds objects from the snapshot's own
+    relevance params, so it describes exactly what the artifact would
+    serve at cr = c)."""
+    from repro.core import relevance
+
+    cfg, meta = snapshot.cfg, snapshot.meta
+    obj_emb = pipeline_lib.embed_objects(snapshot.rel_params, corpus, cfg,
+                                         batch=batch)
+    obj_loc = corpus.obj_loc.astype(np.float32)
+    q_emb = pipeline_lib.embed_queries(snapshot.rel_params, corpus, cfg,
+                                       query_ids, batch=batch)
+    q_loc = corpus.q_loc[query_ids].astype(np.float32)
+
+    @jax.jit
+    def score_top(qe, ql):
+        st = relevance.score_corpus(
+            snapshot.rel_params, qe, ql, jnp.asarray(obj_emb),
+            jnp.asarray(obj_loc), cfg, dist_max=meta.dist_max,
+            spatial_mode=meta.spatial_mode, weight_mode=meta.weight_mode,
+            train=False)
+        sc, ids = jax.lax.top_k(st, k)
+        return ids, sc
+
+    return engine_lib.run_batched(score_top, [q_emb, q_loc], batch=batch)
+
+
+# ---------------------------------------------------------------------------
+# Round-trip self-test (make snapshot-roundtrip)
+# ---------------------------------------------------------------------------
+
+
+def _roundtrip_selftest(directory: Optional[str] = None) -> int:
+    """build(random params) → save → load → query on both backends,
+    asserting bit-identity. Small and training-free: finishes in
+    seconds, which is what a CI gate wants."""
+    import dataclasses
+    import tempfile
+
+    from repro.configs import get_config
+    from repro.core import index as index_lib
+    from repro.core import relevance
+
+    cfg = dataclasses.replace(
+        get_config("list-dual-encoder"),
+        n_layers=2, d_model=32, n_heads=2, d_ff=64, vocab_size=512,
+        max_len=8, spatial_t=50, n_clusters=4, index_mlp_hidden=(16,))
+    rng = np.random.default_rng(0)
+    rel = relevance.relevance_init(jax.random.PRNGKey(0), cfg)
+    n, c = 64, cfg.n_clusters
+    obj_emb = rng.normal(size=(n, cfg.d_model)).astype(np.float32)
+    obj_loc = rng.uniform(size=(n, 2)).astype(np.float32)
+    norm = index_lib.loc_normalizer(jnp.asarray(obj_loc))
+    iparams = index_lib.index_init(jax.random.PRNGKey(1), cfg.d_model, c,
+                                   hidden=(16,))
+    feats = index_lib.build_features(jnp.asarray(obj_emb),
+                                     jnp.asarray(obj_loc), norm)
+    top = np.asarray(index_lib.assign_clusters(iparams, feats, top=2))
+    buf = index_lib.build_cluster_buffers(top, obj_emb, obj_loc,
+                                          n_clusters=c, capacity=32)
+    snap = IndexSnapshot.from_parts(cfg, rel, iparams, norm, buf,
+                                    dist_max=1.4142)
+
+    tok = rng.integers(2, cfg.vocab_size, (12, cfg.max_len)).astype(np.int32)
+    tok[:, 0] = 1
+    msk = np.ones_like(tok, bool)
+    loc = rng.uniform(size=(12, 2)).astype(np.float32)
+
+    tmp = tempfile.mkdtemp() if directory is None else directory
+    path = save(snap, tmp)
+    loaded = load(tmp)
+    assert loaded.meta == snap.meta, (loaded.meta, snap.meta)
+    assert loaded.cfg == snap.cfg
+    failures = 0
+    for backend in ("dense", "pallas"):
+        a = Searcher(snap, backend=backend).query(tok, msk, loc, k=5, cr=2,
+                                                  batch=4)
+        b = Searcher(loaded, backend=backend).query(tok, msk, loc, k=5, cr=2,
+                                                    batch=4)
+        ok = (np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1]))
+        print(f"snapshot-roundtrip [{backend:6s}] "
+              f"{'bit-identical' if ok else 'MISMATCH'}  ({path})")
+        failures += 0 if ok else 1
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(_roundtrip_selftest())

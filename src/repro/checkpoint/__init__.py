@@ -2,6 +2,7 @@
 from repro.checkpoint.ckpt import (  # noqa: F401
     CheckpointManager,
     latest_step,
+    read_meta,
     restore,
     save,
 )

@@ -113,6 +113,19 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def read_meta(directory: str, *, step: Optional[int] = None):
+    """Read a committed checkpoint's ``meta`` block without touching the
+    array files. Returns ``(meta, step)``. Lets artifact readers (e.g.
+    core/snapshot.py) validate schema/config identity and rebuild the
+    tree structure BEFORE deciding to load gigabytes of leaves."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    with open(os.path.join(_step_dir(directory, step), "manifest.json")) as f:
+        return json.load(f)["meta"], step
+
+
 def restore(directory: str, tree_like: Any, *, step: Optional[int] = None,
             shard_fn: Optional[Callable[[Any], Any]] = None):
     """Restore into the structure of ``tree_like`` (shapes validated).

@@ -30,14 +30,18 @@ Public surface
     function compiles for exactly one batch shape.
 
 :class:`QueryEngine`
-    A stateful façade binding (params + cluster buffers) with a cache
-    of jitted plans keyed ``(k, cr, backend)`` — what the streaming
-    server and the retriever hold onto.
+    A stateless executor over an immutable ``IndexSnapshot``
+    (core/snapshot.py, DESIGN.md §8) with a cache of traced plans keyed
+    ``(batch, k, cr, backend)`` — what the streaming server and the
+    retriever hold onto. Snapshot swaps go through
+    :meth:`QueryEngine.publish` (atomic, digest-checked); plans survive
+    them.
 
-:func:`resolve_backend` / :func:`legacy_backend` /
-:func:`resolve_cli_backend` / :data:`BACKENDS`
-    Backend-selection rules, including the deprecated ``--use-pallas``
-    alias handling (see below and DESIGN.md §6).
+:func:`resolve_backend` / :func:`resolve_cli_backend` /
+:data:`BACKENDS`
+    Backend-selection rules. ``resolve_cli_backend`` is the ONLY home
+    of the deprecated ``--use-pallas`` alias (warns and forwards — see
+    below and DESIGN.md §6); library code takes ``backend=`` only.
 
 Inputs, throughout: ``q_tokens (B, L) int32`` hashed token ids with
 token 0 = padding, ``q_mask (B, L) bool`` True on real tokens,
@@ -71,7 +75,6 @@ enforced by tests/test_query_engine_parity.py.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional, Sequence, Tuple
 
 import numpy as np
@@ -114,16 +117,6 @@ def resolve_backend(backend: str = "auto",
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "dense"
     return backend, interpret
-
-
-def legacy_backend(backend: Optional[str], use_pallas: bool) -> str:
-    """Resolve the legacy ``use_pallas`` flag: an explicit ``backend``
-    always wins; otherwise the bool maps to pallas/dense. The single
-    definition of this alias rule for every library entry point
-    (CLI flags go through :func:`resolve_cli_backend` instead)."""
-    if backend is not None:
-        return backend
-    return "pallas" if use_pallas else "dense"
 
 
 def resolve_cli_backend(backend: Optional[str], use_pallas: bool,
@@ -329,47 +322,127 @@ def run_batched(fn: Callable, arrays: Sequence[np.ndarray], *, batch: int):
 
 
 class QueryEngine:
-    """Bound (params + buffers) query engine with cached jitted plans.
+    """Stateless query executor over an immutable :class:`IndexSnapshot`.
 
-    Both the single-host path (``ListRetriever.query``) and callers that
-    hold raw artifacts use this; the streaming server (core/server.py,
-    DESIGN.md §7) holds one and flushes micro-batches through
-    :meth:`query`. The distributed dispatch path shares
-    :func:`score_candidates` instead (its data movement is the point).
+    The engine owns exactly two things: a *reference* to the current
+    snapshot (core/snapshot.py — all params/buffers live there, frozen)
+    and a cache of traced plans keyed ``(batch, k, cr, backend)``. Both
+    the single-host path (``ListRetriever.query``) and the streaming
+    server (core/server.py, DESIGN.md §7–§8) hold one; the distributed
+    dispatch path shares :func:`score_candidates` instead (its data
+    movement is the point).
 
-    ``buffers`` may be swapped in place after ``insert_objects`` /
-    ``delete_objects`` (they return new dicts); plans don't rebind —
-    buffers are jit *arguments*, so no recompile either.
+    Snapshot swaps are atomic: :meth:`publish` replaces the reference in
+    one assignment (it validates ``meta.cfg_digest`` — params from a
+    different model config never sneak in). Every :meth:`query` call
+    reads the snapshot reference ONCE up front, so a concurrent publish
+    can never tear a batch across two snapshots. Plans survive swaps
+    that preserve buffer shapes — snapshot contents are jit *arguments*,
+    so same shapes ⇒ no retrace, and a shape-changing swap just
+    retraces lazily.
     """
 
-    def __init__(self, cfg, rel_params, index_params, norm, buffers, *,
-                 dist_max: float, spatial_mode: str = "step",
-                 weight_mode: str = "mlp", backend: str = "auto",
+    def __init__(self, snapshot, *, backend: str = "auto",
                  interpret: Optional[bool] = None):
-        self.cfg = cfg
-        self.rel_params = rel_params
-        self.index_params = index_params
-        self.norm = norm
-        self.buffers = buffers
-        self.dist_max = float(dist_max)
-        self.spatial_mode = spatial_mode
-        self.weight_mode = weight_mode
+        self._snapshot = snapshot
         self.backend, self.interpret = resolve_backend(backend, interpret)
         self._plans = {}
 
+    # --- construction -----------------------------------------------------
+
+    @classmethod
+    def from_snapshot(cls, snapshot, *, backend: str = "auto",
+                      interpret: Optional[bool] = None) -> "QueryEngine":
+        return cls(snapshot, backend=backend, interpret=interpret)
+
+    @classmethod
+    def from_parts(cls, cfg, rel_params, index_params, norm, buffers, *,
+                   dist_max: float, spatial_mode: str = "step",
+                   weight_mode: str = "mlp", backend: str = "auto",
+                   interpret: Optional[bool] = None) -> "QueryEngine":
+        """Convenience: wrap loose artifacts into a version-0 snapshot.
+        Serving code should hold real snapshots (repro.api.build/load)."""
+        from repro.core import snapshot as snapshot_lib
+        snap = snapshot_lib.IndexSnapshot.from_parts(
+            cfg, rel_params, index_params, norm, buffers,
+            dist_max=dist_max, spatial_mode=spatial_mode,
+            weight_mode=weight_mode)
+        return cls(snap, backend=backend, interpret=interpret)
+
+    # --- the snapshot reference (the ONLY mutable state) ------------------
+
+    @property
+    def snapshot(self):
+        return self._snapshot
+
+    def publish(self, snapshot):
+        """Atomically swap the served snapshot; returns the old one.
+
+        Refuses a snapshot whose ``meta.cfg_digest`` differs from the
+        current one — traced plans close over the model config, so a
+        config change requires a NEW engine, not a swap. Single
+        reference assignment ⇒ a concurrent :meth:`query` sees either
+        the old snapshot or the new one, never a mix.
+        """
+        old = self._snapshot
+        if snapshot.meta.cfg_digest != old.meta.cfg_digest:
+            raise ValueError(
+                f"publish: snapshot cfg_digest {snapshot.meta.cfg_digest} "
+                f"!= engine's {old.meta.cfg_digest}; build a new engine "
+                f"for a different model config")
+        self._snapshot = snapshot
+        return old
+
+    # --- read-only views (back-compat with pre-snapshot callers) ----------
+
+    @property
+    def cfg(self):
+        return self._snapshot.cfg
+
+    @property
+    def rel_params(self):
+        return self._snapshot.rel_params
+
+    @property
+    def index_params(self):
+        return self._snapshot.index_params
+
+    @property
+    def norm(self):
+        return self._snapshot.norm
+
+    @property
+    def buffers(self):
+        return self._snapshot.buffers
+
+    @property
+    def dist_max(self) -> float:
+        return self._snapshot.meta.dist_max
+
+    @property
+    def spatial_mode(self) -> str:
+        return self._snapshot.meta.spatial_mode
+
+    @property
+    def weight_mode(self) -> str:
+        return self._snapshot.meta.weight_mode
+
     @property
     def w_hat(self):
-        """Serve-form step table (Eq. 5), recomputed from the CURRENT
-        rel_params on every access — in-place updates of the spatial
-        sub-params are picked up without rebuilding the engine (it's a
-        jit argument, so no recompile either)."""
-        if self.spatial_mode == "step":
-            return sp.extract_lookup(self.rel_params["spatial"])
-        return jnp.linspace(0, 1, self.cfg.spatial_t)
+        """Serve-form step table (Eq. 5) of the CURRENT snapshot."""
+        return self._snapshot.w_hat
 
-    def query_fn(self, *, k: int, cr: int, backend: Optional[str] = None):
+    # --- plans + execution ------------------------------------------------
+
+    def query_fn(self, *, k: int, cr: int, backend: Optional[str] = None,
+                 batch: Optional[int] = None):
+        """The traced plan for ``(batch, k, cr, backend)``. Plans are
+        keyed on the batch shape too so a serving process can see its
+        full plan inventory in ``_plans``; they never rebind snapshot
+        state (everything is passed as jit arguments), so they survive
+        every publish."""
         backend = self.backend if backend is None else backend
-        key = (k, cr, backend)
+        key = (batch, k, cr, backend)
         if key not in self._plans:
             self._plans[key] = make_query_fn(
                 self.cfg, cr=cr, k=k, backend=backend,
@@ -378,13 +451,20 @@ class QueryEngine:
         return self._plans[key]
 
     def query(self, q_tokens, q_mask, q_loc, *, k: int = 20, cr: int = 1,
-              batch: int = 256, backend: Optional[str] = None):
-        """Batched routed query: (ids (n, k), scores (n, k)) numpy."""
-        fn = self.query_fn(k=k, cr=cr, backend=backend)
-        buf = self.buffers
-        w_hat = self.w_hat          # once per call, not per chunk
+              batch: int = 256, backend: Optional[str] = None,
+              snapshot=None):
+        """Batched routed query: (ids (n, k), scores (n, k)) numpy.
+
+        Reads the snapshot reference exactly once (or serves an explicit
+        ``snapshot`` — the server's flush path pins the one it started
+        with), so every chunk of the batch scores one consistent index.
+        """
+        snap = self._snapshot if snapshot is None else snapshot
+        fn = self.query_fn(k=k, cr=cr, backend=backend, batch=batch)
+        buf = snap.buffers
+        w_hat = snap.w_hat          # once per call, not per chunk
         return run_batched(
-            lambda t, m, l: fn(self.rel_params, self.index_params,
-                               w_hat, self.norm, buf["emb"], buf["loc"],
+            lambda t, m, l: fn(snap.rel_params, snap.index_params,
+                               w_hat, snap.norm, buf["emb"], buf["loc"],
                                buf["ids"], t, m, l),
             [q_tokens, q_mask, q_loc], batch=batch)

@@ -10,11 +10,15 @@ Public API is the :class:`ListRetriever`:
 
 The query phase is a single jitted program owned by the unified engine
 (core/engine.py): encode → features → route → fused score → top-k.
-``backend="pallas"`` (or the legacy ``use_pallas=True``) runs the
-GATHER-FREE kernel (kernels/fused_topk_score_routed): routed cluster ids
-are scalar-prefetched and the resident (c, cap, d) buffers block-indexed
+``backend="pallas"`` runs the GATHER-FREE kernel
+(kernels/fused_topk_score_routed): routed cluster ids are
+scalar-prefetched and the resident (c, cap, d) buffers block-indexed
 directly, so no (B, cr·cap, d) candidate copy is materialized and cr > 1
 merges in-kernel. ``backend="dense"`` is the jnp reference path.
+
+The built state is exported as an immutable, versioned
+``IndexSnapshot`` (:meth:`ListRetriever.snapshot`, core/snapshot.py) —
+the artifact ``repro.api`` saves, loads, and serves.
 """
 from __future__ import annotations
 
@@ -29,6 +33,7 @@ import jax.numpy as jnp
 from repro.core import engine as engine_lib
 from repro.core import index as index_lib
 from repro.core import pseudo_labels, relevance
+from repro.core import snapshot as snapshot_lib
 from repro.core import spatial as sp
 from repro.core.baselines import BM25, tkq_topk
 from repro.optim import make_optimizer, clip_by_global_norm, linear_warmup_cosine
@@ -221,33 +226,11 @@ def train_cluster_index(rel_params, corpus, cfg, *, obj_emb=None,
 
 
 # ---------------------------------------------------------------------------
-# Query phase (jitted): route → score resident buffers → top-k
-# ---------------------------------------------------------------------------
-
-
-def make_query_fn(cfg, *, cr: int = 1, k: int = 20, use_pallas: bool = False,
-                  backend: Optional[str] = None,
-                  interpret: Optional[bool] = None,
-                  dist_max: float = 1.4142, weight_mode: str = "mlp"):
-    """Build the jitted query-phase function (thin wrapper over
-    core/engine.make_query_fn, kept for back-compat).
-
-    signature: fn(rel_params, index_params, w_hat, norm,
-                  buf_emb, buf_loc, buf_ids, q_tokens, q_mask, q_loc)
-               -> (ids (B, k), scores (B, k))
-
-    ``use_pallas`` is the legacy alias for ``backend="pallas"``; prefer
-    ``backend`` ("pallas" | "dense" | "auto").
-    """
-    backend = engine_lib.legacy_backend(backend, use_pallas)
-    return engine_lib.make_query_fn(
-        cfg, cr=cr, k=k, backend=backend, interpret=interpret,
-        dist_max=dist_max, weight_mode=weight_mode)
-
-
-# ---------------------------------------------------------------------------
 # The retriever façade
 # ---------------------------------------------------------------------------
+# (The jitted query-phase builder lives in core/engine.make_query_fn —
+# the former pipeline.make_query_fn wrapper and its use_pallas alias are
+# gone; --use-pallas survives only in engine.resolve_cli_backend.)
 
 
 class ListRetriever:
@@ -305,28 +288,42 @@ class ListRetriever:
 
     # --- query phase --------------------------------------------------------
 
-    def engine(self) -> engine_lib.QueryEngine:
-        """The bound query engine (built lazily after build()).
+    def snapshot(self) -> "snapshot_lib.IndexSnapshot":
+        """The immutable, versioned artifact of the current built state
+        (core/snapshot.py): what you ``save()``, hand to
+        ``repro.api.Searcher``, or publish to a streaming server.
 
-        Rebuilt whenever the retriever's params/buffers objects are
-        swapped (retraining, insert_objects/delete_objects returning new
-        buffer dicts) so queries never serve a stale snapshot."""
+        Re-derived (with ``meta.version`` bumped) whenever the
+        retriever's params/buffers objects are swapped — retraining,
+        ``index.insert_objects`` / ``delete_objects`` returning new
+        buffer dicts — so a fresh call never describes stale state."""
         assert self.buffers is not None, "build() first"
         key = (id(self.rel_params), id(self.index_params), id(self.norm),
                id(self.buffers))
-        if (getattr(self, "_engine", None) is None
-                or getattr(self, "_engine_key", None) != key):
-            self._engine = engine_lib.QueryEngine(
+        if (getattr(self, "_snapshot", None) is None
+                or getattr(self, "_snapshot_key", None) != key):
+            version = getattr(self, "_snapshot_gen", -1) + 1
+            self._snapshot_gen = version
+            self._snapshot = snapshot_lib.IndexSnapshot.from_parts(
                 self.cfg, self.rel_params, self.index_params, self.norm,
                 self.buffers, dist_max=float(self.corpus.dist_max),
-                spatial_mode=self.spatial_mode, weight_mode=self.weight_mode)
-            self._engine_key = key
+                spatial_mode=self.spatial_mode,
+                weight_mode=self.weight_mode, version=version)
+            self._snapshot_key = key
+        return self._snapshot
+
+    def engine(self) -> engine_lib.QueryEngine:
+        """A stateless engine over :meth:`snapshot` (built lazily after
+        build(); rebuilt when the snapshot re-derives, so queries never
+        serve a stale index)."""
+        snap = self.snapshot()
+        if (getattr(self, "_engine", None) is None
+                or self._engine.snapshot is not snap):
+            self._engine = engine_lib.QueryEngine.from_snapshot(snap)
         return self._engine
 
     def query(self, query_ids, *, k: int = 20, cr: int = 1,
-              use_pallas: bool = False, backend: Optional[str] = None,
-              batch: int = 256):
-        backend = engine_lib.legacy_backend(backend, use_pallas)
+              backend: Optional[str] = None, batch: int = 256):
         eng = self.engine()
         tokens, mask = self.corpus.query_tokens(query_ids)
         q_loc = self.corpus.q_loc[query_ids].astype(np.float32)

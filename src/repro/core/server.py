@@ -34,11 +34,17 @@ request pays compile latency, repeated work, or a ragged-batch recompile:
   copy's flush completed) are coalesced onto one future instead of
   occupying two batch slots.
 
-* **cache invalidation on index mutation** — :meth:`insert_objects` /
-  :meth:`delete_objects` wrap the buffer mutations of core/index.py,
-  swap the engine's resident buffers, and clear both cache tiers in the
-  same event-loop step, so a cached answer can never be served across a
-  corpus change.
+* **atomic snapshot publication** — the server never mutates the
+  engine's resident state. :meth:`insert_objects` / :meth:`delete_objects`
+  build new buffers (core/index.py), derive the successor snapshot
+  (``snapshot.with_buffers`` — ``meta.version`` + 1), and
+  :meth:`publish` it: one engine reference swap plus a cache clear in
+  the same event-loop step. Every cache key additionally embeds
+  ``snapshot.meta.version``, so even a stale entry could never be
+  served against the wrong index generation. A flush pins the snapshot
+  it started with (passed explicitly into ``engine.query``), so
+  requests already being scored finish on the OLD snapshot — no torn
+  reads — while everything still queued flushes on the new one.
 
 * a **warm-up manager** — :meth:`warmup` pre-traces the configured
   (batch, backend) shapes through the *same* bound plan the flush path
@@ -254,39 +260,42 @@ class StreamingServer:
                 self.stats.compile_seconds[name] = time.perf_counter() - t0
         return dict(self.stats.compile_seconds)
 
-    # --- index mutation + cache invalidation (DESIGN.md §7) ---------------
+    # --- snapshot publication (DESIGN.md §8) ------------------------------
 
     def insert_objects(self, new_emb, new_loc, new_ids):
-        """Route new objects into the resident buffers and invalidate the
-        result caches (index.insert_objects semantics, bounds-checked).
+        """Route new objects through the trained index and publish the
+        successor snapshot (index.insert_objects semantics,
+        bounds-checked). Returns the published :class:`IndexSnapshot`.
 
-        After a mutation the SERVER'S ENGINE is the source of truth for
+        After a publish the SERVER'S SNAPSHOT is the source of truth for
         the corpus: a ``ListRetriever`` that originally supplied the
-        engine still holds the pre-mutation ``buffers`` / ``obj_emb`` /
-        ``obj_assign``, so its offline oracles (``brute_force``, cluster
-        metrics) describe the old corpus until it is rebuilt. Mutate
-        through the retriever and ``apply_buffers`` the result if you
-        need the two to stay aligned."""
+        engine still holds the pre-mutation state, so its offline
+        oracles (``brute_force``, cluster metrics) describe the old
+        corpus until it is rebuilt."""
+        snap = self.engine.snapshot
         buf = index_lib.insert_objects(
-            self.engine.buffers, self.engine.index_params, self.engine.norm,
+            snap.buffers, snap.index_params, snap.norm,
             new_emb, new_loc, new_ids)
-        self.apply_buffers(buf)
-        return buf
+        return self.publish(snap.with_buffers(buf))
 
     def delete_objects(self, del_ids):
-        """Lazily delete objects (slots masked to -1) and invalidate."""
-        buf = index_lib.delete_objects(self.engine.buffers, del_ids)
-        self.apply_buffers(buf)
-        return buf
+        """Lazily delete objects (slots masked to -1) and publish the
+        successor snapshot. Returns it."""
+        snap = self.engine.snapshot
+        buf = index_lib.delete_objects(snap.buffers, del_ids)
+        return self.publish(snap.with_buffers(buf))
 
-    def apply_buffers(self, buffers):
-        """Swap the engine's resident cluster buffers for ``buffers`` and
-        drop every cached result — one atomic event-loop step, so a
-        pre-mutation answer is never served post-mutation. Requests
-        already queued are unaffected: they flush *after* the swap and
-        therefore score against the new buffers."""
-        self.engine.buffers = buffers
+    def publish(self, snapshot):
+        """Atomically publish ``snapshot``: swap the engine's reference
+        (digest-checked) and drop every cached result, in ONE event-loop
+        step — a pre-publish answer is never served post-publish. The
+        queue is untouched: pending requests flush *after* the publish
+        and score the new snapshot; a flush that already started pinned
+        the old snapshot and finishes on it (no torn reads). Returns the
+        published snapshot."""
+        self.engine.publish(snapshot)
         self.invalidate_cache()
+        return snapshot
 
     def invalidate_cache(self):
         self._exact.clear()
@@ -336,8 +345,12 @@ class StreamingServer:
         self.stats.n_requests += 1
         k, cr = self.cfg.k, self.cfg.cr
 
+        # cache lookups are keyed on the CURRENT snapshot version: a hit
+        # can only come from an answer computed against this exact index
+        # generation (publish also clears, so this is belt and braces)
+        ver = self.engine.snapshot.meta.version
         ekey = exact_key(tokens, mask, loc, k, cr)
-        hit = self._exact.get(ekey)
+        hit = self._exact.get((ver, ekey))
         if hit is not None:
             self.stats.exact_hits += 1
             self.stats.latencies_s.append(time.perf_counter() - t0)
@@ -345,7 +358,7 @@ class StreamingServer:
         nkey = None
         if self.cfg.near_cells > 0:
             nkey = near_key(tokens, mask, loc, k, cr, self.cfg.near_cells)
-            hit = self._near.get(nkey)
+            hit = self._near.get((ver, nkey))
             if hit is not None:
                 self.stats.near_hits += 1
                 self.stats.latencies_s.append(time.perf_counter() - t0)
@@ -385,11 +398,17 @@ class StreamingServer:
         tok = np.stack([p.tokens for p in pending])
         msk = np.stack([p.mask for p in pending])
         loc = np.stack([p.loc for p in pending])
+        # pin the snapshot for the WHOLE flush: every row of this batch
+        # scores one consistent index generation even if a publish lands
+        # while the engine call is executing, and the results are cached
+        # under the version actually served
+        snap = self.engine.snapshot
         try:
             # one padded static-shape chunk: run_batched's padding rules
             ids, scores = self.engine.query(
                 tok, msk, loc, k=self.cfg.k, cr=self.cfg.cr,
-                batch=self.cfg.batch_size, backend=self.cfg.backend)
+                batch=self.cfg.batch_size, backend=self.cfg.backend,
+                snapshot=snap)
         except Exception as e:                   # noqa: BLE001
             for p in pending:
                 self._inflight.pop(p.ekey, None)
@@ -399,13 +418,14 @@ class StreamingServer:
         self.stats.flushes[reason] += 1
         self.stats.engine_batches += 1
         self.stats.engine_queries += len(pending)
+        ver = snap.meta.version
         for i, p in enumerate(pending):
             res = (ids[i].copy(), scores[i].copy())
             for arr in res:              # shared with the cache + every
                 arr.setflags(write=False)  # waiter: freeze, don't trust
-            self._exact.put(p.ekey, res)
+            self._exact.put((ver, p.ekey), res)
             if p.nkey is not None:
-                self._near.put(p.nkey, res)
+                self._near.put((ver, p.nkey), res)
             self._inflight.pop(p.ekey, None)
             if not p.future.done():
                 p.future.set_result(res)

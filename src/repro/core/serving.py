@@ -75,14 +75,39 @@ def dispatch_queries(top_c, q_feat, *, n_clusters: int, capacity: int):
     return q_buf, origin, n_dropped
 
 
-def cluster_dispatch_query(rel_params, index_params, w_hat, norm,
-                           buf_emb, buf_loc, buf_ids,
-                           q_tokens, q_mask, q_loc, cfg, *,
-                           k: int = 20, cr: int = 1, dist_max: float = 1.0,
+def cluster_dispatch_query(snapshot, q_tokens, q_mask, q_loc, *,
+                           k: int = 20, cr: int = 1,
                            capacity: Optional[int] = None,
                            return_dropped: bool = False):
-    """The distributed query phase. Returns (ids (B, k), scores (B, k)),
-    plus the dispatch overflow count n_dropped () when ``return_dropped``.
+    """The distributed query phase over an :class:`IndexSnapshot`
+    (core/snapshot.py) — the same artifact the gather path's
+    ``QueryEngine`` serves, so dispatch and gather share one scoring
+    surface (``engine.score_candidates``) *and* one state surface.
+
+    Returns (ids (B, k), scores (B, k)), plus the dispatch overflow
+    count n_dropped () when ``return_dropped``. Mesh-parallel plans that
+    need explicit array arguments (launch/steps.py builds them from
+    abstract shapes) call :func:`dispatch_query_kernel` directly.
+    """
+    buf = snapshot.buffers
+    return dispatch_query_kernel(
+        snapshot.rel_params, snapshot.index_params, snapshot.w_hat,
+        snapshot.norm, buf["emb"], buf["loc"], buf["ids"],
+        q_tokens, q_mask, q_loc, snapshot.cfg, k=k, cr=cr,
+        dist_max=snapshot.meta.dist_max, capacity=capacity,
+        return_dropped=return_dropped)
+
+
+def dispatch_query_kernel(rel_params, index_params, w_hat, norm,
+                          buf_emb, buf_loc, buf_ids,
+                          q_tokens, q_mask, q_loc, cfg, *,
+                          k: int = 20, cr: int = 1, dist_max: float = 1.0,
+                          capacity: Optional[int] = None,
+                          return_dropped: bool = False):
+    """Explicit-array form of :func:`cluster_dispatch_query` — the body
+    that launch/steps.py stages into sharded meshes. Returns
+    (ids (B, k), scores (B, k)), plus the dispatch overflow count
+    n_dropped () when ``return_dropped``.
 
     buf_emb (c, cap, d) / buf_loc (c, cap, 2) / buf_ids (c, cap): the padded
     cluster buffers, sharded cluster-major ("all") on the production mesh.

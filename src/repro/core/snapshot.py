@@ -1,0 +1,293 @@
+"""Immutable, versioned index artifacts (DESIGN.md §8).
+
+LIST's value is a *built* index: the trained relevance params, the
+cluster-classifier params, the location normalizer, and the packed
+cluster buffers. An :class:`IndexSnapshot` freezes all of that — plus a
+meta block identifying exactly what it is — into one pytree artifact
+that
+
+* **round-trips durably**: ``snap.save(dir)`` / ``IndexSnapshot.load(dir)``
+  (built on checkpoint/ckpt.py's atomic-commit layout) reproduce
+  bit-identical query results on every backend;
+* **publishes atomically**: the serving stack never mutates an engine's
+  resident state in place — mutation builds a *new* snapshot
+  (:meth:`with_buffers` bumps ``meta.version``) and swaps it in one
+  reference assignment, so an in-flight flush keeps scoring the
+  snapshot it started with and no reader ever sees half an update;
+* **self-describes**: ``meta.schema_version`` gates loads across format
+  changes, ``meta.cfg_digest`` pins the model config the params were
+  trained under (an engine refuses to swap in a snapshot built for a
+  different config), ``meta.version`` keys result-cache entries in the
+  streaming server.
+
+The snapshot is a frozen dataclass; treat every array inside it as
+read-only. Derivations that would mutate (insert/delete) go through
+``index.insert_objects`` / ``index.delete_objects`` + :meth:`with_buffers`,
+which return a *new* snapshot.
+
+On-disk layout — one ckpt step per snapshot version::
+
+    <dir>/step_000000000/
+        manifest.json      # ckpt manifest; meta = SnapshotMeta + cfg +
+                           #   tree_spec (the container structure)
+        arr_00000.npy ...  # one file per leaf
+
+``tree_spec`` records the nested dict/list/tuple structure of the param
+trees so a load needs NO template: the structure is rebuilt from the
+manifest and ckpt.restore validates the leaf count. Loads therefore
+work even for params whose shapes can't be derived from the config
+(e.g. an index MLP built with non-config hidden sizes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import time
+from typing import Any, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.configs.base import DualEncoderConfig
+from repro.core import spatial as sp
+
+SCHEMA_VERSION = 1
+
+# buffer keys that are arrays (saved as leaves) vs host-side ints (meta)
+_BUFFER_ARRAYS = ("emb", "loc", "ids", "counts")
+_BUFFER_SCALARS = ("capacity", "n_spilled")
+
+
+# ---------------------------------------------------------------------------
+# Config identity
+# ---------------------------------------------------------------------------
+
+
+def cfg_digest(cfg) -> str:
+    """Stable digest of the model config: the identity a snapshot's params
+    are only valid under. Tuples serialize as JSON lists, so the digest is
+    identical before a save and after a load."""
+    blob = json.dumps(dataclasses.asdict(cfg), sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def _cfg_from_dict(d: dict) -> DualEncoderConfig:
+    kw = {k: tuple(v) if isinstance(v, list) else v for k, v in d.items()}
+    return DualEncoderConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Structure spec: JSON-able container skeleton of a pytree
+# ---------------------------------------------------------------------------
+
+
+def _tree_spec(tree) -> Any:
+    """The container structure of ``tree`` with leaves as ``None``.
+
+    Dict children are listed in sorted-key order — the same order
+    ``jax.tree_util`` flattens dicts in — so a skeleton rebuilt from the
+    spec has the exact treedef of the original.
+    """
+    if isinstance(tree, dict):
+        return {"d": {k: _tree_spec(tree[k]) for k in sorted(tree)}}
+    if isinstance(tree, (list, tuple)):
+        kind = "t" if isinstance(tree, tuple) else "l"
+        return {kind: [_tree_spec(v) for v in tree]}
+    return None
+
+
+def _spec_skeleton(spec) -> Any:
+    """Rebuild the container structure with ``0`` placeholder leaves
+    (no ``.shape`` attribute, so ckpt.restore skips shape validation and
+    only checks the leaf count)."""
+    if spec is None:
+        return 0
+    if "d" in spec:
+        return {k: _spec_skeleton(v) for k, v in spec["d"].items()}
+    if "l" in spec:
+        return [_spec_skeleton(v) for v in spec["l"]]
+    return tuple(_spec_skeleton(v) for v in spec["t"])
+
+
+# ---------------------------------------------------------------------------
+# The artifact
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotMeta:
+    """Identity + provenance of one snapshot.
+
+    schema_version  on-disk format gate (load refuses a mismatch)
+    cfg_digest      hash of the model config (engine refuses a swap
+                    across digests)
+    n_objects       live objects in the buffers (counts.sum())
+    built_at        unix seconds the snapshot (version) was created
+    version         monotone publish counter; bumped by with_buffers,
+                    keys the server's result caches
+    dist_max        Eq. 5 distance normalizer the params trained under
+    spatial_mode    "step" | "exp" | "linear" (how w_hat derives)
+    weight_mode     "mlp" | "fixed" (how the ST mixing weights derive)
+    """
+    schema_version: int
+    cfg_digest: str
+    n_objects: int
+    built_at: float
+    version: int
+    dist_max: float
+    spatial_mode: str = "step"
+    weight_mode: str = "mlp"
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSnapshot:
+    """A frozen, versioned, servable LIST index.
+
+    Fields: ``cfg`` (DualEncoderConfig), ``rel_params`` /
+    ``index_params`` (trained pytrees), ``norm`` (location-normalizer
+    bounds), ``buffers`` (packed cluster buffers of
+    ``index.build_cluster_buffers``), ``meta`` (:class:`SnapshotMeta`).
+
+    Construction: :meth:`from_parts` (fresh, version 0),
+    :meth:`with_buffers` (derive: new buffers, version + 1),
+    :meth:`load` (from disk). Never mutate a field — the whole point is
+    that holders of a snapshot reference can trust it forever.
+    """
+    cfg: DualEncoderConfig
+    rel_params: Any
+    index_params: Any
+    norm: Any
+    buffers: dict
+    meta: SnapshotMeta
+
+    # --- construction -----------------------------------------------------
+
+    @classmethod
+    def from_parts(cls, cfg, rel_params, index_params, norm, buffers, *,
+                   dist_max: float, spatial_mode: str = "step",
+                   weight_mode: str = "mlp", version: int = 0,
+                   built_at: Optional[float] = None) -> "IndexSnapshot":
+        missing = [k for k in _BUFFER_ARRAYS + _BUFFER_SCALARS
+                   if k not in buffers]
+        if missing:
+            raise ValueError(f"buffers missing keys {missing}; expected the "
+                             f"dict of index.build_cluster_buffers")
+        meta = SnapshotMeta(
+            schema_version=SCHEMA_VERSION, cfg_digest=cfg_digest(cfg),
+            n_objects=int(np.asarray(buffers["counts"]).sum()),
+            built_at=time.time() if built_at is None else float(built_at),
+            version=int(version), dist_max=float(dist_max),
+            spatial_mode=spatial_mode, weight_mode=weight_mode)
+        return cls(cfg=cfg, rel_params=rel_params, index_params=index_params,
+                   norm=norm, buffers=buffers, meta=meta)
+
+    def with_buffers(self, buffers: dict) -> "IndexSnapshot":
+        """Derive the successor snapshot: same params, new buffers,
+        ``meta.version + 1``. This is the ONLY sanctioned way corpus
+        mutations become servable — build new buffers (index.insert_objects
+        / delete_objects), derive, publish."""
+        meta = dataclasses.replace(
+            self.meta, version=self.meta.version + 1, built_at=time.time(),
+            n_objects=int(np.asarray(buffers["counts"]).sum()))
+        return dataclasses.replace(self, buffers=buffers, meta=meta)
+
+    # --- derived serve-form state -----------------------------------------
+
+    @property
+    def w_hat(self):
+        """Serve-form spatial step table (Eq. 5), derived from rel_params."""
+        if self.meta.spatial_mode == "step":
+            return sp.extract_lookup(self.rel_params["spatial"])
+        return jnp.linspace(0, 1, self.cfg.spatial_t)
+
+    @property
+    def dist_max(self) -> float:
+        return self.meta.dist_max
+
+    # --- persistence ------------------------------------------------------
+
+    def _tree(self) -> dict:
+        return {
+            "rel_params": self.rel_params,
+            "index_params": self.index_params,
+            "norm": self.norm,
+            "buffers": {k: self.buffers[k] for k in _BUFFER_ARRAYS},
+        }
+
+    def save(self, directory: str, *, keep: int = 3) -> str:
+        """Persist under ``directory`` (ckpt step = meta.version; atomic
+        commit, keep-k GC). Returns the committed path.
+
+        A directory holds ONE snapshot lineage: load() serves the
+        highest committed version, so writing a lower version than the
+        directory already holds would leave the old artifact as the
+        load target while looking like a successful save — refused.
+        """
+        latest = ckpt.latest_step(directory)
+        if latest is not None and latest > self.meta.version:
+            raise ValueError(
+                f"snapshot.save: {directory} already holds version "
+                f"{latest} > this snapshot's {self.meta.version}; load() "
+                f"would keep serving the old artifact. Save a successor "
+                f"of that lineage, or use a fresh directory")
+        tree = self._tree()
+        meta = dataclasses.asdict(self.meta)
+        meta.update({
+            "cfg": dataclasses.asdict(self.cfg),
+            "tree_spec": _tree_spec(tree),
+            **{k: int(self.buffers[k]) for k in _BUFFER_SCALARS},
+        })
+        return ckpt.save(directory, self.meta.version, tree, meta=meta,
+                         keep=keep)
+
+    @classmethod
+    def load(cls, directory: str,
+             step: Optional[int] = None) -> "IndexSnapshot":
+        """Load a committed snapshot (latest version unless ``step``).
+
+        Raises a clear ``ValueError`` on a schema-version mismatch — a
+        snapshot written by an incompatible build must never be silently
+        reinterpreted — and ``FileNotFoundError`` when the directory has
+        no committed snapshot.
+        """
+        meta, step = ckpt.read_meta(directory, step=step)
+        got = meta.get("schema_version")
+        if got != SCHEMA_VERSION:
+            raise ValueError(
+                f"snapshot schema mismatch in {directory}: artifact has "
+                f"schema_version={got!r}, this build reads "
+                f"{SCHEMA_VERSION}; re-build the index (repro.api.build) "
+                f"or load with the matching code version")
+        cfg = _cfg_from_dict(meta["cfg"])
+        if cfg_digest(cfg) != meta["cfg_digest"]:
+            raise ValueError(
+                f"snapshot cfg_digest mismatch in {directory}: manifest "
+                f"says {meta['cfg_digest']} but the stored config hashes "
+                f"to {cfg_digest(cfg)}; artifact is corrupt")
+        skeleton = _spec_skeleton(meta["tree_spec"])
+        tree, _, _ = ckpt.restore(directory, skeleton, step=step)
+        # ckpt.restore hands back host numpy; re-materialize as jax
+        # arrays so a loaded snapshot behaves exactly like a built one
+        # (numpy params captured as jit constants cannot be indexed by
+        # traced token ids — the embedding gather would throw)
+        tree = jax.tree_util.tree_map(jnp.asarray, tree)
+        buffers = dict(tree["buffers"])
+        for k in _BUFFER_SCALARS:
+            buffers[k] = int(meta[k])
+        sm = SnapshotMeta(
+            schema_version=meta["schema_version"],
+            cfg_digest=meta["cfg_digest"], n_objects=meta["n_objects"],
+            built_at=meta["built_at"], version=meta["version"],
+            dist_max=meta["dist_max"], spatial_mode=meta["spatial_mode"],
+            weight_mode=meta["weight_mode"])
+        return cls(cfg=cfg, rel_params=tree["rel_params"],
+                   index_params=tree["index_params"], norm=tree["norm"],
+                   buffers=buffers, meta=sm)
+
+
+def load(directory: str, step: Optional[int] = None) -> IndexSnapshot:
+    """Module-level alias of :meth:`IndexSnapshot.load`."""
+    return IndexSnapshot.load(directory, step=step)

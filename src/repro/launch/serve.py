@@ -1,11 +1,17 @@
-"""LIST serving driver: train (or load) a retriever, then run a
-long-lived streaming server (core/server.py, DESIGN.md §7) and replay a
-skewed query workload against it — open-loop (fixed arrival rate) or
-closed-loop (fixed concurrency) load generation.
+"""LIST serving driver over the ``repro.api`` facade: build (or load) an
+immutable ``IndexSnapshot``, then run a long-lived streaming server
+(core/server.py, DESIGN.md §7–§8) and replay a skewed query workload
+against it — open-loop (fixed arrival rate) or closed-loop (fixed
+concurrency) load generation.
 
     PYTHONPATH=src python -m repro.launch.serve --objects 4000 --queries 600 \
         --train-steps 200 --index-steps 400 --serve-batch 64 \
         --mode closed --concurrency 64 --requests 1200 --skew 1.05
+
+``--snapshot-dir DIR`` makes the artifact durable: the first run trains,
+builds, and ``api.save``s; later runs ``api.load`` the committed
+snapshot and skip training entirely (bit-identical serving, per
+tests/test_snapshot.py).
 
 Reports two layers of metrics:
 
@@ -25,6 +31,7 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
+from repro import api
 from repro.configs import get_config
 from repro.core import cluster_metrics as cm
 from repro.core import index as index_lib
@@ -72,6 +79,9 @@ def main(argv=None):
     ap.add_argument("--backend", default=None,
                     choices=["pallas", "dense", "auto"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="durable IndexSnapshot artifact dir: load it when "
+                         "a committed snapshot exists, else train + save")
     # --- streaming-server knobs ---
     ap.add_argument("--serve-batch", type=int, default=64,
                     help="micro-batch size (the static jitted batch shape)")
@@ -106,16 +116,40 @@ def main(argv=None):
         n_objects=args.objects, n_queries=args.queries,
         n_topics=args.topics, vocab_size=4096, seed=args.seed))
 
-    r = pl.ListRetriever(cfg, corpus)
-    print("== training relevance model (Eq. 8) ==")
-    r.train_relevance(steps=args.train_steps, batch=64, lr=1e-3,
-                      verbose=True, log_every=max(args.train_steps // 3, 1))
-    print("== training index (Eq. 13 + 14) ==")
-    r.train_index(steps=args.index_steps, batch=64, lr=3e-3, verbose=True,
-                  log_every=max(args.index_steps // 3, 1))
-    buf = r.build()
+    # --- the artifact: load a committed snapshot, or build + save one ----
+    from repro.checkpoint import ckpt as ckpt_lib
+    r = None
+    if (args.snapshot_dir
+            and ckpt_lib.latest_step(args.snapshot_dir) is not None):
+        t0 = time.perf_counter()
+        snap = api.load(args.snapshot_dir)
+        # the artifact must match what the CLI args describe, or every
+        # quality number below (recall vs THIS corpus's ground truth)
+        # would be silently meaningless
+        from repro.core.snapshot import cfg_digest
+        if snap.meta.cfg_digest != cfg_digest(cfg):
+            raise SystemExit(
+                f"--snapshot-dir {args.snapshot_dir}: artifact was built "
+                f"for a different model config (digest "
+                f"{snap.meta.cfg_digest} != {cfg_digest(cfg)}); rerun "
+                f"with the original --objects/--clusters/... flags or "
+                f"point at a fresh directory to retrain")
+        print(f"== loaded snapshot v{snap.meta.version} "
+              f"({snap.meta.n_objects} objects) from {args.snapshot_dir} "
+              f"in {time.perf_counter() - t0:.2f}s — skipping training ==")
+    else:
+        print("== training (Eq. 8 relevance + Eq. 13/14 index) ==")
+        snap, r = api.build(
+            cfg, corpus, rel_steps=args.train_steps,
+            idx_steps=args.index_steps, batch=64, rel_lr=1e-3, idx_lr=3e-3,
+            seed=args.seed, verbose=True,
+            log_every=max(args.train_steps // 3, 1), return_retriever=True)
+        if args.snapshot_dir:
+            path = api.save(snap, args.snapshot_dir)
+            print(f"== saved snapshot v{snap.meta.version} -> {path} ==")
+    buf = snap.buffers
     counts = np.asarray(buf["counts"])
-    print(f"== index built: clusters={counts.tolist()} "
+    print(f"== index: clusters={counts.tolist()} "
           f"spilled={buf['n_spilled']} ==")
 
     tr, va, te = corpus.split()
@@ -125,7 +159,8 @@ def main(argv=None):
     # built and warmed BEFORE any other query runs: the quality snapshot
     # below uses the same (k, cr, backend, batch) plan, so warming later
     # would measure a hot cache and report bogus compile seconds
-    server = server_lib.StreamingServer(r.engine(), server_lib.ServerConfig(
+    searcher = api.Searcher(snap)
+    server = searcher.serve(server_lib.ServerConfig(
         batch_size=args.serve_batch, max_delay_ms=args.max_delay_ms,
         k=args.k, cr=args.cr, backend=backend,
         cache_size=args.cache_size, near_cells=args.near_cells))
@@ -137,10 +172,11 @@ def main(argv=None):
 
     # --- quality snapshot (one-shot, vs brute force) ----------------------
     t0 = time.perf_counter()
-    bf_ids, _ = r.brute_force(te, k=args.k, batch=args.serve_batch)
+    bf_ids, _ = api.brute_force(snap, corpus, te, k=args.k,
+                                batch=args.serve_batch)
     t_bf = time.perf_counter() - t0
-    ids, _ = r.query(te, k=args.k, cr=args.cr, backend=backend,
-                     batch=args.serve_batch)
+    ids, _ = searcher.query_corpus(corpus, te, k=args.k, cr=args.cr,
+                                   backend=backend, batch=args.serve_batch)
     cap = buf["capacity"]
     scanned = args.cr * cap
     print(f"\n== quality over {len(te)} held-out queries ==")
@@ -154,14 +190,16 @@ def main(argv=None):
           f"(scans ≤{scanned} objects/query = "
           f"{scanned / args.objects:.1%} of corpus)")
 
-    q_emb = pl.embed_queries(r.rel_params, corpus, cfg, te)
-    qf = index_lib.build_features(
-        jnp.asarray(q_emb), jnp.asarray(corpus.q_loc[te].astype(np.float32)),
-        r.norm)
-    qa = np.asarray(index_lib.assign_clusters(r.index_params, qf))
-    pc, _ = cm.cluster_precision(qa, positives, r.obj_assign, cfg.n_clusters)
-    print(f"cluster quality: P(C)={pc:.4f} "
-          f"IF(C)={cm.imbalance_factor(r.obj_assign, cfg.n_clusters):.3f}")
+    if r is not None:       # obj_assign is training-time state, not artifact
+        q_emb = pl.embed_queries(snap.rel_params, corpus, cfg, te)
+        qf = index_lib.build_features(
+            jnp.asarray(q_emb),
+            jnp.asarray(corpus.q_loc[te].astype(np.float32)), snap.norm)
+        qa = np.asarray(index_lib.assign_clusters(snap.index_params, qf))
+        pc, _ = cm.cluster_precision(qa, positives, r.obj_assign,
+                                     cfg.n_clusters)
+        print(f"cluster quality: P(C)={pc:.4f} "
+              f"IF(C)={cm.imbalance_factor(r.obj_assign, cfg.n_clusters):.3f}")
 
     # --- streamed load against the pre-built server -----------------------
     requests, picks = build_workload(corpus, te, args.requests,

@@ -562,7 +562,7 @@ def plan_dual_encoder(arch_id: str, shape, mesh) -> CellPlan:
 
         def serve(params, iparams, w_hat, norm, buf_emb, buf_loc, buf_ids,
                   q_tokens, q_mask, q_loc):
-            return serving.cluster_dispatch_query(
+            return serving.dispatch_query_kernel(
                 params, iparams, w_hat, norm, buf_emb, buf_loc, buf_ids,
                 q_tokens, q_mask, q_loc, cfg, k=k, cr=cfg.cluster_route,
                 dist_max=1.4142, capacity=qcap)

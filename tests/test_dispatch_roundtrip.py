@@ -87,7 +87,6 @@ def test_cluster_dispatch_query_surfaces_drops(rng):
     from repro.configs import get_config
     from repro.core import index as il
     from repro.core import relevance
-    from repro.core import spatial as sp
 
     cfg = dataclasses.replace(
         get_config("list-dual-encoder"),
@@ -105,15 +104,18 @@ def test_cluster_dispatch_query_surfaces_drops(rng):
     top = np.asarray(il.assign_clusters(iparams, feats, top=1))[:, None]
     buf = il.build_cluster_buffers(top, obj_emb, obj_loc, n_clusters=c,
                                    capacity=cap)
-    w_hat = sp.extract_lookup(params["spatial"])
     tok = jnp.asarray(rng.integers(2, 256, (b, 8)), jnp.int32)
     msk = jnp.ones((b, 8), bool)
     ql = jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32)
 
-    # qcap=1: at most one query per cluster survives dispatch
+    # qcap=1: at most one query per cluster survives dispatch — through
+    # the snapshot-based entry point (the raw-kernel form is what
+    # launch/steps.py shards; both share this body)
+    from repro.core.snapshot import IndexSnapshot
+    snap = IndexSnapshot.from_parts(cfg, params, iparams, norm, buf,
+                                    dist_max=1.414)
     ids, sc, nd = serving.cluster_dispatch_query(
-        params, iparams, w_hat, norm, buf["emb"], buf["loc"], buf["ids"],
-        tok, msk, ql, cfg, k=k, cr=1, dist_max=1.414, capacity=1,
+        snap, tok, msk, ql, k=k, cr=1, capacity=1,
         return_dropped=True)
     assert int(nd) == b - len(np.unique(
         np.asarray(il.route_queries(

@@ -79,8 +79,8 @@ def test_pallas_query_path_matches_jnp(trained):
     r = trained
     tr, va, te = r.corpus.split()
     te = te[:32]
-    ids1, sc1 = r.query(te, k=8, cr=1, use_pallas=False, batch=32)
-    ids2, sc2 = r.query(te, k=8, cr=1, use_pallas=True, batch=32)
+    ids1, sc1 = r.query(te, k=8, cr=1, backend="dense", batch=32)
+    ids2, sc2 = r.query(te, k=8, cr=1, backend="pallas", batch=32)
     np.testing.assert_allclose(sc1, sc2, rtol=1e-4, atol=1e-4)
 
 

@@ -208,10 +208,12 @@ def test_resolve_backend_rules():
     assert engine.resolve_backend("auto", interpret=False)[0] == expect
     with pytest.raises(ValueError):
         engine.resolve_backend("tpu")
-    # legacy alias: explicit backend wins over the bool
-    assert engine.legacy_backend(None, True) == "pallas"
-    assert engine.legacy_backend(None, False) == "dense"
-    assert engine.legacy_backend("auto", True) == "auto"
+    # the legacy entry points are collapsed: use_pallas survives ONLY as
+    # the CLI alias in resolve_cli_backend (tested in test_server), and
+    # pipeline no longer wraps the engine's query-fn builder
+    from repro.core import pipeline as pl
+    assert not hasattr(engine, "legacy_backend")
+    assert not hasattr(pl, "make_query_fn")
 
 
 # ---------------------------------------------------------------------------

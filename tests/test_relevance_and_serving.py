@@ -10,6 +10,7 @@ from repro.configs import get_config
 from repro.core import index as il
 from repro.core import relevance, serving
 from repro.core import spatial as sp
+from repro.core.snapshot import IndexSnapshot
 
 KEY = jax.random.PRNGKey(0)
 
@@ -132,12 +133,13 @@ def test_cluster_dispatch_equals_gather_path(setup, rng):
     q_mask = jnp.ones((b, 8), bool)
     q_loc = jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32)
 
+    snap = IndexSnapshot.from_parts(cfg, params, iparams, norm, buf,
+                                    dist_max=1.414)
     ids_d, sc_d = serving.cluster_dispatch_query(
-        params, iparams, w_hat, norm, buf["emb"], buf["loc"], buf["ids"],
-        q_tokens, q_mask, q_loc, cfg, k=k, cr=1, dist_max=1.414,
+        snap, q_tokens, q_mask, q_loc, k=k, cr=1,
         capacity=b)   # capacity >= b: no dispatch drops
 
-    # simple gather path (core/pipeline.make_query_fn logic, inlined)
+    # simple gather path (core/engine.make_query_fn logic, inlined)
     q_emb = relevance.encode_queries(params, q_tokens, q_mask, cfg)
     qf = il.build_features(q_emb, q_loc, norm)
     top_c, _ = il.route_queries(iparams, qf, cr=1)

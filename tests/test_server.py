@@ -59,8 +59,8 @@ def engine_parts():
 
 def make_engine(engine_parts):
     cfg, params, iparams, norm, buf = engine_parts
-    return engine_lib.QueryEngine(cfg, params, iparams, norm, buf,
-                                  dist_max=DIST_MAX, backend="dense")
+    return engine_lib.QueryEngine.from_parts(
+        cfg, params, iparams, norm, buf, dist_max=DIST_MAX, backend="dense")
 
 
 def make_server(engine_parts, **over):
@@ -251,8 +251,9 @@ def test_insert_invalidates_and_stays_bit_identical(engine_parts, rng):
 
     ids_s, sc_s = server.serve_all(tok, msk, loc)
     assert len(calls) == 2                            # cache was dropped
-    eng2 = make_engine(engine_parts)
-    eng2.buffers = server.engine.buffers              # the mutated buffers
+    # a fresh engine over the PUBLISHED snapshot is the oracle
+    eng2 = engine_lib.QueryEngine.from_snapshot(server.engine.snapshot,
+                                                backend="dense")
     ids_d, sc_d = direct(eng2, tok, msk, loc, batch=2)
     assert np.array_equal(ids_s, ids_d)
     assert np.array_equal(sc_s, sc_d)
@@ -337,7 +338,7 @@ def test_warmup_pretraces_the_flush_plan(engine_parts, rng):
     assert compiles == {"dense@4": pytest.approx(compiles["dense@4"])}
     assert compiles["dense@4"] > 0
     plans_after_warmup = set(server.engine._plans)
-    assert (5, 2, "dense") in plans_after_warmup      # the (k, cr, backend)
+    assert (4, 5, 2, "dense") in plans_after_warmup   # (batch, k, cr, backend)
     tok, msk, loc = make_requests(rng, 4, server.engine.cfg)
     server.serve_all(tok, msk, loc)
     # serving created no new plan: the warm-up traced the real flush path

@@ -1,0 +1,294 @@
+"""IndexSnapshot lifecycle tier (core/snapshot.py, DESIGN.md §8).
+
+Covers the acceptance criteria of the artifact model:
+
+* ``save(dir)`` → ``load(dir)`` → query is BIT-IDENTICAL to the
+  in-memory snapshot on both backends (dense | pallas);
+* a schema-version mismatch raises a clear error instead of silently
+  reinterpreting the artifact;
+* publishes are atomic: the engine refuses a cfg-digest mismatch, a
+  server hot-swap under in-flight micro-batches pins every flush to
+  exactly one snapshot (engine call-spy, tests/test_server.py style),
+  and an open-loop run with a mid-run swap completes with zero
+  failed/torn requests.
+"""
+import asyncio
+import dataclasses
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import api
+from repro.configs import get_config
+from repro.core import engine as engine_lib
+from repro.core import index as il
+from repro.core import relevance
+from repro.core import server as server_lib
+from repro.core import snapshot as snapshot_lib
+from repro.core.snapshot import IndexSnapshot
+
+DIST_MAX = 1.414
+
+
+# ---------------------------------------------------------------------------
+# Fixture: a tiny built index (random params — the artifact layer is
+# quality-agnostic)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def snap():
+    cfg = dataclasses.replace(
+        get_config("list-dual-encoder"),
+        n_layers=2, d_model=32, n_heads=2, d_ff=64, vocab_size=512,
+        max_len=8, spatial_t=50, n_clusters=4, index_mlp_hidden=(16,))
+    rng = np.random.default_rng(7)
+    params = relevance.relevance_init(jax.random.PRNGKey(0), cfg)
+    n, c, cap = 96, cfg.n_clusters, 64        # headroom for inserts
+    obj_emb = rng.normal(size=(n, cfg.d_model)).astype(np.float32)
+    obj_loc = rng.uniform(size=(n, 2)).astype(np.float32)
+    norm = il.loc_normalizer(jnp.asarray(obj_loc))
+    iparams = il.index_init(jax.random.PRNGKey(5), cfg.d_model, c,
+                            hidden=(16,))
+    feats = il.build_features(jnp.asarray(obj_emb), jnp.asarray(obj_loc),
+                              norm)
+    top = np.asarray(il.assign_clusters(iparams, feats, top=2))
+    buf = il.build_cluster_buffers(top, obj_emb, obj_loc, n_clusters=c,
+                                   capacity=cap)
+    return IndexSnapshot.from_parts(cfg, params, iparams, norm, buf,
+                                    dist_max=DIST_MAX)
+
+
+def make_requests(rng, n, cfg):
+    tok = rng.integers(2, cfg.vocab_size, (n, cfg.max_len)).astype(np.int32)
+    tok[:, 0] = 1
+    msk = np.ones((n, cfg.max_len), bool)
+    loc = rng.uniform(size=(n, 2)).astype(np.float32)
+    return tok, msk, loc
+
+
+def grown(snapshot, rng, n_new=5, base=5000):
+    """The successor snapshot: n_new freshly routed objects, version + 1."""
+    d = snapshot.cfg.d_model
+    new_emb = jnp.asarray(rng.normal(size=(n_new, d)), jnp.float32)
+    new_loc = jnp.asarray(rng.uniform(size=(n_new, 2)), jnp.float32)
+    buf = il.insert_objects(snapshot.buffers, snapshot.index_params,
+                            snapshot.norm, new_emb, new_loc,
+                            np.arange(base, base + n_new))
+    return snapshot.with_buffers(buf)
+
+
+# ---------------------------------------------------------------------------
+# save → load → query bit-identity (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["dense", "pallas"])
+def test_roundtrip_bit_identical(snap, tmp_path, rng, backend):
+    tok, msk, loc = make_requests(rng, 10, snap.cfg)
+    path = api.save(snap, str(tmp_path))
+    assert os.path.exists(os.path.join(path, "manifest.json"))
+    loaded = api.load(str(tmp_path))
+
+    assert loaded.meta == snap.meta
+    assert loaded.cfg == snap.cfg
+    assert loaded.buffers["capacity"] == snap.buffers["capacity"]
+    assert loaded.buffers["n_spilled"] == snap.buffers["n_spilled"]
+
+    ids_m, sc_m = api.Searcher(snap, backend=backend).query(
+        tok, msk, loc, k=5, cr=2, batch=4)
+    ids_l, sc_l = api.Searcher(loaded, backend=backend).query(
+        tok, msk, loc, k=5, cr=2, batch=4)
+    assert np.array_equal(ids_m, ids_l)
+    assert np.array_equal(sc_m, sc_l)               # every score bit
+
+
+def test_save_load_preserves_version_and_params(snap, tmp_path, rng):
+    snap2 = grown(snap, rng)
+    assert snap2.meta.version == snap.meta.version + 1
+    assert snap2.meta.n_objects == snap.meta.n_objects + 5
+    assert snap2.meta.cfg_digest == snap.meta.cfg_digest
+    # the predecessor is untouched (immutability)
+    assert not (np.asarray(snap.buffers["ids"]) >= 5000).any()
+
+    api.save(snap2, str(tmp_path))
+    loaded = api.load(str(tmp_path))
+    assert loaded.meta.version == snap2.meta.version
+    for a, b in zip(jax.tree.leaves(loaded.rel_params),
+                    jax.tree.leaves(snap2.rel_params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_schema_version_mismatch_raises(snap, tmp_path):
+    path = api.save(snap, str(tmp_path))
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["meta"]["schema_version"] = snapshot_lib.SCHEMA_VERSION + 1
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ValueError, match="schema"):
+        api.load(str(tmp_path))
+
+
+def test_load_empty_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        api.load(str(tmp_path))
+
+
+def test_save_refuses_older_version_into_newer_dir(snap, tmp_path, rng):
+    """A directory holds one lineage: saving version 0 into a directory
+    already committed at version 1 would leave load() serving the old
+    artifact while the save looked successful — refused."""
+    snap2 = grown(snap, rng)
+    api.save(snap2, str(tmp_path))
+    with pytest.raises(ValueError, match="already holds"):
+        api.save(snap, str(tmp_path))
+    assert api.load(str(tmp_path)).meta.version == snap2.meta.version
+
+
+def test_publish_refuses_cfg_digest_mismatch(snap, rng):
+    eng = engine_lib.QueryEngine.from_snapshot(snap, backend="dense")
+    other_cfg = dataclasses.replace(snap.cfg, spatial_t=51)
+    impostor = IndexSnapshot.from_parts(
+        other_cfg, snap.rel_params, snap.index_params, snap.norm,
+        snap.buffers, dist_max=DIST_MAX)
+    with pytest.raises(ValueError, match="cfg_digest"):
+        eng.publish(impostor)
+    assert eng.snapshot is snap                     # swap did NOT happen
+
+
+def test_plans_survive_publish(snap, rng):
+    """Same buffer shapes ⇒ the traced (batch, k, cr, backend) plans are
+    reused across a publish — no rebind, no plan-cache reset."""
+    eng = engine_lib.QueryEngine.from_snapshot(snap, backend="dense")
+    tok, msk, loc = make_requests(rng, 4, snap.cfg)
+    eng.query(tok, msk, loc, k=5, cr=2, batch=4)
+    plans = dict(eng._plans)
+    assert set(plans) == {(4, 5, 2, "dense")}
+    eng.publish(grown(snap, rng))
+    ids, _ = eng.query(tok, msk, loc, k=5, cr=2, batch=4)
+    assert eng._plans == plans                      # same plan objects
+    assert ids.shape == (4, 5)
+
+
+# ---------------------------------------------------------------------------
+# Atomic hot-swap under live traffic
+# ---------------------------------------------------------------------------
+
+
+def spy_versions(server):
+    """Record the snapshot version each engine call was pinned to."""
+    seen = []
+    orig = server.engine.query
+
+    def spying(*a, **kw):
+        pinned = kw.get("snapshot") or server.engine.snapshot
+        seen.append(pinned.meta.version)
+        return orig(*a, **kw)
+
+    server.engine.query = spying
+    return seen
+
+
+def test_hot_swap_pins_inflight_flushes(snap, rng):
+    """Requests queued before a publish flush AFTER it: the whole batch
+    pins the new snapshot (one version per engine call — never a mix),
+    and every result is bit-identical to that snapshot's oracle."""
+    server = server_lib.StreamingServer(
+        engine_lib.QueryEngine.from_snapshot(snap, backend="dense"),
+        server_lib.ServerConfig(batch_size=4, max_delay_ms=60_000.0,
+                                k=5, cr=2, backend="dense"))
+    versions = spy_versions(server)
+    tok, msk, loc = make_requests(rng, 8, snap.cfg)
+    snap2 = grown(snap, rng)
+
+    async def go():
+        first = [asyncio.ensure_future(server.submit(tok[i], msk[i], loc[i]))
+                 for i in range(3)]                  # queued, not flushed
+        await asyncio.sleep(0)
+        assert server.n_pending == 3
+        server.publish(snap2)                        # swap mid-queue
+        rest = [asyncio.ensure_future(server.submit(tok[i], msk[i], loc[i]))
+                for i in range(3, 8)]                # 4th submit → size flush
+        await asyncio.sleep(0)
+        server.flush_now()
+        return await asyncio.gather(*first, *rest)
+
+    out = asyncio.run(go())
+    # every flush pinned exactly one snapshot — the published one
+    assert versions == [snap2.meta.version] * 2
+    oracle = engine_lib.QueryEngine.from_snapshot(snap2, backend="dense")
+    ids_d, sc_d = oracle.query(tok, msk, loc, k=5, cr=2, batch=4)
+    for i, (ids, sc) in enumerate(out):
+        assert np.array_equal(ids, ids_d[i])
+        assert np.array_equal(sc, sc_d[i])
+
+
+def test_open_loop_swap_zero_failed_or_torn(snap, rng):
+    """The acceptance criterion: a snapshot swap during an active
+    open-loop run completes with zero failed requests, and every answer
+    matches one snapshot's oracle bit-exactly (none torn across two)."""
+    server = server_lib.StreamingServer(
+        engine_lib.QueryEngine.from_snapshot(snap, backend="dense"),
+        server_lib.ServerConfig(batch_size=4, max_delay_ms=1.0,
+                                k=5, cr=2, backend="dense"))
+    n = 32
+    tok, msk, loc = make_requests(rng, n, snap.cfg)
+    requests = [(tok[i], msk[i], loc[i]) for i in range(n)]
+    snap2 = grown(snap, rng)
+
+    # deterministic mid-run swap: the spy publishes the successor right
+    # after the 2nd engine batch returns, while 24 requests are still
+    # queued or unsent — later flushes must pin the new snapshot
+    versions = []
+    orig = server.engine.query
+
+    def spy_then_swap(*a, **kw):
+        versions.append(kw["snapshot"].meta.version)
+        res = orig(*a, **kw)
+        if len(versions) == 2:
+            server.publish(snap2)
+        return res
+
+    server.engine.query = spy_then_swap
+    results = asyncio.run(server_lib.open_loop(server, requests, qps=4000.0))
+    assert len(results) == n                         # zero failed requests
+    assert server.engine.snapshot is snap2
+    assert set(versions) <= {snap.meta.version, snap2.meta.version}
+    o1 = engine_lib.QueryEngine.from_snapshot(snap, backend="dense")
+    o2 = engine_lib.QueryEngine.from_snapshot(snap2, backend="dense")
+    ids1, sc1 = o1.query(tok, msk, loc, k=5, cr=2, batch=4)
+    ids2, sc2 = o2.query(tok, msk, loc, k=5, cr=2, batch=4)
+    n_new = 0
+    for i, (ids, sc) in enumerate(results):
+        old = np.array_equal(ids, ids1[i]) and np.array_equal(sc, sc1[i])
+        new = np.array_equal(ids, ids2[i]) and np.array_equal(sc, sc2[i])
+        assert old or new, f"request {i} matches NEITHER snapshot (torn)"
+        n_new += int(new and not old)
+    # the swap actually landed mid-run: BOTH generations served batches
+    assert snap.meta.version in versions
+    assert snap2.meta.version in versions
+
+
+def test_server_insert_publishes_successor(snap, rng):
+    """StreamingServer.insert_objects returns the published successor and
+    the inserted ids are immediately retrievable; the old snapshot object
+    is untouched."""
+    server = server_lib.StreamingServer(
+        engine_lib.QueryEngine.from_snapshot(snap, backend="dense"),
+        server_lib.ServerConfig(batch_size=2, k=5, cr=4, backend="dense"))
+    d = snap.cfg.d_model
+    new_emb = jnp.asarray(rng.normal(size=(3, d)), jnp.float32)
+    new_loc = jnp.asarray(rng.uniform(size=(3, 2)), jnp.float32)
+    snap2 = server.insert_objects(new_emb, new_loc, np.arange(7000, 7003))
+    assert isinstance(snap2, IndexSnapshot)
+    assert server.engine.snapshot is snap2
+    assert snap2.meta.version == snap.meta.version + 1
+    assert server.stats.invalidations == 1
+    assert not (np.asarray(snap.buffers["ids"]) >= 7000).any()
+    assert (np.asarray(snap2.buffers["ids"]) >= 7000).sum() == 3
