@@ -4,14 +4,18 @@
 #                             interpret-mode decode sweeps (tens of
 #                             minutes on CPU)
 #   make snapshot-roundtrip - IndexSnapshot save->load->query bit-identity
-#                             self-test on both backends (seconds)
+#                             self-test on both backends x all precision
+#                             tiers (seconds)
 #   make bench-smoke        - CI-scale benchmark smoke (--fast settings)
 #   make bench-serving      - streaming-serving benchmark -> BENCH_serving.json
+#   make bench-kernels      - kernel roofline (backend x precision)
+#                             -> BENCH_kernels.json
 
 PY      := python
 PYPATH  := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}
 
-.PHONY: test test-slow snapshot-roundtrip bench-smoke bench-serving
+.PHONY: test test-slow snapshot-roundtrip bench-smoke bench-serving \
+        bench-kernels
 
 test:
 	$(PYPATH) $(PY) -m pytest -x -q -m "not slow"
@@ -23,7 +27,10 @@ snapshot-roundtrip:
 	$(PYPATH) $(PY) -m repro.api
 
 bench-smoke:
-	$(PYPATH) $(PY) -m benchmarks.run --fast --only Kernel_fusion,Table4_memory,Serving_stream
+	$(PYPATH) $(PY) -m benchmarks.run --fast --only Kernel_roofline,Table4_memory,Serving_stream
 
 bench-serving:
 	$(PYPATH) $(PY) -m benchmarks.bench_serving
+
+bench-kernels:
+	$(PYPATH) $(PY) -m benchmarks.bench_kernels

@@ -1,77 +1,176 @@
-"""Kernel-fusion microbenchmark (CPU interpret-mode = correctness-scale
-numbers; real speedups are measured via the dry-run roofline — see
-EXPERIMENTS.md §Perf). Reports the BYTES saved by fusing score+spatial+topk
-into one pass, which is hardware-independent."""
+"""Kernel roofline benchmark: the query-phase scan per backend × precision.
+
+LIST's query phase is a memory-bound corpus scan (DESIGN.md §4): the
+roofline is set by how many bytes of resident cluster buffer stream
+through HBM per query. The precision policy (DESIGN.md §9) attacks
+exactly that stream — bf16 halves it, int8 cuts it ~4× (symmetric
+per-row scalar quantization, dequantized in VMEM inside the kernel).
+
+This bench trains one retriever, requantizes its snapshot at every tier
+(``IndexSnapshot.with_precision`` — same routing, same loc/ids), and for
+each (backend × precision) measures
+
+* wall time per query batch (CPU interpret-mode = correctness-scale
+  numbers off-TPU; the bytes model below is the hardware-independent
+  part),
+* **estimated HBM bytes streamed per query** — the scanned slice is
+  ``cr·cap`` candidate rows, each costing the embedding row in the
+  tier's storage dtype, its f32 dequant scale (int8 only), the exact
+  f32 location pair, and the int32 id,
+* **recall@10 vs the f32 dense oracle** — routing is precision-
+  independent (it reads query features only), so this isolates pure
+  quantization-induced rank churn inside the scanned candidates.
+
+Emits ``BENCH_kernels.json`` (schema in README.md §Benchmarks) to start
+the kernel-level perf trajectory next to ``BENCH_serving.json``. The
+acceptance bar tracked by CI: int8 streams ≥3.5× fewer estimated bytes
+than f32 at recall@10 ≥ 0.99.
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels [--fast]
+"""
 from __future__ import annotations
+
+import json
+import time
 
 import numpy as np
 
 from benchmarks import common
+from repro import api
+from repro.core import engine as engine_lib
+from repro.core import index as index_lib
+
+OUT_PATH = "BENCH_kernels.json"
+
+K = 10
+CR = 2
+BATCH = 64
+REPEATS = 3
+D_MODEL = 128          # bench-scale d; large enough that the exact
+                       # loc/ids sidecar doesn't mask the emb-stream cut
+
+_EMB_BYTES = {"f32": 4, "bf16": 2, "int8": 1}
 
 
-def run():
+def bytes_per_query(cap: int, d: int, precision: str, *, cr: int = CR) -> int:
+    """Estimated HBM bytes the scan streams per query: cr·cap candidate
+    rows of (emb in storage dtype + f32 scale (int8 only) + exact f32
+    loc (2×4) + int32 id)."""
+    row = d * _EMB_BYTES[precision] + (4 if precision == "int8" else 0) \
+        + 2 * 4 + 4
+    return cr * cap * row
+
+
+def _recall_vs_oracle(ids, oracle_ids) -> float:
+    inter = [len(set(a.tolist()) & set(b.tolist())) / oracle_ids.shape[1]
+             for a, b in zip(ids, oracle_ids)]
+    return float(np.mean(inter))
+
+
+def _time_queries(searcher, corpus, te, backend):
+    ids, _ = searcher.query_corpus(corpus, te, k=K, cr=CR, batch=BATCH,
+                                   backend=backend)        # warm + result
+    t0 = time.perf_counter()
+    for _ in range(REPEATS):
+        searcher.query_corpus(corpus, te, k=K, cr=CR, batch=BATCH,
+                              backend=backend)
+    wall = (time.perf_counter() - t0) / REPEATS
+    return ids, wall
+
+
+def run(out_path: str = OUT_PATH):
+    r = common.get_retriever(tag=f"kernels-d{D_MODEL}",
+                             cfg_over={"d_model": D_MODEL})
+    corpus = common.get_corpus()
+    te, _ = common.test_split_positives(corpus)
+    snap = r.snapshot()
+    cap = snap.buffers["capacity"]
+    d = snap.cfg.d_model
+
+    oracle_searcher = api.Searcher(snap, backend="dense")
+    oracle_ids, oracle_wall = _time_queries(oracle_searcher, corpus, te,
+                                            "dense")
+
+    f32_bytes = bytes_per_query(cap, d, "f32")
+    sweep = {}
     rows = []
-    # traffic model for LIST's query inner loop, per (query-block, corpus):
-    # unfused: read emb (N·d·4) + write trel (N·4) + read trel + write srel
-    #          + read both + write st + topk read  ≈ N(d+7)·4 bytes
-    # fused:   read emb once, everything else stays in VMEM ≈ N(d+2)·4
-    n, d = 2_849_754, 768     # Geo-Glue scale
-    unfused = n * (d + 7) * 4
-    fused = n * (d + 2) * 4
-    rows.append(common.fmt_row("fused_topk_score(traffic-model)", {
-        "unfused_GB": unfused / 1e9,
-        "fused_GB": fused / 1e9,
-        "saved_pct": 100 * (1 - fused / unfused)}))
+    for precision in index_lib.PRECISIONS:
+        snap_p = snap.with_precision(precision)
+        est = bytes_per_query(cap, d, precision)
+        for backend in ("dense", "pallas"):
+            if (backend, precision) == ("dense", "f32"):
+                ids, wall = oracle_ids, oracle_wall    # it IS the oracle
+            else:
+                ids, wall = _time_queries(
+                    api.Searcher(snap_p, backend=backend), corpus, te,
+                    backend)
+            entry = {
+                "wall_ms_per_batch": wall / max(1, -(-len(te) // BATCH))
+                * 1e3,
+                "est_hbm_bytes_per_query": est,
+                "bytes_reduction_vs_f32": f32_bytes / est,
+                "recall_at_10_vs_f32_dense": _recall_vs_oracle(ids,
+                                                               oracle_ids),
+            }
+            sweep[f"{backend}@{precision}"] = entry
+            rows.append(common.fmt_row(
+                f"kernel_scan({backend}@{precision})", {
+                    "ms/batch": entry["wall_ms_per_batch"],
+                    "MBq": est / 1e6,
+                    "bytes_cut": entry["bytes_reduction_vs_f32"],
+                    "recall@10_vs_f32": entry["recall_at_10_vs_f32_dense"],
+                }))
 
-    # gather path vs gather-free routed kernel (engine backend="pallas"):
-    # per query batch B with cr routed clusters of capacity cap,
-    # N_cand = B·cr·cap candidate rows of d floats.
-    # gather:  read buffers (N·d·4) + write the (B, cr·cap, d) copy (N·d·4)
-    #          + kernel re-reads the copy (N·d·4)  = 3·N·d·4
-    # routed:  scalar-prefetched block-indexing streams each resident tile
-    #          exactly once                         = 1·N·d·4
-    bq, cr, cap = 1024, 2, 4096   # serving-shape example at Geo-Glue scale
-    n_cand = bq * cr * cap
-    gather = 3 * n_cand * d * 4
-    routed = 1 * n_cand * d * 4
-    rows.append(common.fmt_row("fused_topk_score_routed(traffic-model)", {
-        "gather_GB": gather / 1e9,
-        "routed_GB": routed / 1e9,
-        "saved_pct": 100 * (1 - routed / gather)}))
+    # hardware-independent traffic models (paper-scale d=768, Geo-Glue):
+    # fusing score+spatial+topk keeps everything but the emb stream in
+    # VMEM; the routed kernel reads the scanned slice once vs 3× for the
+    # gather path; int8 then shrinks that one stream itself
+    n_paper, d_paper = 2_849_754, 768
+    unfused = n_paper * (d_paper + 7) * 4
+    fused = n_paper * (d_paper + 2) * 4
+    traffic = {
+        "fused_vs_unfused_saved_pct": 100 * (1 - fused / unfused),
+        "routed_vs_gather_saved_pct": 100 * (1 - 1 / 3),
+        "int8_vs_f32_paper_scale_reduction":
+            bytes_per_query(1, d_paper, "f32", cr=1)
+            / bytes_per_query(1, d_paper, "int8", cr=1),
+    }
+    rows.append(common.fmt_row("traffic-model(paper-scale)", traffic))
 
-    # correctness-scale sanity: both kernel paths agree (interpret mode)
-    import jax.numpy as jnp
-    from repro.core import engine
-    from repro.kernels import ops
-    rng = np.random.default_rng(0)
-    b, c, cap_s, d_s, k, cr_s = 8, 8, 256, 64, 10, 2
-    q = jnp.asarray(rng.normal(size=(b, d_s)), jnp.float32)
-    ql = jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32)
-    w = jnp.asarray(rng.uniform(0.5, 1.5, size=(b, 2)), jnp.float32)
-    be = jnp.asarray(rng.normal(size=(c, cap_s, d_s)), jnp.float32)
-    bl = jnp.asarray(rng.uniform(size=(c, cap_s, 2)), jnp.float32)
-    bi = jnp.asarray(np.arange(c * cap_s).reshape(c, cap_s), jnp.int32)
-    tc = jnp.asarray(rng.integers(0, c, size=(b, cr_s)), jnp.int32)
-    wh = jnp.asarray(np.cumsum(rng.uniform(0, 0.01, size=100)), jnp.float32)
-    s_r, i_r = ops.fused_topk_score_routed(q, ql, w, tc, be, bl, bi, wh,
-                                           k=k, dist_max=1.414,
-                                           interpret=True)
-    s_d, i_d = engine.dense_routed_topk(q, ql, w, tc, be, bl, bi, wh,
-                                        k=k, dist_max=1.414)
-    ok = (np.allclose(np.asarray(s_r), np.asarray(s_d), atol=1e-4)
-          and (np.sort(np.asarray(i_r)) == np.sort(np.asarray(i_d))).all())
-    rows.append(common.fmt_row("fused_topk_score_routed(parity-smoke)", {
-        "b": b, "cr": cr_s, "cap": cap_s, "agrees_with_dense": float(ok)}))
-
-    # flash attention: O(S²) score materialization avoided
-    b, s, h, dh = 32, 32_768, 32, 128
-    naive = b * h * s * s * 4                # score matrix bytes (one layer)
-    flash = b * s * h * dh * 2 * 3           # just q,k,v streamed
-    rows.append(common.fmt_row("flash_attention(traffic-model)", {
-        "naive_score_GB": naive / 1e9,
-        "flash_GB": flash / 1e9}))
+    report = {
+        "bench": "kernels",
+        "config": {
+            "n_objects": corpus.cfg.n_objects,
+            "n_queries": int(len(te)),
+            "d_model": d, "capacity": int(cap), "k": K, "cr": CR,
+            "batch": BATCH,
+            "interpret_mode": bool(engine_lib.default_interpret()),
+        },
+        "sweep": sweep,
+        "traffic_model": traffic,
+        "acceptance": {
+            "int8_bytes_reduction_vs_f32":
+                sweep["pallas@int8"]["bytes_reduction_vs_f32"],
+            "int8_recall_at_10_vs_f32_dense": min(
+                sweep["pallas@int8"]["recall_at_10_vs_f32_dense"],
+                sweep["dense@int8"]["recall_at_10_vs_f32_dense"]),
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    rows.append(common.fmt_row("kernels(json)", {"path": out_path}))
     return rows
 
 
 if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI-scale training (same knobs as benchmarks.run)")
+    args = ap.parse_args()
+    if args.fast:
+        common.N_OBJECTS = 1500
+        common.N_QUERIES = 300
+        common.REL_STEPS = 120
+        common.IDX_STEPS = 250
     print("\n".join(run()))

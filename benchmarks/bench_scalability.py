@@ -67,7 +67,7 @@ def run():
         eng = api.Searcher(snap).engine
         qfn = eng.query_fn(k=10, cr=1, batch=64)
         args = (snap.rel_params, snap.index_params, snap.w_hat, snap.norm,
-                buf["emb"], buf["loc"], buf["ids"])
+                buf["emb"], buf["loc"], buf["ids"], buf["scale"])
         tok, msk = big.query_tokens(np.arange(64))
         qa = (jnp.asarray(tok), jnp.asarray(msk), jnp.asarray(q_loc))
         qfn(*args, *qa)  # warm

@@ -51,11 +51,15 @@ def get_corpus():
 
 def get_retriever(*, spatial_mode="step", weight_mode="mlp",
                   rel_steps=REL_STEPS, idx_steps=IDX_STEPS, tag=None,
-                  with_index=True):
+                  with_index=True, cfg_over=None):
+    """One trained retriever per ``tag`` (cached in-process). ``cfg_over``
+    overrides bench_cfg fields (pass a distinct ``tag`` with it, or the
+    cache would alias differently-configured retrievers)."""
     key = tag or f"{spatial_mode}-{weight_mode}"
     if key not in _STATE:
         corpus = get_corpus()
-        r = pl.ListRetriever(bench_cfg(), corpus, spatial_mode=spatial_mode,
+        r = pl.ListRetriever(bench_cfg(**(cfg_over or {})), corpus,
+                             spatial_mode=spatial_mode,
                              weight_mode=weight_mode)
         t0 = time.time()
         r.train_relevance(steps=rel_steps, batch=64, lr=1e-3, log_every=10**9)

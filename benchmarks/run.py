@@ -45,7 +45,7 @@ def main(argv=None):
         ("Fig8_neg_start", bench_neg_start.run),
         ("Table6_spatial_ablation", bench_ablation_spatial.run),
         ("Fig7_scalability", bench_scalability.run),
-        ("Kernel_fusion", bench_kernels.run),
+        ("Kernel_roofline", bench_kernels.run),
         ("Serving_stream", bench_serving.run),
     ]
     only = {s for s in args.only.split(",") if s}

@@ -19,6 +19,11 @@ Properties needed at 1000-node scale:
   lets a 512-chip job resume on 256 chips after losing a pod.
 - **Keep-k GC**: old steps are pruned after a successful commit.
 - Leaf files are plain ``.npy`` so any tool can inspect them.
+- **Dtype-faithful leaves**: the manifest records each leaf's TRUE dtype.
+  Extension dtypes the ``.npy`` format can't express (bfloat16 — numpy
+  round-trips it as an opaque void) are stored as a same-width unsigned
+  view and bit-exactly viewed back on restore, so quantized/bf16 index
+  buffers (core/snapshot.py precision tiers) survive save→load.
 
 On real multi-host fleets the per-leaf gather would be
 ``multihost_utils.process_allgather`` + per-host shard files; on this
@@ -36,9 +41,13 @@ import tempfile
 from typing import Any, Callable, Optional
 
 import jax
+import ml_dtypes  # noqa: F401  (registers bfloat16 with np.dtype)
 import numpy as np
 
 _STEP_RE = re.compile(r"^step_(\d{9})$")
+
+# extension dtypes .npy cannot round-trip → same-width storage view
+_VIEW_DTYPES = {"bfloat16": np.uint16}
 
 
 def _step_dir(directory: str, step: int, tmp=False) -> str:
@@ -72,7 +81,12 @@ def save(directory: str, step: int, tree: Any, *, meta: Optional[dict] = None,
     for i, leaf in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
         fn = f"arr_{i:05d}.npy"
-        np.save(os.path.join(tmp, fn), arr)
+        stored = arr
+        if str(arr.dtype) in _VIEW_DTYPES:
+            stored = arr.view(_VIEW_DTYPES[str(arr.dtype)])
+        np.save(os.path.join(tmp, fn), stored)
+        # manifest records the TRUE dtype; restore views back when the
+        # stored file's dtype differs
         manifest["leaves"].append(
             {"file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -150,6 +164,11 @@ def restore(directory: str, tree_like: Any, *, step: Optional[int] = None,
     leaves = []
     for i, (info, ref) in enumerate(zip(manifest["leaves"], leaves_ref)):
         arr = np.load(os.path.join(path, info["file"]))
+        want = info.get("dtype")
+        if want and str(arr.dtype) != want:
+            # leaf was stored under a view dtype (e.g. bf16 → uint16):
+            # bit-exact view back to the manifest's true dtype
+            arr = arr.view(np.dtype(want))
         if hasattr(ref, "shape") and tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(
                 f"leaf {i}: checkpoint shape {arr.shape} != expected "

@@ -15,9 +15,9 @@ Public surface
 :func:`make_query_fn`
     Build the jitted end-to-end query function for a model config.
     Returns ``fn(rel_params, index_params, w_hat, norm, buf_emb,
-    buf_loc, buf_ids, q_tokens, q_mask, q_loc) -> (ids, scores)``.
-    This is the function a serving process compiles once and calls on
-    every batch.
+    buf_loc, buf_ids, buf_scale, q_tokens, q_mask, q_loc) ->
+    (ids, scores)``. This is the function a serving process compiles
+    once and calls on every batch.
 
 :func:`score_candidates`
     The one dense scoring primitive: ST(q, o) over an explicit
@@ -32,7 +32,7 @@ Public surface
 :class:`QueryEngine`
     A stateless executor over an immutable ``IndexSnapshot``
     (core/snapshot.py, DESIGN.md §8) with a cache of traced plans keyed
-    ``(batch, k, cr, backend)`` — what the streaming server and the
+    ``(batch, k, cr, backend, precision)`` — what the streaming server and the
     retriever hold onto. Snapshot swaps go through
     :meth:`QueryEngine.publish` (atomic, digest-checked); plans survive
     them.
@@ -46,10 +46,12 @@ Public surface
 Inputs, throughout: ``q_tokens (B, L) int32`` hashed token ids with
 token 0 = padding, ``q_mask (B, L) bool`` True on real tokens,
 ``q_loc (B, 2) float32`` locations in the unit box, and the cluster
-buffers of ``index.build_cluster_buffers`` — ``buf_emb (c, cap, d)``,
+buffers of ``index.build_cluster_buffers`` — ``buf_emb (c, cap, d)``
+(f32, bf16, or int8 per the precision policy, DESIGN.md §9),
 ``buf_loc (c, cap, 2)``, ``buf_ids (c, cap)`` with ``-1`` marking
-padding slots. Outputs: ``ids (B, k)`` **global object ids** with
-``-1`` past-the-end, and ``scores (B, k)`` f32 descending.
+padding slots, ``buf_scale (c, cap)`` f32 dequant scales. Outputs:
+``ids (B, k)`` **global object ids** with ``-1`` past-the-end, and
+``scores (B, k)`` f32 descending.
 
 Backend selection
 -----------------
@@ -147,7 +149,7 @@ def resolve_cli_backend(backend: Optional[str], use_pallas: bool,
 
 
 def score_candidates(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
-                     w_hat, *, dist_max: float):
+                     w_hat, *, dist_max: float, cand_scale=None):
     """Score an explicit candidate set with the paper's serve-form ST.
 
     ST(q, o) = w_t·(q·o) + w_s·ŵ_s[⌊S_in·t⌋] (Eq. 5): textual relevance
@@ -168,11 +170,19 @@ def score_candidates(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
     * serving per-cluster:   q (c, Q, d) × cand (c, 1, cap, d)
     * baselines rerank:      q (d,)      × cand (N, d)
 
+    ``cand_scale (..., N)`` dequantizes int8 candidate embeddings
+    (DESIGN.md §9): ``emb = cand_emb.astype(f32) * scale[..., None]`` —
+    the same per-row symmetric scales the Pallas kernels apply in VMEM,
+    so dense-vs-pallas parity holds within every precision tier. bf16
+    candidates need no scale (the astype below is the whole dequant).
+
     This is the ONE definition of "the score" — if you are scoring
     (query, object) pairs anywhere, call this, don't re-derive it.
     """
-    trel = jnp.einsum("...d,...nd->...n", q_emb.astype(jnp.float32),
-                      cand_emb.astype(jnp.float32))
+    ce = cand_emb.astype(jnp.float32)
+    if cand_scale is not None:
+        ce = ce * cand_scale[..., None]
+    trel = jnp.einsum("...d,...nd->...n", q_emb.astype(jnp.float32), ce)
     d = jnp.linalg.norm(q_loc[..., None, :].astype(jnp.float32)
                         - cand_loc.astype(jnp.float32), axis=-1)
     s_in = 1.0 - jnp.clip(d / dist_max, 0.0, 1.0)
@@ -182,18 +192,22 @@ def score_candidates(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
 
 
 def dense_routed_topk(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc, buf_ids,
-                      w_hat, *, k: int, dist_max: float):
+                      w_hat, *, k: int, dist_max: float, buf_scale=None):
     """Dense reference for the routed query phase: gather + one top-k.
 
     Returns (scores (B, k), ids (B, k) global object ids, -1 past-the-end)
     — the exact contract of kernels/fused_topk_score_routed.
+    ``buf_scale (c, cap)`` dequantizes int8 buffers with the same per-row
+    scales the kernel applies in VMEM (parity within a precision tier).
     """
     b = q_emb.shape[0]
     cand_emb = buf_emb[top_c].reshape(b, -1, buf_emb.shape[-1])
     cand_loc = buf_loc[top_c].reshape(b, -1, 2)
     cand_ids = buf_ids[top_c].reshape(b, -1)
+    cand_scale = (None if buf_scale is None
+                  else buf_scale[top_c].reshape(b, -1))
     st = score_candidates(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
-                          w_hat, dist_max=dist_max)
+                          w_hat, dist_max=dist_max, cand_scale=cand_scale)
     scores, pos = jax.lax.top_k(st, k)
     ids = jnp.take_along_axis(cand_ids, pos, axis=1)
     return scores, ids
@@ -207,7 +221,7 @@ def dense_routed_topk(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc, buf_ids,
 def make_query_fn(cfg, *, cr: int = 1, k: int = 20, backend: str = "auto",
                   interpret: Optional[bool] = None,
                   dist_max: float = 1.4142, weight_mode: str = "mlp",
-                  block_n: int = 512):
+                  block_n: int = 512, precision: str = "f32"):
     """Build the jitted query-phase function (paper Algorithm 1).
 
     The returned function runs the whole serve path in one XLA program:
@@ -215,16 +229,19 @@ def make_query_fn(cfg, *, cr: int = 1, k: int = 20, backend: str = "auto",
     route to the top-``cr`` clusters (Eq. 11), score those clusters'
     resident objects, and keep the top ``k``.
 
-    signature: fn(rel_params, index_params, w_hat, norm,
-                  buf_emb, buf_loc, buf_ids, q_tokens, q_mask, q_loc)
+    signature: fn(rel_params, index_params, w_hat, norm, buf_emb,
+                  buf_loc, buf_ids, buf_scale, q_tokens, q_mask, q_loc)
                -> (ids (B, k) global object ids, scores (B, k))
 
     where ``rel_params`` / ``index_params`` are the trained relevance
     and cluster-classifier params, ``w_hat (t,)`` is the serve-form
     spatial step table (``spatial.extract_lookup``), ``norm`` the
     location normalizer bounds (``index.loc_normalizer``), and
-    ``buf_*`` the padded cluster buffers (module docstring). Rows past
-    the valid candidates come back as ``(-1, NEG_INF)`` pairs.
+    ``buf_*`` the padded cluster buffers (module docstring) —
+    ``buf_scale (c, cap)`` the per-row dequant scales of quantized
+    buffers (``index.quantize_rows``; all-ones, and unused, below
+    int8). Rows past the valid candidates come back as
+    ``(-1, NEG_INF)`` pairs.
 
     Keyword args: ``cr`` routed clusters per query; ``k`` results per
     query; ``backend``/``interpret`` per the module docstring
@@ -233,31 +250,40 @@ def make_query_fn(cfg, *, cr: int = 1, k: int = 20, backend: str = "auto",
     reference; ``"auto"`` picks per platform); ``dist_max`` the
     distance normalizer of Eq. 5 (√2 for the unit box);
     ``weight_mode`` how the (textual, spatial) mixing weights are
-    produced; ``block_n`` the Pallas streaming tile size.
+    produced; ``block_n`` the Pallas streaming tile size; ``precision``
+    the buffers' storage tier (DESIGN.md §9) — routing, SRel, and the
+    padding mask are identical across tiers, only TRel dequantizes
+    (in-kernel on pallas, via the same per-row scales on dense, so
+    backend parity holds *within* every tier).
 
     The result is a ``jax.jit`` function: every distinct batch shape
     triggers one compile, so serve fixed shapes via :func:`run_batched`
     (or hold a :class:`QueryEngine`, which does both for you).
     """
     backend, interpret = resolve_backend(backend, interpret)
+    if precision not in index_lib.PRECISIONS:
+        raise ValueError(f"precision must be one of {index_lib.PRECISIONS}, "
+                         f"got {precision!r}")
 
     def query_fn(rel_params, index_params, w_hat, norm, buf_emb, buf_loc,
-                 buf_ids, q_tokens, q_mask, q_loc):
+                 buf_ids, buf_scale, q_tokens, q_mask, q_loc):
         q_emb = relevance.encode_queries(rel_params, q_tokens, q_mask, cfg)
         feats = index_lib.build_features(q_emb, q_loc, norm)
         top_c, _ = index_lib.route_queries(index_params, feats, cr=cr)
         w = relevance.st_weights(rel_params, q_emb,
                                  weight_mode=weight_mode)          # (B, 2)
+        # f32/bf16 stream no scales: the astype upcast is the whole dequant
+        scale = buf_scale if precision == "int8" else None
         if backend == "pallas":
             from repro.kernels import fused_topk_score as fts
             score, ids = fts.fused_topk_score_routed(
                 q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids, w_hat,
-                k=k, dist_max=dist_max, block_n=block_n,
+                k=k, dist_max=dist_max, block_n=block_n, buf_scale=scale,
                 interpret=interpret)
         else:
             score, ids = dense_routed_topk(
                 q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids, w_hat,
-                k=k, dist_max=dist_max)
+                k=k, dist_max=dist_max, buf_scale=scale)
         return ids, score
 
     return jax.jit(query_fn)
@@ -299,19 +325,33 @@ def run_batched(fn: Callable, arrays: Sequence[np.ndarray], *, batch: int):
     retriever, the brute-force oracle, corpus embedding, and the
     streaming server's micro-batch flushes (core/server.py) — which is
     why a micro-batched result is bit-identical to an offline one.
+
+    Execution is pipelined: chunk ``i``'s outputs are materialized on
+    the host (``np.asarray`` — a device sync) only *after* chunk
+    ``i+1``'s work has been dispatched, so on an async backend the
+    device-to-host transfer of one chunk overlaps the next chunk's
+    compute instead of serializing the serving path.
     """
     n = arrays[0].shape[0]
     assert all(a.shape[0] == n for a in arrays), [a.shape for a in arrays]
     outs = None
+    pending = None            # chunk i's device results, not yet synced
     for s in range(0, n, batch):
         e = min(s + batch, n)
         chunk = [pad_leading(np.asarray(a[s:e]), batch) for a in arrays]
-        res = fn(*[jnp.asarray(c) for c in chunk])
+        res = fn(*[jnp.asarray(c) for c in chunk])      # dispatch, no sync
         res = res if isinstance(res, (tuple, list)) else (res,)
         if outs is None:
             outs = [[] for _ in res]
-        for o, r in zip(outs, res):
-            o.append(np.asarray(r)[: e - s])
+        if pending is not None:
+            p_res, p_rows = pending
+            for o, r in zip(outs, p_res):
+                o.append(np.asarray(r)[:p_rows])        # sync chunk i-1
+        pending = (res, e - s)
+    if pending is not None:
+        p_res, p_rows = pending
+        for o, r in zip(outs, p_res):
+            o.append(np.asarray(r)[:p_rows])
     cat = tuple(np.concatenate(o, axis=0) for o in outs)
     return cat if len(cat) > 1 else cat[0]
 
@@ -326,7 +366,7 @@ class QueryEngine:
 
     The engine owns exactly two things: a *reference* to the current
     snapshot (core/snapshot.py — all params/buffers live there, frozen)
-    and a cache of traced plans keyed ``(batch, k, cr, backend)``. Both
+    and a cache of traced plans keyed ``(batch, k, cr, backend, precision)``. Both
     the single-host path (``ListRetriever.query``) and the streaming
     server (core/server.py, DESIGN.md §7–§8) hold one; the distributed
     dispatch path shares :func:`score_candidates` instead (its data
@@ -435,19 +475,24 @@ class QueryEngine:
     # --- plans + execution ------------------------------------------------
 
     def query_fn(self, *, k: int, cr: int, backend: Optional[str] = None,
-                 batch: Optional[int] = None):
-        """The traced plan for ``(batch, k, cr, backend)``. Plans are
-        keyed on the batch shape too so a serving process can see its
-        full plan inventory in ``_plans``; they never rebind snapshot
-        state (everything is passed as jit arguments), so they survive
-        every publish."""
+                 batch: Optional[int] = None,
+                 precision: Optional[str] = None):
+        """The traced plan for ``(batch, k, cr, backend, precision)``.
+        Plans are keyed on the batch shape too so a serving process can
+        see its full plan inventory in ``_plans``; they never rebind
+        snapshot state (everything is passed as jit arguments), so they
+        survive every publish. ``precision`` defaults to the CURRENT
+        snapshot's tier — a publish that changes precision simply traces
+        (and caches) new plans under the new key."""
         backend = self.backend if backend is None else backend
-        key = (batch, k, cr, backend)
+        if precision is None:
+            precision = self._snapshot.meta.precision
+        key = (batch, k, cr, backend, precision)
         if key not in self._plans:
             self._plans[key] = make_query_fn(
                 self.cfg, cr=cr, k=k, backend=backend,
                 interpret=self.interpret, dist_max=self.dist_max,
-                weight_mode=self.weight_mode)
+                weight_mode=self.weight_mode, precision=precision)
         return self._plans[key]
 
     def query(self, q_tokens, q_mask, q_loc, *, k: int = 20, cr: int = 1,
@@ -458,13 +503,15 @@ class QueryEngine:
         Reads the snapshot reference exactly once (or serves an explicit
         ``snapshot`` — the server's flush path pins the one it started
         with), so every chunk of the batch scores one consistent index.
+        The plan is selected for the pinned snapshot's precision tier.
         """
         snap = self._snapshot if snapshot is None else snapshot
-        fn = self.query_fn(k=k, cr=cr, backend=backend, batch=batch)
+        fn = self.query_fn(k=k, cr=cr, backend=backend, batch=batch,
+                           precision=snap.meta.precision)
         buf = snap.buffers
         w_hat = snap.w_hat          # once per call, not per chunk
         return run_batched(
             lambda t, m, l: fn(snap.rel_params, snap.index_params,
                                w_hat, snap.norm, buf["emb"], buf["loc"],
-                               buf["ids"], t, m, l),
+                               buf["ids"], buf["scale"], t, m, l),
             [q_tokens, q_mask, q_loc], batch=batch)

@@ -12,17 +12,35 @@ lists, objects are packed into fixed-capacity padded **cluster buffers**
 static-shape gather + fused score. Overflowing objects spill to their
 next-best cluster (at most `spill` hops) — balance is learned (that is the
 point of the pseudo-label design), spill is the safety net.
+
+Precision policy (DESIGN.md §9): the query phase is memory-bound on
+streaming ``emb (c, cap, d)``, so the resident embeddings can be stored
+quantized — ``precision ∈ PRECISIONS``:
+
+* ``"f32"``  — exact float32 (the default and the parity oracle);
+* ``"bf16"`` — bfloat16 cast, 2× less HBM traffic, no scale needed;
+* ``"int8"`` — symmetric per-row scalar quantization, 4× less traffic:
+  ``q = clip(round(emb / scale), -127, 127)`` with
+  ``scale = max|emb_row| / 127`` kept in ``buffers["scale"] (c, cap)``
+  float32. Dequantization happens in VMEM inside the fused kernels
+  (kernels/fused_topk_score.py) so only compressed bytes cross HBM.
+
+``loc``/``ids`` always stay exact: spatial relevance and the padding
+mask are bit-identical across precision tiers — only TRel quantizes.
 """
 from __future__ import annotations
 
 import math
 from typing import Optional, Tuple
 
+import ml_dtypes
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.models import layers
+
+PRECISIONS = ("f32", "bf16", "int8")
 
 
 # ---------------------------------------------------------------------------
@@ -101,6 +119,66 @@ def mcl_loss(params, batch, *, balance_weight: float = 0.5):
 
 
 # ---------------------------------------------------------------------------
+# Precision policy: scalar quantization of resident embeddings
+# ---------------------------------------------------------------------------
+
+
+def quantize_rows(emb, precision: str):
+    """Quantize embedding rows ``(..., d)`` f32 → (stored, scale (...,) f32).
+
+    Symmetric per-row scalar quantization: each row's scale is
+    ``max|row| / 127`` (1.0 for all-zero rows, e.g. padding slots, so
+    dequant is a no-op there). ``"f32"``/``"bf16"`` need no scale and
+    return all-ones; the uniform return shape keeps the buffer schema
+    identical across tiers.
+    """
+    if precision not in PRECISIONS:
+        raise ValueError(f"precision must be one of {PRECISIONS}, "
+                         f"got {precision!r}")
+    emb = np.asarray(emb, np.float32)
+    scale = np.ones(emb.shape[:-1], np.float32)
+    if precision == "f32":
+        return emb, scale
+    if precision == "bf16":
+        return emb.astype(ml_dtypes.bfloat16), scale
+    amax = np.abs(emb).max(axis=-1)
+    scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    q = np.clip(np.rint(emb / scale[..., None]), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def dequantize_rows(emb, scale, precision: str) -> np.ndarray:
+    """Host-side inverse of :func:`quantize_rows` (lossy for int8)."""
+    emb = np.asarray(emb).astype(np.float32)
+    if precision == "int8":
+        emb = emb * np.asarray(scale, np.float32)[..., None]
+    return emb
+
+
+def quantize_buffers(buffers: dict, precision: str) -> dict:
+    """Derive a quantized copy of f32 cluster buffers (loc/ids untouched).
+
+    Requantization is only defined FROM the exact tier: quantizing an
+    already-quantized buffer would silently compound error, so any other
+    source precision raises. Returns a new dict; the input is unchanged.
+    """
+    src = buffers.get("precision", "f32")
+    if src == precision:
+        return dict(buffers)
+    if src != "f32":
+        raise ValueError(
+            f"quantize_buffers: can only requantize from 'f32' buffers, "
+            f"these are {src!r}; rebuild the index at f32 first")
+    q, scale = quantize_rows(np.asarray(buffers["emb"], np.float32),
+                             precision)
+    out = dict(buffers)
+    out["emb"] = jnp.asarray(q)
+    out["scale"] = jnp.asarray(scale)
+    out["precision"] = precision
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Indexing phase: partition objects into padded cluster buffers
 # ---------------------------------------------------------------------------
 
@@ -114,12 +192,15 @@ def assign_clusters(params, feats, *, top=1):
 
 
 def build_cluster_buffers(assign_top, emb, loc, *, n_clusters: int,
-                          capacity: Optional[int] = None, spill: int = 3):
+                          capacity: Optional[int] = None, spill: int = 3,
+                          precision: str = "f32"):
     """Pack objects into (c, cap) padded buffers (host-side, numpy).
 
     assign_top: (N, spill) preferred clusters per object, best first.
-    Returns dict with emb (c,cap,d), loc (c,cap,2), ids (c,cap) int32
-    (-1 = padding), counts (c,).
+    Returns dict with emb (c,cap,d) in ``precision``'s storage dtype,
+    loc (c,cap,2), ids (c,cap) int32 (-1 = padding), counts (c,),
+    scale (c,cap) f32 per-row dequant scales (all ones unless int8),
+    plus the host-side scalars capacity / n_spilled / precision.
     """
     assign_top = np.asarray(assign_top)
     emb = np.asarray(emb)
@@ -157,10 +238,12 @@ def build_cluster_buffers(assign_top, emb, loc, *, n_clusters: int,
     # zero out padding so fused scores on pads are harmless (masked anyway)
     buf_emb[~valid] = 0.0
     buf_loc[~valid] = 1e6
+    buf_emb, buf_scale = quantize_rows(buf_emb, precision)
     return {
         "emb": jnp.asarray(buf_emb), "loc": jnp.asarray(buf_loc),
         "ids": jnp.asarray(ids), "counts": jnp.asarray(counts),
-        "n_spilled": n_spilled, "capacity": capacity,
+        "scale": jnp.asarray(buf_scale),
+        "n_spilled": n_spilled, "capacity": capacity, "precision": precision,
     }
 
 
@@ -186,13 +269,19 @@ def insert_objects(buffers, params, norm, new_emb, new_loc, new_ids):
     (``id == -1``) rather than ``counts[ci]`` — after delete_objects a
     cluster has interior holes, and slot ``counts[ci]`` may hold a live
     object (regression: tests/test_index_mutation.py).
+
+    ``new_emb`` is always float32; quantized buffers (DESIGN.md §9)
+    quantize the new rows with their own per-row scales on the way in,
+    so an insert never changes the buffer's storage dtype.
     """
     feats = build_features(new_emb, new_loc, norm)
     cl = np.asarray(assign_clusters(params, feats))
     emb_np = {k: np.asarray(v).copy() for k, v in buffers.items()
-              if k in ("emb", "loc", "ids")}
+              if k in ("emb", "loc", "ids", "scale")}
     counts = np.asarray(buffers["counts"]).copy()
     cap = buffers["capacity"]
+    q_emb, q_scale = quantize_rows(np.asarray(new_emb, np.float32),
+                                   buffers.get("precision", "f32"))
     for j, ci in enumerate(cl):
         ci = int(ci)
         if counts[ci] >= cap:
@@ -207,7 +296,8 @@ def insert_objects(buffers, params, norm, new_emb, new_loc, new_ids):
                 f"insert_objects: cluster {ci} reports {counts[ci]} < "
                 f"cap={cap} but has no free slot; counts/ids inconsistent")
         slot = int(free[0])
-        emb_np["emb"][ci, slot] = np.asarray(new_emb[j])
+        emb_np["emb"][ci, slot] = q_emb[j]
+        emb_np["scale"][ci, slot] = q_scale[j]
         emb_np["loc"][ci, slot] = np.asarray(new_loc[j])
         emb_np["ids"][ci, slot] = int(new_ids[j])
         counts[ci] += 1
@@ -221,11 +311,14 @@ def delete_objects(buffers, del_ids):
     """Mark deleted ids as padding (lazy deletion, compaction on rebuild)."""
     ids = np.asarray(buffers["ids"]).copy()
     emb = np.asarray(buffers["emb"]).copy()
+    scale = np.asarray(buffers["scale"]).copy()
     mask = np.isin(ids, np.asarray(del_ids))
     ids[mask] = -1
     emb[mask] = 0.0
+    scale[mask] = 1.0          # padding rows dequantize as exact zeros
     out = dict(buffers)
     out["ids"] = jnp.asarray(ids)
     out["emb"] = jnp.asarray(emb)
+    out["scale"] = jnp.asarray(scale)
     out["counts"] = jnp.asarray((ids >= 0).sum(-1))
     return out

@@ -95,6 +95,7 @@ def cluster_dispatch_query(snapshot, q_tokens, q_mask, q_loc, *,
         snapshot.norm, buf["emb"], buf["loc"], buf["ids"],
         q_tokens, q_mask, q_loc, snapshot.cfg, k=k, cr=cr,
         dist_max=snapshot.meta.dist_max, capacity=capacity,
+        buf_scale=buf.get("scale"), precision=snapshot.meta.precision,
         return_dropped=return_dropped)
 
 
@@ -103,6 +104,7 @@ def dispatch_query_kernel(rel_params, index_params, w_hat, norm,
                           q_tokens, q_mask, q_loc, cfg, *,
                           k: int = 20, cr: int = 1, dist_max: float = 1.0,
                           capacity: Optional[int] = None,
+                          buf_scale=None, precision: str = "f32",
                           return_dropped: bool = False):
     """Explicit-array form of :func:`cluster_dispatch_query` — the body
     that launch/steps.py stages into sharded meshes. Returns
@@ -111,9 +113,23 @@ def dispatch_query_kernel(rel_params, index_params, w_hat, norm,
 
     buf_emb (c, cap, d) / buf_loc (c, cap, 2) / buf_ids (c, cap): the padded
     cluster buffers, sharded cluster-major ("all") on the production mesh.
+    Quantized buffers (DESIGN.md §9) pass ``precision`` and, for int8,
+    the per-row ``buf_scale (c, cap)`` — dequantization rides the shared
+    ``engine.score_candidates`` primitive, so dispatch and gather agree
+    per tier. The scale shard is cluster-major like the buffers.
     """
     b = q_tokens.shape[0]
     c, cap, d = buf_emb.shape
+    # int8 codes scored unscaled would rank rows on raw code magnitude —
+    # refuse loudly instead of silently corrupting top-k results
+    if buf_emb.dtype == jnp.int8 and (precision != "int8"
+                                      or buf_scale is None):
+        raise ValueError(
+            "dispatch_query_kernel: buf_emb is int8 but "
+            f"precision={precision!r} / buf_scale="
+            f"{'set' if buf_scale is not None else 'None'}; quantized "
+            "buffers require precision='int8' and their per-row scales "
+            "(see DESIGN.md §9)")
     qcap = capacity or query_capacity(b, c, cr)
 
     # 1. encode + route (replicated tiny MLP)
@@ -134,9 +150,11 @@ def dispatch_query_kernel(rel_params, index_params, w_hat, norm,
 
     # 3. fused score per cluster — each chip against its resident shard;
     # the engine's score_candidates broadcasts (c, Q, d) × (c, 1, cap, d)
+    cand_scale = (buf_scale[:, None]
+                  if precision == "int8" and buf_scale is not None else None)
     st = engine_lib.score_candidates(
         qe, ql, qw, buf_emb[:, None], buf_loc[:, None], buf_ids[:, None],
-        w_hat, dist_max=dist_max)
+        w_hat, dist_max=dist_max, cand_scale=cand_scale)
     st = constrain(st, "all", None, None)
 
     # 4. per-cluster top-k, then undispatch + merge the cr candidate lists

@@ -18,7 +18,9 @@ that
   changes, ``meta.cfg_digest`` pins the model config the params were
   trained under (an engine refuses to swap in a snapshot built for a
   different config), ``meta.version`` keys result-cache entries in the
-  streaming server.
+  streaming server, and ``meta.precision`` names the buffers' storage
+  tier (DESIGN.md §9) — an unknown tier is refused before any array is
+  read.
 
 The snapshot is a frozen dataclass; treat every array inside it as
 read-only. Derivations that would mutate (insert/delete) go through
@@ -52,12 +54,17 @@ import jax.numpy as jnp
 
 from repro.checkpoint import ckpt
 from repro.configs.base import DualEncoderConfig
+from repro.core import index as index_lib
 from repro.core import spatial as sp
 
-SCHEMA_VERSION = 1
+# v2: precision-aware buffers — ``buffers["scale"]`` joined the leaf
+# arrays and ``meta.precision`` the identity block (DESIGN.md §9). A v1
+# artifact has no scale leaf and no precision field, so loads across the
+# bump fail the schema gate (clear ValueError) instead of misreading.
+SCHEMA_VERSION = 2
 
 # buffer keys that are arrays (saved as leaves) vs host-side ints (meta)
-_BUFFER_ARRAYS = ("emb", "loc", "ids", "counts")
+_BUFFER_ARRAYS = ("emb", "loc", "ids", "counts", "scale")
 _BUFFER_SCALARS = ("capacity", "n_spilled")
 
 
@@ -131,6 +138,9 @@ class SnapshotMeta:
     dist_max        Eq. 5 distance normalizer the params trained under
     spatial_mode    "step" | "exp" | "linear" (how w_hat derives)
     weight_mode     "mlp" | "fixed" (how the ST mixing weights derive)
+    precision       "f32" | "bf16" | "int8" — the buffers' storage tier
+                    (DESIGN.md §9); load refuses an unknown tier BEFORE
+                    reading any array
     """
     schema_version: int
     cfg_digest: str
@@ -140,6 +150,7 @@ class SnapshotMeta:
     dist_max: float
     spatial_mode: str = "step"
     weight_mode: str = "mlp"
+    precision: str = "f32"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -175,12 +186,18 @@ class IndexSnapshot:
         if missing:
             raise ValueError(f"buffers missing keys {missing}; expected the "
                              f"dict of index.build_cluster_buffers")
+        precision = buffers.get("precision", "f32")
+        if precision not in index_lib.PRECISIONS:
+            raise ValueError(f"buffers carry unknown precision "
+                             f"{precision!r}; expected one of "
+                             f"{index_lib.PRECISIONS}")
         meta = SnapshotMeta(
             schema_version=SCHEMA_VERSION, cfg_digest=cfg_digest(cfg),
             n_objects=int(np.asarray(buffers["counts"]).sum()),
             built_at=time.time() if built_at is None else float(built_at),
             version=int(version), dist_max=float(dist_max),
-            spatial_mode=spatial_mode, weight_mode=weight_mode)
+            spatial_mode=spatial_mode, weight_mode=weight_mode,
+            precision=precision)
         return cls(cfg=cfg, rel_params=rel_params, index_params=index_params,
                    norm=norm, buffers=buffers, meta=meta)
 
@@ -188,10 +205,32 @@ class IndexSnapshot:
         """Derive the successor snapshot: same params, new buffers,
         ``meta.version + 1``. This is the ONLY sanctioned way corpus
         mutations become servable — build new buffers (index.insert_objects
-        / delete_objects), derive, publish."""
+        / delete_objects), derive, publish. The precision tier is part of
+        the snapshot's identity: a derivation must preserve it (switch
+        tiers through :meth:`with_precision` instead)."""
+        if buffers.get("precision", "f32") != self.meta.precision:
+            raise ValueError(
+                f"with_buffers: buffers are "
+                f"{buffers.get('precision', 'f32')!r} but this snapshot is "
+                f"{self.meta.precision!r}; use with_precision to change "
+                f"tiers")
         meta = dataclasses.replace(
             self.meta, version=self.meta.version + 1, built_at=time.time(),
             n_objects=int(np.asarray(buffers["counts"]).sum()))
+        return dataclasses.replace(self, buffers=buffers, meta=meta)
+
+    def with_precision(self, precision: str) -> "IndexSnapshot":
+        """Derive the same index at another precision tier (DESIGN.md §9):
+        requantized buffers (``index.quantize_buffers`` — loc/ids/counts
+        untouched, so routing, SRel, and padding stay bit-identical),
+        ``meta.precision`` swapped, ``meta.version + 1``. Only defined
+        FROM the exact f32 tier; returns ``self`` when already there."""
+        if precision == self.meta.precision:
+            return self
+        buffers = index_lib.quantize_buffers(self.buffers, precision)
+        meta = dataclasses.replace(
+            self.meta, precision=precision, version=self.meta.version + 1,
+            built_at=time.time())
         return dataclasses.replace(self, buffers=buffers, meta=meta)
 
     # --- derived serve-form state -----------------------------------------
@@ -261,6 +300,15 @@ class IndexSnapshot:
                 f"schema_version={got!r}, this build reads "
                 f"{SCHEMA_VERSION}; re-build the index (repro.api.build) "
                 f"or load with the matching code version")
+        precision = meta.get("precision")
+        if precision not in index_lib.PRECISIONS:
+            # gate BEFORE restore: an unknown tier means the arrays would
+            # be misinterpreted (e.g. int8 payload scored as raw floats)
+            raise ValueError(
+                f"snapshot precision mismatch in {directory}: artifact "
+                f"declares precision={precision!r}, this build understands "
+                f"{index_lib.PRECISIONS}; upgrade the code or re-build "
+                f"the index at a supported tier")
         cfg = _cfg_from_dict(meta["cfg"])
         if cfg_digest(cfg) != meta["cfg_digest"]:
             raise ValueError(
@@ -277,12 +325,13 @@ class IndexSnapshot:
         buffers = dict(tree["buffers"])
         for k in _BUFFER_SCALARS:
             buffers[k] = int(meta[k])
+        buffers["precision"] = precision
         sm = SnapshotMeta(
             schema_version=meta["schema_version"],
             cfg_digest=meta["cfg_digest"], n_objects=meta["n_objects"],
             built_at=meta["built_at"], version=meta["version"],
             dist_max=meta["dist_max"], spatial_mode=meta["spatial_mode"],
-            weight_mode=meta["weight_mode"])
+            weight_mode=meta["weight_mode"], precision=precision)
         return cls(cfg=cfg, rel_params=tree["rel_params"],
                    index_params=tree["index_params"], norm=tree["norm"],
                    buffers=buffers, meta=sm)

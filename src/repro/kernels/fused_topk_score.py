@@ -31,6 +31,20 @@ Two variants live here:
   lists merge into one running top-k in VMEM instead of a second host-side
   top-k. Output ids are global object ids (taken from ``buf_ids`` in-kernel)
   so the caller needs no ``take_along_axis`` either.
+
+Precision policy (DESIGN.md §9): the roofline is set by streaming the
+candidate embeddings, so both kernels grow **dequant-in-kernel** variants
+for quantized resident buffers. When a per-row scale array is passed
+(``cand_scale`` / ``buf_scale``, int8 buffers), the compressed tile is
+DMA'd to VMEM, upcast to f32 and multiplied by its scales *there*, and
+then hits the same MXU matmul and running top-k — only compressed bytes
+ever cross HBM (4× less traffic than f32 for int8). bf16 buffers need no
+scale: the existing ``astype(f32)`` upcast handles them, halving traffic.
+Locations, ids, and the padding mask always stay exact, so SRel and the
+pad semantics are bit-identical across precision tiers. On a real TPU the
+int8 min tile is (32, 128), so pick ``block_n`` a multiple of 32 and keep
+``d`` a multiple of 128 for compiled int8 runs (interpret mode doesn't
+care).
 """
 from __future__ import annotations
 
@@ -44,9 +58,19 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, loc_ref, w_ref, wh_ref, ce_ref, cl_ref, ci_ref,
-            os_ref, oi_ref, *, k: int, t: int, dist_max: float,
-            block_n: int):
+def _largest_divisor_tile(size: int, requested: int) -> int:
+    """The largest tile ≤ ``requested`` that divides ``size`` exactly."""
+    tile = min(requested, size)
+    if size % tile:
+        tile = next(t for t in range(tile, 0, -1) if size % t == 0)
+    return tile
+
+
+def _gather_body(q_ref, loc_ref, w_ref, wh_ref, ce, cl_ref, ci_ref,
+                 os_ref, oi_ref, *, k: int, t: int, dist_max: float,
+                 block_n: int):
+    """Score one (block_m, block_n) candidate tile (``ce`` already f32,
+    dequantized by the caller) and fold it into the running top-k."""
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -55,7 +79,6 @@ def _kernel(q_ref, loc_ref, w_ref, wh_ref, ce_ref, cl_ref, ci_ref,
         oi_ref[...] = jnp.full_like(oi_ref, -1)
 
     q = q_ref[...].astype(jnp.float32)            # (bm, d)
-    ce = ce_ref[...].astype(jnp.float32)          # (bm, bn, d)
     trel = jax.lax.dot_general(
         q, ce, (((1,), (2,)), ((0,), (0,))),
         preferred_element_type=jnp.float32)        # (bm, bn)
@@ -83,24 +106,52 @@ def _kernel(q_ref, loc_ref, w_ref, wh_ref, ce_ref, cl_ref, ci_ref,
     oi_ref[...] = jnp.take_along_axis(cat_i, pos, axis=1)
 
 
+def _kernel(q_ref, loc_ref, w_ref, wh_ref, ce_ref, cl_ref, ci_ref,
+            os_ref, oi_ref, **kw):
+    # f32/bf16 tile: the astype is the whole upcast, no scales stream
+    _gather_body(q_ref, loc_ref, w_ref, wh_ref,
+                 ce_ref[...].astype(jnp.float32),
+                 cl_ref, ci_ref, os_ref, oi_ref, **kw)
+
+
+def _kernel_dequant(q_ref, loc_ref, w_ref, wh_ref, ce_ref, cs_ref, cl_ref,
+                    ci_ref, os_ref, oi_ref, **kw):
+    # int8 tile: upcast + per-row scale in VMEM, then the same MXU matmul
+    ce = ce_ref[...].astype(jnp.float32) * cs_ref[...][..., None]
+    _gather_body(q_ref, loc_ref, w_ref, wh_ref, ce,
+                 cl_ref, ci_ref, os_ref, oi_ref, **kw)
+
+
 def fused_topk_score(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
                      w_hat, *, k: int, dist_max: float,
                      block_m: int = 8, block_n: int = 512,
-                     interpret: bool = True):
+                     cand_scale=None, interpret: bool = True):
     """Returns (scores (B, k) f32, local_idx (B, k) i32).
 
-    q_emb (B, d); q_loc (B, 2); w_st (B, 2); cand_emb (B, N, d);
-    cand_loc (B, N, 2); cand_ids (B, N) int32 (-1 pad); w_hat (t,) f32.
+    q_emb (B, d); q_loc (B, 2); w_st (B, 2); cand_emb (B, N, d) in f32,
+    bf16, or int8; cand_loc (B, N, 2); cand_ids (B, N) int32 (-1 pad);
+    w_hat (t,) f32; cand_scale (B, N) f32 per-row dequant scales
+    (required for int8 candidates, omitted otherwise — when given, the
+    tile is dequantized in VMEM before scoring).
     """
     b, n, d = cand_emb.shape
     t = w_hat.shape[0]
-    block_m = min(block_m, b)
-    block_n = min(block_n, n)
-    assert b % block_m == 0 and n % block_n == 0, (b, n, block_m, block_n)
+    # both tile sizes clamp to the largest exact divisor — an odd batch
+    # (b % block_m != 0) must never crash the serve path
+    block_m = _largest_divisor_tile(b, block_m)
+    block_n = _largest_divisor_tile(n, block_n)
     grid = (b // block_m, n // block_n)
 
-    kern = functools.partial(_kernel, k=k, t=t, dist_max=float(dist_max),
+    dequant = cand_scale is not None
+    kern = functools.partial(_kernel_dequant if dequant else _kernel,
+                             k=k, t=t, dist_max=float(dist_max),
                              block_n=block_n)
+    emb_specs = [pl.BlockSpec((block_m, block_n, d), lambda i, j: (i, j, 0))]
+    emb_args = [cand_emb]
+    if dequant:
+        emb_specs.append(pl.BlockSpec((block_m, block_n),
+                                      lambda i, j: (i, j)))
+        emb_args.append(cand_scale)
     out_shape = [
         jax.ShapeDtypeStruct((b, k), jnp.float32),
         jax.ShapeDtypeStruct((b, k), jnp.int32),
@@ -113,7 +164,7 @@ def fused_topk_score(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
             pl.BlockSpec((block_m, 2), lambda i, j: (i, 0)),       # q_loc
             pl.BlockSpec((block_m, 2), lambda i, j: (i, 0)),       # w_st
             pl.BlockSpec((t,), lambda i, j: (0,)),                 # w_hat
-            pl.BlockSpec((block_m, block_n, d), lambda i, j: (i, j, 0)),
+            *emb_specs,                                # cand_emb [, scale]
             pl.BlockSpec((block_m, block_n, 2), lambda i, j: (i, j, 0)),
             pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
         ],
@@ -123,7 +174,7 @@ def fused_topk_score(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
         ],
         out_shape=out_shape,
         interpret=interpret,
-    )(q_emb, q_loc, w_st, w_hat, cand_emb, cand_loc, cand_ids)
+    )(q_emb, q_loc, w_st, w_hat, *emb_args, cand_loc, cand_ids)
 
 
 # ---------------------------------------------------------------------------
@@ -131,9 +182,10 @@ def fused_topk_score(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
 # ---------------------------------------------------------------------------
 
 
-def _routed_kernel(tc_ref, q_ref, loc_ref, w_ref, wh_ref,
-                   be_ref, bl_ref, bi_ref, os_ref, oi_ref, *,
-                   k: int, t: int, dist_max: float):
+def _routed_body(q_ref, loc_ref, w_ref, wh_ref, ce, bl_ref, bi_ref,
+                 os_ref, oi_ref, *, k: int, t: int, dist_max: float):
+    """Score one routed (block_n, d) resident tile (``ce`` already f32,
+    dequantized by the caller) against its query's running top-k."""
     r = pl.program_id(1)
     j = pl.program_id(2)
 
@@ -143,7 +195,6 @@ def _routed_kernel(tc_ref, q_ref, loc_ref, w_ref, wh_ref,
         oi_ref[...] = jnp.full_like(oi_ref, -1)
 
     q = q_ref[...].astype(jnp.float32)              # (1, d)
-    ce = be_ref[...][0].astype(jnp.float32)         # (bn, d)
     trel = jax.lax.dot_general(
         q, ce, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)          # (1, bn)
@@ -168,14 +219,35 @@ def _routed_kernel(tc_ref, q_ref, loc_ref, w_ref, wh_ref,
     oi_ref[...] = jnp.take_along_axis(cat_i, pos, axis=1)
 
 
+def _routed_kernel(tc_ref, q_ref, loc_ref, w_ref, wh_ref,
+                   be_ref, bl_ref, bi_ref, os_ref, oi_ref, **kw):
+    _routed_body(q_ref, loc_ref, w_ref, wh_ref,
+                 be_ref[...][0].astype(jnp.float32),
+                 bl_ref, bi_ref, os_ref, oi_ref, **kw)
+
+
+def _routed_kernel_dequant(tc_ref, q_ref, loc_ref, w_ref, wh_ref,
+                           be_ref, bs_ref, bl_ref, bi_ref, os_ref, oi_ref,
+                           **kw):
+    # int8 resident tile → upcast + per-row scale in VMEM; only the
+    # compressed bytes (plus a (block_n,) f32 scale strip) crossed HBM
+    ce = be_ref[...][0].astype(jnp.float32) * bs_ref[...][0][:, None]
+    _routed_body(q_ref, loc_ref, w_ref, wh_ref, ce,
+                 bl_ref, bi_ref, os_ref, oi_ref, **kw)
+
+
 def fused_topk_score_routed(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc,
                             buf_ids, w_hat, *, k: int, dist_max: float,
-                            block_n: int = 512, interpret: bool = True):
+                            block_n: int = 512, buf_scale=None,
+                            interpret: bool = True):
     """Gather-free fused score + top-k over routed cluster buffers.
 
     q_emb (B, d); q_loc (B, 2); w_st (B, 2); top_c (B, cr) int32 routed
-    cluster ids (scalar-prefetched); buf_emb (c, cap, d); buf_loc
-    (c, cap, 2); buf_ids (c, cap) int32 (-1 pad); w_hat (t,) f32.
+    cluster ids (scalar-prefetched); buf_emb (c, cap, d) in f32, bf16,
+    or int8; buf_loc (c, cap, 2); buf_ids (c, cap) int32 (-1 pad);
+    w_hat (t,) f32; buf_scale (c, cap) f32 per-row dequant scales
+    (required for int8 buffers, omitted otherwise — when given, each
+    resident tile is dequantized in VMEM before scoring).
 
     Returns (scores (B, k) f32, ids (B, k) i32 **global object ids**,
     -1 where fewer than k valid candidates exist). The ``(B, cr·cap, d)``
@@ -190,9 +262,7 @@ def fused_topk_score_routed(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc,
     # tile size must divide cap: take the largest divisor ≤ block_n (NOT
     # the gcd, which collapses to tiny tiles for e.g. cap=1000/block=512)
     requested = min(block_n, cap)
-    block_n = requested
-    if cap % block_n:
-        block_n = next(d_ for d_ in range(block_n, 0, -1) if cap % d_ == 0)
+    block_n = _largest_divisor_tile(cap, requested)
     if block_n < max(1, requested // 4):
         import warnings
         warnings.warn(
@@ -203,6 +273,14 @@ def fused_topk_score_routed(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc,
             f"multiples of 128)", stacklevel=2)
     grid = (b, cr, cap // block_n)
 
+    dequant = buf_scale is not None
+    emb_specs = [pl.BlockSpec((1, block_n, d),
+                              lambda b_, r, j, tc: (tc[b_, r], j, 0))]
+    emb_args = [buf_emb]
+    if dequant:
+        emb_specs.append(pl.BlockSpec((1, block_n),
+                                      lambda b_, r, j, tc: (tc[b_, r], j)))
+        emb_args.append(buf_scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
@@ -211,8 +289,7 @@ def fused_topk_score_routed(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc,
             pl.BlockSpec((1, 2), lambda b_, r, j, tc: (b_, 0)),     # q_loc
             pl.BlockSpec((1, 2), lambda b_, r, j, tc: (b_, 0)),     # w_st
             pl.BlockSpec((t,), lambda b_, r, j, tc: (0,)),          # w_hat
-            pl.BlockSpec((1, block_n, d),
-                         lambda b_, r, j, tc: (tc[b_, r], j, 0)),   # buf_emb
+            *emb_specs,                                 # buf_emb [, scale]
             pl.BlockSpec((1, block_n, 2),
                          lambda b_, r, j, tc: (tc[b_, r], j, 0)),   # buf_loc
             pl.BlockSpec((1, block_n),
@@ -223,8 +300,9 @@ def fused_topk_score_routed(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc,
             pl.BlockSpec((1, k), lambda b_, r, j, tc: (b_, 0)),     # ids
         ],
     )
-    kern = functools.partial(_routed_kernel, k=k, t=t,
-                             dist_max=float(dist_max))
+    kern = functools.partial(
+        _routed_kernel_dequant if dequant else _routed_kernel,
+        k=k, t=t, dist_max=float(dist_max))
     out_shape = [
         jax.ShapeDtypeStruct((b, k), jnp.float32),
         jax.ShapeDtypeStruct((b, k), jnp.int32),
@@ -235,4 +313,4 @@ def fused_topk_score_routed(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc,
         out_shape=out_shape,
         interpret=interpret,
     )(top_c.astype(jnp.int32), q_emb, q_loc, w_st, w_hat,
-      buf_emb, buf_loc, buf_ids)
+      *emb_args, buf_loc, buf_ids)

@@ -29,24 +29,28 @@ def _interpret_default() -> bool:
 @functools.partial(jax.jit, static_argnames=("k", "dist_max", "block_m",
                                              "block_n", "interpret"))
 def fused_topk_score(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids, w_hat,
-                     *, k, dist_max, block_m=8, block_n=512, interpret=None):
+                     *, k, dist_max, block_m=8, block_n=512, cand_scale=None,
+                     interpret=None):
     interpret = _interpret_default() if interpret is None else interpret
     return _fts.fused_topk_score(
         q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids, w_hat, k=k,
         dist_max=dist_max, block_m=block_m, block_n=block_n,
-        interpret=interpret)
+        cand_scale=cand_scale, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "dist_max", "block_n",
                                              "interpret"))
 def fused_topk_score_routed(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc,
                             buf_ids, w_hat, *, k, dist_max, block_n=512,
-                            interpret=None):
-    """Gather-free query-phase kernel: scalar-prefetched cluster routing."""
+                            buf_scale=None, interpret=None):
+    """Gather-free query-phase kernel: scalar-prefetched cluster routing.
+    ``buf_scale (c, cap)`` enables the dequant-in-kernel path for int8
+    resident buffers (DESIGN.md §9)."""
     interpret = _interpret_default() if interpret is None else interpret
     return _fts.fused_topk_score_routed(
         q_emb, q_loc, w_st, top_c, buf_emb, buf_loc, buf_ids, w_hat, k=k,
-        dist_max=dist_max, block_n=block_n, interpret=interpret)
+        dist_max=dist_max, block_n=block_n, buf_scale=buf_scale,
+        interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",

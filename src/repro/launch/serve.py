@@ -11,7 +11,10 @@ concurrency) load generation.
 ``--snapshot-dir DIR`` makes the artifact durable: the first run trains,
 builds, and ``api.save``s; later runs ``api.load`` the committed
 snapshot and skip training entirely (bit-identical serving, per
-tests/test_snapshot.py).
+tests/test_snapshot.py). ``--precision {f32,bf16,int8}`` picks the
+resident-buffer storage tier (DESIGN.md §9): int8 quantizes the scanned
+embeddings ~4× smaller with in-kernel dequant; a loaded artifact must
+already be at the requested tier.
 
 Reports two layers of metrics:
 
@@ -78,6 +81,12 @@ def main(argv=None):
                          "(warns and forwards)")
     ap.add_argument("--backend", default=None,
                     choices=["pallas", "dense", "auto"])
+    ap.add_argument("--precision", default=None,
+                    choices=list(index_lib.PRECISIONS),
+                    help="resident-buffer storage tier (DESIGN.md §9): "
+                         "int8 streams ~4x fewer HBM bytes in the scan "
+                         "kernel; default f32 on build, the artifact's "
+                         "own tier on --snapshot-dir load")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--snapshot-dir", default=None,
                     help="durable IndexSnapshot artifact dir: load it when "
@@ -134,15 +143,22 @@ def main(argv=None):
                 f"{snap.meta.cfg_digest} != {cfg_digest(cfg)}); rerun "
                 f"with the original --objects/--clusters/... flags or "
                 f"point at a fresh directory to retrain")
+        if args.precision and snap.meta.precision != args.precision:
+            raise SystemExit(
+                f"--snapshot-dir {args.snapshot_dir}: artifact is "
+                f"precision={snap.meta.precision!r} but --precision "
+                f"{args.precision} was requested; re-build, or requantize "
+                f"an f32 artifact via IndexSnapshot.with_precision")
         print(f"== loaded snapshot v{snap.meta.version} "
-              f"({snap.meta.n_objects} objects) from {args.snapshot_dir} "
+              f"({snap.meta.n_objects} objects, {snap.meta.precision}) "
+              f"from {args.snapshot_dir} "
               f"in {time.perf_counter() - t0:.2f}s — skipping training ==")
     else:
         print("== training (Eq. 8 relevance + Eq. 13/14 index) ==")
         snap, r = api.build(
             cfg, corpus, rel_steps=args.train_steps,
             idx_steps=args.index_steps, batch=64, rel_lr=1e-3, idx_lr=3e-3,
-            seed=args.seed, verbose=True,
+            precision=args.precision or "f32", seed=args.seed, verbose=True,
             log_every=max(args.train_steps // 3, 1), return_retriever=True)
         if args.snapshot_dir:
             path = api.save(snap, args.snapshot_dir)
@@ -150,7 +166,7 @@ def main(argv=None):
     buf = snap.buffers
     counts = np.asarray(buf["counts"])
     print(f"== index: clusters={counts.tolist()} "
-          f"spilled={buf['n_spilled']} ==")
+          f"spilled={buf['n_spilled']} precision={snap.meta.precision} ==")
 
     tr, va, te = corpus.split()
     positives = [corpus.positives[q] for q in te]

@@ -124,3 +124,51 @@ def test_cluster_dispatch_query_surfaces_drops(rng):
             cr=1)[0])))
     dropped_rows = np.asarray(ids[(np.asarray(sc) == -np.inf).all(1)])
     assert (dropped_rows == -1).all()
+
+
+def test_dispatch_quantized_snapshot_and_int8_guard(rng):
+    """The dispatch path serves quantized snapshots through the shared
+    score_candidates dequant, and the raw-kernel form refuses int8
+    buffers passed WITHOUT their precision/scales (which would rank rows
+    on raw code magnitude)."""
+    import dataclasses
+    import jax
+    from repro.configs import get_config
+    from repro.core import index as il
+    from repro.core import relevance
+    from repro.core.snapshot import IndexSnapshot
+
+    cfg = dataclasses.replace(
+        get_config("list-dual-encoder"),
+        n_layers=2, d_model=16, n_heads=2, d_ff=32, vocab_size=256,
+        max_len=8, spatial_t=20, n_clusters=2, index_mlp_hidden=(8,))
+    params = relevance.relevance_init(jax.random.PRNGKey(0), cfg)
+    n, c, cap, b, k = 64, 2, 32, 8, 4
+    obj_emb = rng.normal(size=(n, cfg.d_model)).astype(np.float32)
+    obj_loc = rng.uniform(size=(n, 2)).astype(np.float32)
+    norm = il.loc_normalizer(jnp.asarray(obj_loc))
+    iparams = il.index_init(jax.random.PRNGKey(1), cfg.d_model, c,
+                            hidden=(8,))
+    feats = il.build_features(jnp.asarray(obj_emb), jnp.asarray(obj_loc),
+                              norm)
+    top = np.asarray(il.assign_clusters(iparams, feats, top=1))[:, None]
+    buf = il.build_cluster_buffers(top, obj_emb, obj_loc, n_clusters=c,
+                                   capacity=cap)
+    tok = jnp.asarray(rng.integers(2, 256, (b, 8)), jnp.int32)
+    msk = jnp.ones((b, 8), bool)
+    ql = jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32)
+    snap = IndexSnapshot.from_parts(cfg, params, iparams, norm, buf,
+                                    dist_max=1.414)
+
+    ids_f, sc_f = serving.cluster_dispatch_query(snap, tok, msk, ql, k=k)
+    ids_q, sc_q = serving.cluster_dispatch_query(
+        snap.with_precision("int8"), tok, msk, ql, k=k)
+    # same candidate sets; scores within scalar-quantization error
+    np.testing.assert_allclose(np.asarray(sc_q), np.asarray(sc_f),
+                               rtol=0.05, atol=0.05)
+
+    qbuf = snap.with_precision("int8").buffers
+    with pytest.raises(ValueError, match="int8"):
+        serving.dispatch_query_kernel(
+            params, iparams, snap.w_hat, norm, qbuf["emb"], qbuf["loc"],
+            qbuf["ids"], tok, msk, ql, cfg, k=k, dist_max=1.414)

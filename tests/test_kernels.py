@@ -55,6 +55,125 @@ def test_fused_topk_score_routed(b, c, cap, d, t, k, cr, rng):
     assert (np.sort(np.asarray(i1)) == np.sort(np.asarray(i2))).all()
 
 
+def test_fused_topk_score_odd_batch_clamps_block_m(rng):
+    """Regression: b % block_m != 0 used to trip the kernel's grid
+    assert; block_m now clamps to the largest divisor of b, matching the
+    routed variant's block_n/cap rule."""
+    b, n, d, t, k = 7, 512, 16, 20, 5            # odd batch, block_m=8 > 7
+    q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    ql = jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 1.5, size=(b, 2)), jnp.float32)
+    ce = jnp.asarray(rng.normal(size=(b, n, d)), jnp.float32)
+    cl = jnp.asarray(rng.uniform(size=(b, n, 2)), jnp.float32)
+    ci = jnp.asarray(rng.integers(-1, 10_000, size=(b, n)), jnp.int32)
+    wh = jnp.asarray(np.cumsum(rng.uniform(0, 0.01, size=t)), jnp.float32)
+    s1, i1 = ops.fused_topk_score(q, ql, w, ce, cl, ci, wh, k=k,
+                                  dist_max=1.414, block_m=8, interpret=True)
+    s2, _ = ref.fused_topk_score_ref(q, ql, w, ce, cl, ci, wh, k=k,
+                                     dist_max=1.414)
+    assert s1.shape == (b, k)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_topk_score_routed_tile_collapse_warns_but_correct(rng):
+    """The cap-has-no-large-divisor fallback (prime cap ⇒ tiles collapse
+    to 1): the warning must fire AND results must still match the dense
+    oracle — a pathological grid is slow, never wrong."""
+    import warnings
+    from repro.core.engine import dense_routed_topk
+    b, c, cap, d, t, k, cr = 3, 4, 127, 8, 20, 5, 2     # 127 is prime
+    q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    ql = jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 1.5, size=(b, 2)), jnp.float32)
+    be = jnp.asarray(rng.normal(size=(c, cap, d)), jnp.float32)
+    bl = jnp.asarray(rng.uniform(size=(c, cap, 2)), jnp.float32)
+    bi = jnp.asarray(np.arange(c * cap).reshape(c, cap), jnp.int32)
+    tc = jnp.asarray(rng.integers(0, c, size=(b, cr)), jnp.int32)
+    wh = jnp.asarray(np.cumsum(rng.uniform(0, 0.01, size=t)), jnp.float32)
+    from repro.kernels import fused_topk_score as fts
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        s1, i1 = fts.fused_topk_score_routed(q, ql, w, tc, be, bl, bi, wh,
+                                             k=k, dist_max=1.414,
+                                             block_n=64, interpret=True)
+    assert any("tiles collapsed" in str(w_.message) for w_ in caught)
+    s2, i2 = dense_routed_topk(q, ql, w, tc, be, bl, bi, wh,
+                               k=k, dist_max=1.414)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+    assert (np.sort(np.asarray(i1)) == np.sort(np.asarray(i2))).all()
+
+
+@pytest.mark.parametrize("b,c,cap,d,t,k,cr", [
+    (8, 8, 256, 32, 50, 5, 1),
+    (4, 6, 128, 64, 100, 10, 2),
+])
+def test_fused_topk_score_routed_int8_dequant(b, c, cap, d, t, k, cr, rng):
+    """Dequant-in-kernel path (DESIGN.md §9): int8 resident buffers +
+    per-row scales must match the dense oracle applying the SAME scales
+    after its gather."""
+    from repro.core import index as il
+    from repro.core.engine import dense_routed_topk
+    q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    ql = jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 1.5, size=(b, 2)), jnp.float32)
+    emb = rng.normal(size=(c, cap, d)).astype(np.float32)
+    q_emb8, scale = il.quantize_rows(emb, "int8")
+    be = jnp.asarray(q_emb8)
+    bs = jnp.asarray(scale)
+    assert be.dtype == jnp.int8 and bs.shape == (c, cap)
+    bl = jnp.asarray(rng.uniform(size=(c, cap, 2)), jnp.float32)
+    bi = jnp.asarray(np.arange(c * cap).reshape(c, cap), jnp.int32)
+    tc = jnp.asarray(rng.integers(0, c, size=(b, cr)), jnp.int32)
+    wh = jnp.asarray(np.cumsum(rng.uniform(0, 0.01, size=t)), jnp.float32)
+    s1, i1 = ops.fused_topk_score_routed(q, ql, w, tc, be, bl, bi, wh,
+                                         k=k, dist_max=1.414, block_n=64,
+                                         buf_scale=bs, interpret=True)
+    s2, i2 = dense_routed_topk(q, ql, w, tc, be, bl, bi, wh,
+                               k=k, dist_max=1.414, buf_scale=bs)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+    assert (np.sort(np.asarray(i1)) == np.sort(np.asarray(i2))).all()
+
+
+def test_fused_topk_score_int8_dequant_gather_variant(rng):
+    """The gather-path kernel's dequant variant agrees with scoring the
+    host-dequantized candidates through the f32 reference."""
+    from repro.core import index as il
+    b, n, d, t, k = 4, 512, 16, 20, 8
+    q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    ql = jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 1.5, size=(b, 2)), jnp.float32)
+    emb = rng.normal(size=(b, n, d)).astype(np.float32)
+    q_emb8, scale = il.quantize_rows(emb, "int8")
+    cl = jnp.asarray(rng.uniform(size=(b, n, 2)), jnp.float32)
+    ci = jnp.asarray(rng.integers(-1, 10_000, size=(b, n)), jnp.int32)
+    wh = jnp.asarray(np.cumsum(rng.uniform(0, 0.01, size=t)), jnp.float32)
+    s1, _ = ops.fused_topk_score(q, ql, w, jnp.asarray(q_emb8), cl, ci, wh,
+                                 k=k, dist_max=1.414,
+                                 cand_scale=jnp.asarray(scale),
+                                 interpret=True)
+    deq = jnp.asarray(il.dequantize_rows(q_emb8, scale, "int8"))
+    s2, _ = ref.fused_topk_score_ref(q, ql, w, deq, cl, ci, wh, k=k,
+                                     dist_max=1.414)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quantize_rows_int8_bounds_error(rng):
+    """Symmetric per-row scalar quantization: |emb − deq(q)| ≤ scale/2
+    elementwise, padding (all-zero) rows get unit scales and stay exact."""
+    from repro.core import index as il
+    emb = rng.normal(size=(6, 32)).astype(np.float32)
+    emb[2] = 0.0                                 # a padding row
+    q, scale = il.quantize_rows(emb, "int8")
+    assert q.dtype == np.int8 and scale.dtype == np.float32
+    assert scale[2] == 1.0 and (q[2] == 0).all()
+    deq = il.dequantize_rows(q, scale, "int8")
+    assert (np.abs(deq - emb) <= scale[:, None] / 2 + 1e-7).all()
+
+
 def test_fused_topk_masks_padding(rng):
     b, n, d, t, k = 4, 512, 16, 20, 8
     q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)

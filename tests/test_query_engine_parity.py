@@ -167,7 +167,7 @@ def test_engine_backend_parity_end_to_end(engine_setup, cr, rng):
     msk = jnp.ones((b, 8), bool)
     ql = jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32)
     a = (params, iparams, w_hat, norm, buf["emb"], buf["loc"], buf["ids"],
-         tok, msk, ql)
+         buf["scale"], tok, msk, ql)
     fd = engine.make_query_fn(cfg, cr=cr, k=k, backend="dense",
                               dist_max=DIST_MAX)
     fp = engine.make_query_fn(cfg, cr=cr, k=k, backend="pallas",
@@ -177,6 +177,74 @@ def test_engine_backend_parity_end_to_end(engine_setup, cr, rng):
     np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_d),
                                rtol=1e-4, atol=1e-4)
     assert (np.sort(np.asarray(i_p)) == np.sort(np.asarray(i_d))).all()
+
+
+# ---------------------------------------------------------------------------
+# Precision tiers (DESIGN.md §9): dense↔pallas parity WITHIN each tier,
+# and quantization fidelity against the exact-f32 ranking
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("precision", ["bf16", "int8"])
+@pytest.mark.parametrize("cr", [1, 2])
+def test_engine_precision_tier_backend_parity(engine_setup, precision, cr,
+                                              rng):
+    """Within a precision tier the two backends must agree: the kernel
+    dequantizes in VMEM with the same per-row scales the dense path
+    applies after its gather."""
+    from repro.core import index as il2
+    cfg, params, iparams, norm, buf, w_hat = engine_setup
+    qbuf = il2.quantize_buffers(buf, precision)
+    assert str(np.asarray(qbuf["emb"]).dtype) == (
+        "bfloat16" if precision == "bf16" else "int8")
+    b, k = 8, 5
+    tok = jnp.asarray(rng.integers(2, 512, (b, 8)), jnp.int32)
+    msk = jnp.ones((b, 8), bool)
+    ql = jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32)
+    a = (params, iparams, w_hat, norm, qbuf["emb"], qbuf["loc"],
+         qbuf["ids"], qbuf["scale"], tok, msk, ql)
+    fd = engine.make_query_fn(cfg, cr=cr, k=k, backend="dense",
+                              dist_max=DIST_MAX, precision=precision)
+    fp = engine.make_query_fn(cfg, cr=cr, k=k, backend="pallas",
+                              interpret=True, dist_max=DIST_MAX,
+                              precision=precision)
+    i_d, s_d = fd(*a)
+    i_p, s_p = fp(*a)
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_d),
+                               rtol=1e-4, atol=1e-4)
+    assert (np.sort(np.asarray(i_p)) == np.sort(np.asarray(i_d))).all()
+
+
+@pytest.mark.parametrize("precision", ["bf16", "int8"])
+def test_quantized_scores_track_f32(engine_setup, precision, rng):
+    """Quantization changes TRel by at most the scalar-quantization error
+    — SRel, routing, and padding are bit-identical, so the tier's scores
+    must stay close to f32 and the top-k sets mostly overlap."""
+    from repro.core import index as il2
+    cfg, params, iparams, norm, buf, w_hat = engine_setup
+    qbuf = il2.quantize_buffers(buf, precision)
+    b, k, cr = 16, 10, 2
+    tok = jnp.asarray(rng.integers(2, 512, (b, 8)), jnp.int32)
+    msk = jnp.ones((b, 8), bool)
+    ql = jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32)
+    f_exact = engine.make_query_fn(cfg, cr=cr, k=k, backend="dense",
+                                   dist_max=DIST_MAX)
+    f_quant = engine.make_query_fn(cfg, cr=cr, k=k, backend="dense",
+                                   dist_max=DIST_MAX, precision=precision)
+    i_e, s_e = f_exact(params, iparams, w_hat, norm, buf["emb"], buf["loc"],
+                       buf["ids"], buf["scale"], tok, msk, ql)
+    i_q, s_q = f_quant(params, iparams, w_hat, norm, qbuf["emb"],
+                       qbuf["loc"], qbuf["ids"], qbuf["scale"], tok, msk, ql)
+    # int8 per-row scalar quantization bounds the per-element embedding
+    # error by scale/2; bf16 by ~2^-8 relative — both stay well under 2%
+    # of the score magnitude at this scale
+    np.testing.assert_allclose(np.asarray(s_q), np.asarray(s_e),
+                               rtol=0.05, atol=0.05)
+    overlap = np.mean([
+        len(set(np.asarray(i_q)[r].tolist())
+            & set(np.asarray(i_e)[r].tolist())) / k
+        for r in range(b)])
+    assert overlap >= 0.9, f"{precision} top-{k} overlap {overlap}"
 
 
 def test_run_batched_pads_partial_batches(rng):
@@ -194,6 +262,32 @@ def test_run_batched_pads_partial_batches(rng):
     assert calls == [8, 8, 8]                  # every chunk static-shaped
     np.testing.assert_allclose(ox, x * 2, rtol=1e-6)
     np.testing.assert_allclose(oy, y + 1, rtol=1e-6)
+
+
+def test_run_batched_overlaps_transfer_with_dispatch(rng):
+    """Chunk i's outputs are materialized (host sync) only AFTER chunk
+    i+1 has been dispatched — the transfer/compute overlap of the
+    serving path. Observed via __array__ hooks on the returned values."""
+    events = []
+
+    class Lazy:
+        def __init__(self, arr, tag):
+            self.arr, self.tag = arr, tag
+
+        def __array__(self, dtype=None, copy=None):
+            events.append(("sync", self.tag))
+            return self.arr
+
+    def fn(x):
+        tag = sum(1 for e in events if e[0] == "dispatch")
+        events.append(("dispatch", tag))
+        return Lazy(np.asarray(x) * 2, tag)
+
+    x = rng.normal(size=(24, 3)).astype(np.float32)
+    out = engine.run_batched(fn, [x], batch=8)
+    np.testing.assert_allclose(out, x * 2, rtol=1e-6)
+    assert events == [("dispatch", 0), ("dispatch", 1), ("sync", 0),
+                      ("dispatch", 2), ("sync", 1), ("sync", 2)]
 
 
 def test_resolve_backend_rules():
@@ -252,7 +346,7 @@ def test_pallas_jaxpr_has_no_candidate_gather(engine_setup, rng):
     msk = jnp.ones((b, 8), bool)
     ql = jnp.asarray(rng.uniform(size=(b, 2)), jnp.float32)
     a = (params, iparams, w_hat, norm, buf["emb"], buf["loc"], buf["ids"],
-         tok, msk, ql)
+         buf["scale"], tok, msk, ql)
 
     def sizes(backend):
         fn = engine.make_query_fn(cfg, cr=cr, k=k, backend=backend,

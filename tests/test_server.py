@@ -338,7 +338,8 @@ def test_warmup_pretraces_the_flush_plan(engine_parts, rng):
     assert compiles == {"dense@4": pytest.approx(compiles["dense@4"])}
     assert compiles["dense@4"] > 0
     plans_after_warmup = set(server.engine._plans)
-    assert (4, 5, 2, "dense") in plans_after_warmup   # (batch, k, cr, backend)
+    # key = (batch, k, cr, backend, precision)
+    assert (4, 5, 2, "dense", "f32") in plans_after_warmup
     tok, msk, loc = make_requests(rng, 4, server.engine.cfg)
     server.serve_all(tok, msk, loc)
     # serving created no new plan: the warm-up traced the real flush path

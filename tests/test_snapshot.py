@@ -163,17 +163,103 @@ def test_publish_refuses_cfg_digest_mismatch(snap, rng):
 
 
 def test_plans_survive_publish(snap, rng):
-    """Same buffer shapes ⇒ the traced (batch, k, cr, backend) plans are
-    reused across a publish — no rebind, no plan-cache reset."""
+    """Same buffer shapes ⇒ the traced (batch, k, cr, backend, precision)
+    plans are reused across a publish — no rebind, no plan-cache reset."""
     eng = engine_lib.QueryEngine.from_snapshot(snap, backend="dense")
     tok, msk, loc = make_requests(rng, 4, snap.cfg)
     eng.query(tok, msk, loc, k=5, cr=2, batch=4)
     plans = dict(eng._plans)
-    assert set(plans) == {(4, 5, 2, "dense")}
+    assert set(plans) == {(4, 5, 2, "dense", "f32")}
     eng.publish(grown(snap, rng))
     ids, _ = eng.query(tok, msk, loc, k=5, cr=2, batch=4)
     assert eng._plans == plans                      # same plan objects
     assert ids.shape == (4, 5)
+
+
+# ---------------------------------------------------------------------------
+# Precision tiers (DESIGN.md §9): quantized round-trip + identity gates
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("precision", ["bf16", "int8"])
+@pytest.mark.parametrize("backend", ["dense", "pallas"])
+def test_quantized_roundtrip_bit_identical(snap, tmp_path, rng, precision,
+                                           backend):
+    """save → load of a quantized snapshot reproduces every byte: the
+    storage dtype, the scales, and the query results on both backends."""
+    snap_q = snap.with_precision(precision)
+    assert snap_q.meta.precision == precision
+    assert snap_q.meta.version == snap.meta.version + 1
+    want_dtype = "bfloat16" if precision == "bf16" else "int8"
+    assert str(np.asarray(snap_q.buffers["emb"]).dtype) == want_dtype
+
+    tok, msk, loc = make_requests(rng, 10, snap.cfg)
+    api.save(snap_q, str(tmp_path))
+    loaded = api.load(str(tmp_path))
+    assert loaded.meta == snap_q.meta
+    assert str(np.asarray(loaded.buffers["emb"]).dtype) == want_dtype
+    assert np.array_equal(np.asarray(loaded.buffers["emb"]),
+                          np.asarray(snap_q.buffers["emb"]))
+    assert np.array_equal(np.asarray(loaded.buffers["scale"]),
+                          np.asarray(snap_q.buffers["scale"]))
+
+    ids_m, sc_m = api.Searcher(snap_q, backend=backend).query(
+        tok, msk, loc, k=5, cr=2, batch=4)
+    ids_l, sc_l = api.Searcher(loaded, backend=backend).query(
+        tok, msk, loc, k=5, cr=2, batch=4)
+    assert np.array_equal(ids_m, ids_l)
+    assert np.array_equal(sc_m, sc_l)               # every score bit
+
+
+def test_unknown_precision_refused_before_arrays(snap, tmp_path,
+                                                 monkeypatch):
+    """An artifact declaring a precision this build doesn't understand
+    must raise BEFORE any leaf array is read (the payload bytes would
+    be misinterpreted)."""
+    path = api.save(snap.with_precision("int8"), str(tmp_path))
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["meta"]["precision"] = "fp4"
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    calls = []
+    from repro.checkpoint import ckpt as ckpt_lib
+    orig_restore = ckpt_lib.restore
+    monkeypatch.setattr(ckpt_lib, "restore",
+                        lambda *a, **kw: (calls.append(1),
+                                          orig_restore(*a, **kw))[1])
+    with pytest.raises(ValueError, match="precision"):
+        api.load(str(tmp_path))
+    assert calls == []                     # gate fired before restore
+
+
+def test_with_buffers_refuses_precision_change(snap):
+    """with_buffers preserves the precision tier; switching tiers only
+    goes through with_precision (which requantizes from f32)."""
+    snap_q = snap.with_precision("int8")
+    with pytest.raises(ValueError, match="precision"):
+        snap_q.with_buffers(snap.buffers)          # f32 buffers into int8
+    # and requantizing an already-quantized tier is refused too
+    with pytest.raises(ValueError, match="f32"):
+        snap_q.with_precision("bf16")
+
+
+def test_quantized_insert_preserves_dtype_and_serves(snap, rng):
+    """Corpus mutation on a quantized snapshot: the insert quantizes the
+    new rows in, dtype/scales stay consistent, and the object is
+    retrievable."""
+    snap_q = snap.with_precision("int8")
+    snap2 = grown(snap_q, rng, n_new=3, base=8000)
+    assert snap2.meta.precision == "int8"
+    assert str(np.asarray(snap2.buffers["emb"]).dtype) == "int8"
+    assert (np.asarray(snap2.buffers["ids"]) >= 8000).sum() == 3
+    eng = engine_lib.QueryEngine.from_snapshot(snap2, backend="dense")
+    tok, msk, loc = make_requests(rng, 4, snap.cfg)
+    k_all = snap2.buffers["capacity"] * snap2.cfg.n_clusters
+    ids, _ = eng.query(tok, msk, loc, k=k_all, cr=snap2.cfg.n_clusters,
+                       batch=4)
+    assert (ids >= 8000).any()
 
 
 # ---------------------------------------------------------------------------
