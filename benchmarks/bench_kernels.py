@@ -1,30 +1,34 @@
-"""Kernel roofline benchmark: the query-phase scan per backend × precision.
+"""Kernel roofline benchmark: the query-phase scan per backend × precision,
+plus the route-skew sweep that measures the cluster-major dedup win.
 
 LIST's query phase is a memory-bound corpus scan (DESIGN.md §4): the
 roofline is set by how many bytes of resident cluster buffer stream
-through HBM per query. The precision policy (DESIGN.md §9) attacks
-exactly that stream — bf16 halves it, int8 cuts it ~4× (symmetric
-per-row scalar quantization, dequantized in VMEM inside the kernel).
+through HBM per query. Two orthogonal levers attack that stream:
+
+* the **precision policy** (DESIGN.md §9) shrinks each streamed row —
+  bf16 halves it, int8 cuts it ~4× (symmetric per-row scalar
+  quantization, dequantized in VMEM inside the kernel);
+* **cluster-major batched execution** (DESIGN.md §10) shrinks how many
+  rows stream — the query-major kernel re-streams a popular cluster
+  once per routed query (``B·cr`` cluster-scans per batch), while the
+  cluster-major kernel streams each DISTINCT routed cluster once
+  (``min(B·cr, c)`` scans, further reduced to the measured ``U`` by a
+  dynamic grid). The two compose multiplicatively.
 
 This bench trains one retriever, requantizes its snapshot at every tier
-(``IndexSnapshot.with_precision`` — same routing, same loc/ids), and for
-each (backend × precision) measures
+(``IndexSnapshot.with_precision``), and for each (backend × precision)
+measures wall time per batch, **estimated HBM bytes streamed per
+query** (kernel-true: what the grid actually DMAs), and recall@10 vs
+the f32 dense oracle. A second, route-skew sweep replays the test
+queries uniformly and Zipf-skewed (the serving stack's workload model,
+core/server.zipf_sample), measures the per-batch **dedup factor**
+``B·cr/U`` from the real router, and checks the cluster-major backend
+returns the query-major results bit-identically modulo tie order
+(recall ≥ 0.999 — 1.0 unless an equal-score tie straddles the k
+boundary) while streaming ≥2× fewer bytes — the acceptance bar CI
+gates.
 
-* wall time per query batch (CPU interpret-mode = correctness-scale
-  numbers off-TPU; the bytes model below is the hardware-independent
-  part),
-* **estimated HBM bytes streamed per query** — the scanned slice is
-  ``cr·cap`` candidate rows, each costing the embedding row in the
-  tier's storage dtype, its f32 dequant scale (int8 only), the exact
-  f32 location pair, and the int32 id,
-* **recall@10 vs the f32 dense oracle** — routing is precision-
-  independent (it reads query features only), so this isolates pure
-  quantization-induced rank churn inside the scanned candidates.
-
-Emits ``BENCH_kernels.json`` (schema in README.md §Benchmarks) to start
-the kernel-level perf trajectory next to ``BENCH_serving.json``. The
-acceptance bar tracked by CI: int8 streams ≥3.5× fewer estimated bytes
-than f32 at recall@10 ≥ 0.99.
+Emits ``BENCH_kernels.json`` (schema in README.md §Benchmarks).
 
     PYTHONPATH=src python -m benchmarks.bench_kernels [--fast]
 """
@@ -49,16 +53,33 @@ REPEATS = 3
 D_MODEL = 128          # bench-scale d; large enough that the exact
                        # loc/ids sidecar doesn't mask the emb-stream cut
 
+N_REPLAY = 256         # route-skew replay length (multiple of BATCH)
+SKEWS = (("uniform", 0.0), ("zipf", 1.05))
+
 _EMB_BYTES = {"f32": 4, "bf16": 2, "int8": 1}
 
 
-def bytes_per_query(cap: int, d: int, precision: str, *, cr: int = CR) -> int:
-    """Estimated HBM bytes the scan streams per query: cr·cap candidate
-    rows of (emb in storage dtype + f32 scale (int8 only) + exact f32
-    loc (2×4) + int32 id)."""
-    row = d * _EMB_BYTES[precision] + (4 if precision == "int8" else 0) \
+def row_bytes(d: int, precision: str) -> int:
+    """Bytes one candidate row streams: emb in the storage dtype + f32
+    scale (int8 only) + exact f32 loc (2×4) + int32 id."""
+    return d * _EMB_BYTES[precision] + (4 if precision == "int8" else 0) \
         + 2 * 4 + 4
-    return cr * cap * row
+
+
+def bytes_per_query(cap: int, d: int, precision: str, *, cr: int = CR) -> int:
+    """Query-major scan: cr·cap candidate rows stream per query."""
+    return cr * cap * row_bytes(d, precision)
+
+
+def bytes_per_query_cluster_major(cap: int, d: int, precision: str, *,
+                                  n_clusters: int, batch: int = BATCH,
+                                  cr: int = CR) -> float:
+    """Cluster-major scan (kernel-true): the grid streams
+    ``u_max = min(B·cr, c)`` distinct-cluster scans per BATCH, amortized
+    over its ``batch`` queries. The measured dedup factor (skew sweep)
+    tells how much further a dynamic grid could cut (``U ≤ u_max``)."""
+    u_max = min(batch * cr, n_clusters)
+    return u_max * cap * row_bytes(d, precision) / batch
 
 
 def _recall_vs_oracle(ids, oracle_ids) -> float:
@@ -78,6 +99,80 @@ def _time_queries(searcher, corpus, te, backend):
     return ids, wall
 
 
+def _est_bytes(backend: str, precision: str, cap: int, d: int,
+               n_clusters: int) -> float:
+    if backend.endswith("-cm"):
+        return bytes_per_query_cluster_major(cap, d, precision,
+                                             n_clusters=n_clusters)
+    return bytes_per_query(cap, d, precision)
+
+
+def _skew_sweep(snap, corpus, te, rows):
+    """Route-skew axis: replay uniform vs zipf traffic, measure the
+    batch dedup factor from the real router, and compare query-major vs
+    cluster-major per precision tier on the same replay."""
+    from repro.core import server as server_lib
+
+    cap = snap.buffers["capacity"]
+    c = int(snap.buffers["emb"].shape[0])
+    d = snap.cfg.d_model
+    rng = np.random.default_rng(7)
+    route_engine = api.Searcher(snap, backend="dense").engine
+    sweep = {}
+    for name, a in SKEWS:
+        picks = te[server_lib.zipf_sample(rng, len(te), N_REPLAY, a=a)]
+        tok, msk = corpus.query_tokens(picks)
+        loc = corpus.q_loc[picks].astype(np.float32)
+
+        distinct = []
+        for s in range(0, N_REPLAY, BATCH):
+            tc = np.asarray(route_engine.route(
+                tok[s:s + BATCH], msk[s:s + BATCH], loc[s:s + BATCH], cr=CR))
+            distinct.append(len(np.unique(tc)))
+        mean_u = float(np.mean(distinct))
+        dedup = BATCH * CR / mean_u
+
+        tiers = ("f32", "int8") if a > 0 else ("f32",)
+        per_backend = {}
+        for precision in tiers:
+            snap_p = snap.with_precision(precision)
+            results = {}
+            for backend in ("pallas", "pallas-cm"):
+                s_ = api.Searcher(snap_p, backend=backend)
+                s_.query(tok, msk, loc, k=K, cr=CR, batch=BATCH)    # warm
+                t0 = time.perf_counter()
+                ids, _ = s_.query(tok, msk, loc, k=K, cr=CR, batch=BATCH)
+                results[backend] = (ids, time.perf_counter() - t0)
+            for backend, (ids, wall) in results.items():
+                entry = {
+                    "wall_ms_per_batch": wall / (N_REPLAY // BATCH) * 1e3,
+                    # kernel-true: what the static grid actually streams
+                    "est_hbm_bytes_per_query":
+                        _est_bytes(backend, precision, cap, d, c),
+                    "recall_at_10_vs_query_major": _recall_vs_oracle(
+                        ids, results["pallas"][0]),
+                }
+                if backend.endswith("-cm"):
+                    # what a dynamic grid streaming only the MEASURED U
+                    # distinct clusters would cost — the skew-dependent
+                    # headroom beyond the structural u_max bound
+                    entry["est_hbm_bytes_per_query_dynamic_grid"] = (
+                        mean_u * cap * row_bytes(d, precision) / BATCH)
+                per_backend[f"{backend}@{precision}"] = entry
+        sweep[name] = {
+            "zipf_a": a,
+            "mean_distinct_clusters": mean_u,
+            "dedup_factor": dedup,
+            "per_backend": per_backend,
+        }
+        rows.append(common.fmt_row(f"route_skew({name})", {
+            "zipf_a": a, "U": mean_u, "dedup": dedup,
+            **{f"MBq({k_})": v["est_hbm_bytes_per_query"] / 1e6
+               for k_, v in per_backend.items()},
+        }))
+    return sweep
+
+
 def run(out_path: str = OUT_PATH):
     r = common.get_retriever(tag=f"kernels-d{D_MODEL}",
                              cfg_over={"d_model": D_MODEL})
@@ -85,6 +180,7 @@ def run(out_path: str = OUT_PATH):
     te, _ = common.test_split_positives(corpus)
     snap = r.snapshot()
     cap = snap.buffers["capacity"]
+    c = int(snap.buffers["emb"].shape[0])
     d = snap.cfg.d_model
 
     oracle_searcher = api.Searcher(snap, backend="dense")
@@ -96,8 +192,8 @@ def run(out_path: str = OUT_PATH):
     rows = []
     for precision in index_lib.PRECISIONS:
         snap_p = snap.with_precision(precision)
-        est = bytes_per_query(cap, d, precision)
-        for backend in ("dense", "pallas"):
+        for backend in ("dense", "pallas", "pallas-cm"):
+            est = _est_bytes(backend, precision, cap, d, c)
             if (backend, precision) == ("dense", "f32"):
                 ids, wall = oracle_ids, oracle_wall    # it IS the oracle
             else:
@@ -121,10 +217,13 @@ def run(out_path: str = OUT_PATH):
                     "recall@10_vs_f32": entry["recall_at_10_vs_f32_dense"],
                 }))
 
+    skew_sweep = _skew_sweep(snap, corpus, te, rows)
+
     # hardware-independent traffic models (paper-scale d=768, Geo-Glue):
     # fusing score+spatial+topk keeps everything but the emb stream in
     # VMEM; the routed kernel reads the scanned slice once vs 3× for the
-    # gather path; int8 then shrinks that one stream itself
+    # gather path; int8 then shrinks that one stream itself; cluster-
+    # major divides it by the batch dedup factor on top
     n_paper, d_paper = 2_849_754, 768
     unfused = n_paper * (d_paper + 7) * 4
     fused = n_paper * (d_paper + 2) * 4
@@ -134,19 +233,34 @@ def run(out_path: str = OUT_PATH):
         "int8_vs_f32_paper_scale_reduction":
             bytes_per_query(1, d_paper, "f32", cr=1)
             / bytes_per_query(1, d_paper, "int8", cr=1),
+        "cluster_major_vs_query_major_reduction":
+            bytes_per_query(cap, d, "f32")
+            / bytes_per_query_cluster_major(cap, d, "f32", n_clusters=c),
     }
     rows.append(common.fmt_row("traffic-model(paper-scale)", traffic))
 
+    zipf = skew_sweep["zipf"]["per_backend"]
+    # the kernel-true bytes ratio is STRUCTURAL: the cm grid streams
+    # min(B·cr, c) cluster-scans per batch vs B·cr query-major, and
+    # row_bytes cancels — one number, identical across precision tiers
+    # (the measured, skew-dependent headroom beyond it is dedup_factor /
+    # the dynamic-grid bytes recorded per entry above)
+    cm_cut = (bytes_per_query(cap, d, "f32")
+              / bytes_per_query_cluster_major(cap, d, "f32", n_clusters=c))
+    cm_recall = min(
+        zipf[f"pallas-cm@{p}"]["recall_at_10_vs_query_major"]
+        for p in ("f32", "int8"))
     report = {
         "bench": "kernels",
         "config": {
             "n_objects": corpus.cfg.n_objects,
             "n_queries": int(len(te)),
-            "d_model": d, "capacity": int(cap), "k": K, "cr": CR,
-            "batch": BATCH,
+            "d_model": d, "capacity": int(cap), "n_clusters": c,
+            "k": K, "cr": CR, "batch": BATCH, "n_replay": N_REPLAY,
             "interpret_mode": bool(engine_lib.default_interpret()),
         },
         "sweep": sweep,
+        "skew_sweep": skew_sweep,
         "traffic_model": traffic,
         "acceptance": {
             "int8_bytes_reduction_vs_f32":
@@ -154,6 +268,9 @@ def run(out_path: str = OUT_PATH):
             "int8_recall_at_10_vs_f32_dense": min(
                 sweep["pallas@int8"]["recall_at_10_vs_f32_dense"],
                 sweep["dense@int8"]["recall_at_10_vs_f32_dense"]),
+            "cluster_major_bytes_reduction_vs_pallas": cm_cut,
+            "cluster_major_recall_vs_query_major": cm_recall,
+            "zipf_dedup_factor": skew_sweep["zipf"]["dedup_factor"],
         },
     }
     with open(out_path, "w") as f:

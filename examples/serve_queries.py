@@ -30,10 +30,12 @@ def main():
                     help="DEPRECATED alias for --backend pallas "
                          "(warns and forwards)")
     ap.add_argument("--backend", default=None,
-                    choices=["pallas", "dense", "auto"],
+                    choices=["pallas", "pallas-cm", "dense", "dense-cm",
+                             "auto"],
                     help="engine backend: pallas = gather-free fused "
-                         "kernel, dense = jnp reference, auto = per "
-                         "platform (core/engine.py)")
+                         "kernel, *-cm = cluster-major batched execution "
+                         "(DESIGN.md §10), dense = jnp reference, auto = "
+                         "per platform + per-batch dedup (core/engine.py)")
     ap.add_argument("--requests", type=int, default=128)
     ap.add_argument("--k", type=int, default=10)
     args = ap.parse_args()

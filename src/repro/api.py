@@ -132,6 +132,11 @@ class Searcher:
 
         tokens (n, L) int32 / mask (n, L) bool / loc (n, 2) float32 per
         the engine contract; ids are global object ids, -1 past-the-end.
+        ``backend`` overrides the searcher's own for this call (any of
+        ``engine.BACKENDS`` — ``"pallas-cm"``/``"dense-cm"`` force
+        cluster-major batched execution, DESIGN.md §10; an auto searcher
+        picks query- vs cluster-major per batch from the measured route
+        dedup factor).
         """
         return self.engine.query(tokens, mask, loc, k=k, cr=cr, batch=batch,
                                  backend=backend)
@@ -191,10 +196,10 @@ def brute_force(snapshot: IndexSnapshot, corpus, query_ids, *, k: int = 20,
 
 
 def _roundtrip_selftest(directory: Optional[str] = None) -> int:
-    """build(random params) → save → load → query on both backends AND
-    every precision tier (f32 | bf16 | int8), asserting bit-identity per
-    tier. Small and training-free: finishes in seconds, which is what a
-    CI gate wants."""
+    """build(random params) → save → load → query on every backend
+    (dense | pallas | their cluster-major twins) AND every precision
+    tier (f32 | bf16 | int8), asserting bit-identity per tier. Small and
+    training-free: finishes in seconds, which is what a CI gate wants."""
     import dataclasses
     import os
     import tempfile
@@ -237,13 +242,13 @@ def _roundtrip_selftest(directory: Optional[str] = None) -> int:
         loaded = load(tmp)
         assert loaded.meta == snap_p.meta, (loaded.meta, snap_p.meta)
         assert loaded.cfg == snap_p.cfg
-        for backend in ("dense", "pallas"):
+        for backend in ("dense", "pallas", "dense-cm", "pallas-cm"):
             a = Searcher(snap_p, backend=backend).query(tok, msk, loc, k=5,
                                                         cr=2, batch=4)
             b = Searcher(loaded, backend=backend).query(tok, msk, loc, k=5,
                                                         cr=2, batch=4)
             ok = (np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1]))
-            print(f"snapshot-roundtrip [{backend:6s}|{precision:4s}] "
+            print(f"snapshot-roundtrip [{backend:9s}|{precision:4s}] "
                   f"{'bit-identical' if ok else 'MISMATCH'}  ({path})")
             failures += 0 if ok else 1
     return failures

@@ -56,18 +56,33 @@ padding slots, ``buf_scale (c, cap)`` f32 dequant scales. Outputs:
 Backend selection
 -----------------
 
-``backend="pallas" | "dense" | "auto"``:
+``backend="pallas" | "pallas-cm" | "dense" | "dense-cm" | "auto"``:
 
 * ``"pallas"`` — the gather-free fused kernel
   (kernels/fused_topk_score_routed): routed cluster ids are
   scalar-prefetched and the resident ``(c, cap, d)`` buffers are
   block-indexed directly, so no ``(B, cr·cap, d)`` candidate copy is
   ever materialized and the ``cr`` routed lists merge in-kernel.
+  Query-major: a cluster routed by many queries streams once per route.
+* ``"pallas-cm"`` — the CLUSTER-MAJOR kernel (DESIGN.md §10): the batch
+  plan dedupes the routed clusters (``serving.cluster_major_plan``) and
+  each distinct cluster's tiles stream from HBM once per batch, scored
+  against that cluster's whole query roster in one MXU matmul; a thin
+  scatter + top-k merge (:func:`merge_cluster_major`) folds the ``cr``
+  partial lists per query. Wins by the batch dedup factor ``B·cr/U``
+  under skewed (or simply cluster-saturating, ``B·cr > c``) routing.
 * ``"dense"`` — the pure-jnp reference path (gather + one
   ``jax.lax.top_k``). Always available, and the parity oracle.
+* ``"dense-cm"`` — the pure-jnp mirror of the cluster-major plan
+  (:func:`dense_cluster_major`): same dedupe/roster/merge, gathering
+  each distinct cluster once. The cluster-major parity oracle.
 * ``"auto"`` — ``"pallas"`` when a compiled TPU backend is present,
   else ``"dense"`` (interpret-mode Pallas is a correctness tool, not a
-  fast path).
+  fast path). On top of that, :meth:`QueryEngine.query` upgrades an
+  auto-resolved backend to its cluster-major twin per batch when the
+  batch dedup factor crosses :data:`CLUSTER_MAJOR_DEDUP_THRESHOLD`
+  (structurally, or measured by routing the first chunk — see
+  :func:`cluster_major_variant`).
 
 ``interpret`` for the Pallas kernels is auto-detected from the
 platform (off-TPU ⇒ interpreter) and can be forced with the
@@ -77,6 +92,7 @@ enforced by tests/test_query_engine_parity.py.
 """
 from __future__ import annotations
 
+import collections
 from typing import Callable, Optional, Sequence, Tuple
 
 import numpy as np
@@ -89,7 +105,17 @@ from repro.core import spatial as sp
 
 NEG_INF = -1e30
 
-BACKENDS = ("pallas", "dense", "auto")
+BACKENDS = ("pallas", "pallas-cm", "dense", "dense-cm", "auto")
+
+# query-major backends and their cluster-major twins (DESIGN.md §10)
+_CM_TWIN = {"pallas": "pallas-cm", "dense": "dense-cm"}
+
+# auto upgrades to cluster-major when the batch streams each distinct
+# cluster at least this many times under query-major execution
+CLUSTER_MAJOR_DEDUP_THRESHOLD = 2.0
+
+# traced plans an engine keeps before evicting least-recently-used ones
+DEFAULT_PLAN_CACHE_SIZE = 32
 
 
 # ---------------------------------------------------------------------------
@@ -141,6 +167,39 @@ def resolve_cli_backend(backend: Optional[str], use_pallas: bool,
                           f"{backend} wins", DeprecationWarning,
                           stacklevel=2)
     return backend or default
+
+
+def cluster_major_variant(backend: str, dedup_factor: float, *,
+                          threshold: float = CLUSTER_MAJOR_DEDUP_THRESHOLD
+                          ) -> str:
+    """The cluster-major auto heuristic (DESIGN.md §10).
+
+    Upgrade a query-major ``backend`` ("pallas" | "dense") to its
+    cluster-major twin when the batch dedup factor ``B·cr/U`` (how many
+    times query-major execution would re-stream each distinct routed
+    cluster) reaches ``threshold``; at lower dedup the roster padding
+    overhead isn't paid for. Cluster-major backends and non-upgradable
+    names pass through unchanged, so this is safe to apply to any
+    resolved backend.
+    """
+    if dedup_factor >= threshold:
+        return _CM_TWIN.get(backend, backend)
+    return backend
+
+
+def cluster_major_feasible(batch: int, cr: int, n_clusters: int,
+                           capacity: int) -> bool:
+    """Shape guard for the AUTO upgrade: cluster-major pays a static
+    roster — a ``(u_max, B·cr, d)`` query-payload gather and a
+    ``u_max``-fold matmul over mostly-empty roster rows, with
+    ``u_max = min(B·cr, c)``. Requiring ``u_max ≤ cap`` bounds that
+    payload by the query-major candidate copy ``(B, cr·cap, d)`` it
+    replaces, so auto can never pick a plan whose overhead outgrows the
+    stream it saves (large-``c`` small-``cap`` regimes). An explicit
+    ``*-cm`` backend bypasses this — callers who know their skew (or
+    pass a tight ``qcap`` at the plan level) stay in control.
+    """
+    return min(batch * cr, n_clusters) <= capacity
 
 
 # ---------------------------------------------------------------------------
@@ -214,6 +273,82 @@ def dense_routed_topk(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc, buf_ids,
 
 
 # ---------------------------------------------------------------------------
+# Cluster-major execution (DESIGN.md §10): plan → score once → merge
+# ---------------------------------------------------------------------------
+
+
+def merge_cluster_major(part_scores, part_ids, roster, *, b: int, cr: int,
+                        k: int):
+    """Fold per-roster-slot partial top-k lists back into per-query ones.
+
+    ``part_scores`` / ``part_ids`` (u_max, Qcap, k) are the cluster-major
+    partials (kernel or dense); ``roster`` (u_max, Qcap) maps each slot
+    to its flattened (query, route) index in ``[0, B·cr)`` with ``B·cr``
+    on empty slots. The inverse scatter drops empty slots into an
+    overflow row, reshapes to ``(B, cr·k)``, and one top-k per query
+    folds the ``cr`` routes — the same undispatch the distributed path
+    uses (core/serving.py step 4). (query, route) pairs dropped at
+    ``Qcap`` saturation simply contribute ``(-1, NEG_INF)`` entries:
+    graceful degradation, identical to the dispatch path's.
+
+    Returns (scores (B, k) f32 descending, ids (B, k) i32 global object
+    ids, -1 past-the-end) — the exact contract of the query-major paths.
+    """
+    n = b * cr
+    flat = roster.reshape(-1)
+    back_v = jnp.full((n + 1, k), NEG_INF, jnp.float32)
+    back_i = jnp.full((n + 1, k), -1, jnp.int32)
+    back_v = back_v.at[flat].set(part_scores.reshape(-1, k))
+    back_i = back_i.at[flat].set(part_ids.reshape(-1, k).astype(jnp.int32))
+    per_q_v = back_v[:n].reshape(b, cr * k)
+    per_q_i = back_i[:n].reshape(b, cr * k)
+    scores, pos = jax.lax.top_k(per_q_v, k)
+    ids = jnp.take_along_axis(per_q_i, pos, axis=1)
+    return scores, ids
+
+
+def dense_cluster_major(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc, buf_ids,
+                        w_hat, *, k: int, dist_max: float, buf_scale=None,
+                        qcap: Optional[int] = None):
+    """Dense mirror of the cluster-major plan — the parity oracle.
+
+    Same contract as :func:`dense_routed_topk`, same execution model as
+    the ``pallas-cm`` kernel: dedupe the batch's routed clusters
+    (``serving.cluster_major_plan``), gather each DISTINCT cluster's
+    buffer once (``u_max ≤ min(B·cr, c)`` rows instead of ``B·cr``),
+    score it against its whole query roster via the shared
+    :func:`score_candidates`, and fold the per-slot partial top-k lists
+    with :func:`merge_cluster_major`. Results are bit-compatible with
+    the query-major backends modulo tie order within equal scores.
+    """
+    from repro.core import serving as serving_lib   # lazy: serving imports us
+
+    b = q_emb.shape[0]
+    c, cap, _ = buf_emb.shape
+    cr = top_c.shape[1]
+    n = b * cr
+    u, roster, _, _ = serving_lib.cluster_major_plan(top_c, n_clusters=c,
+                                                     qcap=qcap)
+    qidx = serving_lib.roster_query_rows(roster, cr=cr, n_total=n)
+    cand_scale = buf_scale[u][:, None] if buf_scale is not None else None
+    st = score_candidates(
+        q_emb[qidx], q_loc[qidx], w_st[qidx],
+        buf_emb[u][:, None], buf_loc[u][:, None], buf_ids[u][:, None],
+        w_hat, dist_max=dist_max, cand_scale=cand_scale)  # (u_max, Qcap, cap)
+    st = jnp.where((roster < n)[..., None], st, NEG_INF)  # empty roster slots
+    kk = min(k, cap)
+    vals, pos = jax.lax.top_k(st, kk)
+    ids = jnp.take_along_axis(
+        jnp.broadcast_to(buf_ids[u][:, None], st.shape), pos, axis=-1)
+    ids = jnp.where((roster < n)[..., None], ids, -1)
+    if kk < k:                       # k > cap: pad partials like the kernel
+        pad = ((0, 0), (0, 0), (0, k - kk))
+        vals = jnp.pad(vals, pad, constant_values=NEG_INF)
+        ids = jnp.pad(ids, pad, constant_values=-1)
+    return merge_cluster_major(vals, ids, roster, b=b, cr=cr, k=k)
+
+
+# ---------------------------------------------------------------------------
 # The routed query phase: encode → route → score → top-k
 # ---------------------------------------------------------------------------
 
@@ -246,8 +381,12 @@ def make_query_fn(cfg, *, cr: int = 1, k: int = 20, backend: str = "auto",
     Keyword args: ``cr`` routed clusters per query; ``k`` results per
     query; ``backend``/``interpret`` per the module docstring
     (``"pallas"`` runs gather-free — scalar-prefetched routing into the
-    resident buffers, in-kernel cr-merge; ``"dense"`` is the jnp
-    reference; ``"auto"`` picks per platform); ``dist_max`` the
+    resident buffers, in-kernel cr-merge; ``"pallas-cm"`` /
+    ``"dense-cm"`` run the cluster-major plan — each distinct routed
+    cluster streamed once per batch, DESIGN.md §10; ``"dense"`` is the
+    jnp reference; ``"auto"`` picks query-major per platform — the
+    per-batch cluster-major upgrade lives in
+    :meth:`QueryEngine.query`); ``dist_max`` the
     distance normalizer of Eq. 5 (√2 for the unit box);
     ``weight_mode`` how the (textual, spatial) mixing weights are
     produced; ``block_n`` the Pallas streaming tile size; ``precision``
@@ -280,6 +419,26 @@ def make_query_fn(cfg, *, cr: int = 1, k: int = 20, backend: str = "auto",
                 q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids, w_hat,
                 k=k, dist_max=dist_max, block_n=block_n, buf_scale=scale,
                 interpret=interpret)
+        elif backend == "pallas-cm":
+            # cluster-major (DESIGN.md §10): dedupe the routed clusters,
+            # stream each distinct one ONCE against its query roster
+            from repro.core import serving as serving_lib
+            from repro.kernels import fused_topk_score as fts
+            b = q_emb.shape[0]
+            n = b * cr
+            u, roster, _, _ = serving_lib.cluster_major_plan(
+                top_c, n_clusters=buf_emb.shape[0])
+            qidx = serving_lib.roster_query_rows(roster, cr=cr, n_total=n)
+            ps, pi = fts.fused_topk_score_cluster_major(
+                q_emb[qidx], q_loc[qidx], w[qidx], u, roster,
+                buf_emb, buf_loc, buf_ids, w_hat, k=k, dist_max=dist_max,
+                n_total=n, block_n=block_n, buf_scale=scale,
+                interpret=interpret)
+            score, ids = merge_cluster_major(ps, pi, roster, b=b, cr=cr, k=k)
+        elif backend == "dense-cm":
+            score, ids = dense_cluster_major(
+                q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids, w_hat,
+                k=k, dist_max=dist_max, buf_scale=scale)
         else:
             score, ids = dense_routed_topk(
                 q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids, w_hat,
@@ -287,6 +446,23 @@ def make_query_fn(cfg, *, cr: int = 1, k: int = 20, backend: str = "auto",
         return ids, score
 
     return jax.jit(query_fn)
+
+
+def make_route_fn(cfg, *, cr: int = 1):
+    """Build the jitted route-only prefix of the query phase: encode →
+    features → top-``cr`` clusters. ``fn(rel_params, index_params, norm,
+    q_tokens, q_mask, q_loc) -> top_c (B, cr) int32``.
+
+    The auto heuristic (:func:`cluster_major_variant`) and the skew
+    benchmarks use it to measure a batch's dedup factor ``B·cr/U``
+    without running the scan."""
+    def route_fn(rel_params, index_params, norm, q_tokens, q_mask, q_loc):
+        q_emb = relevance.encode_queries(rel_params, q_tokens, q_mask, cfg)
+        feats = index_lib.build_features(q_emb, q_loc, norm)
+        top_c, _ = index_lib.route_queries(index_params, feats, cr=cr)
+        return top_c
+
+    return jax.jit(route_fn)
 
 
 # ---------------------------------------------------------------------------
@@ -324,7 +500,11 @@ def run_batched(fn: Callable, arrays: Sequence[np.ndarray], *, batch: int):
     real rows. This is the padding rule the whole repo shares: the
     retriever, the brute-force oracle, corpus embedding, and the
     streaming server's micro-batch flushes (core/server.py) — which is
-    why a micro-batched result is bit-identical to an offline one.
+    why a micro-batched result is bit-identical to an offline one at a
+    fixed backend. (An AUTO engine picks query- vs cluster-major per
+    ``QueryEngine.query`` call, so differently-composed batches may
+    take different — bit-compatible modulo tie order — flavors;
+    DESIGN.md §10.)
 
     Execution is pipelined: chunk ``i``'s outputs are materialized on
     the host (``np.asarray`` — a device sync) only *after* chunk
@@ -383,10 +563,19 @@ class QueryEngine:
     """
 
     def __init__(self, snapshot, *, backend: str = "auto",
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 max_plans: int = DEFAULT_PLAN_CACHE_SIZE,
+                 cm_threshold: float = CLUSTER_MAJOR_DEDUP_THRESHOLD):
         self._snapshot = snapshot
         self.backend, self.interpret = resolve_backend(backend, interpret)
-        self._plans = {}
+        # "auto" keeps its per-batch cluster-major upgrade (DESIGN.md
+        # §10); an explicit backend is always served verbatim
+        self._auto_cm = backend == "auto"
+        self.cm_threshold = float(cm_threshold)
+        self.last_dedup_factor: Optional[float] = None
+        self.max_plans = int(max_plans)
+        self._plans: "collections.OrderedDict" = collections.OrderedDict()
+        self._route_plans = {}          # keyed cr: tiny, never evicted
 
     # --- construction -----------------------------------------------------
 
@@ -489,11 +678,69 @@ class QueryEngine:
             precision = self._snapshot.meta.precision
         key = (batch, k, cr, backend, precision)
         if key not in self._plans:
+            # bounded LRU: hot-swaps, precision changes, and backend
+            # upgrades retrace freely without growing the cache forever
+            while len(self._plans) >= self.max_plans:
+                self._plans.popitem(last=False)
             self._plans[key] = make_query_fn(
                 self.cfg, cr=cr, k=k, backend=backend,
                 interpret=self.interpret, dist_max=self.dist_max,
                 weight_mode=self.weight_mode, precision=precision)
+        self._plans.move_to_end(key)
         return self._plans[key]
+
+    def route(self, q_tokens, q_mask, q_loc, *, cr: int = 1,
+              snapshot=None):
+        """Route-only prefix: → top_c (n, cr) int32 (device array).
+
+        One cached jitted plan per ``cr`` (:func:`make_route_fn`); the
+        auto heuristic and the skew benchmarks measure dedup with it."""
+        snap = self._snapshot if snapshot is None else snapshot
+        if cr not in self._route_plans:
+            self._route_plans[cr] = make_route_fn(self.cfg, cr=cr)
+        return self._route_plans[cr](
+            snap.rel_params, snap.index_params, snap.norm,
+            jnp.asarray(q_tokens), jnp.asarray(q_mask), jnp.asarray(q_loc))
+
+    def pick_backend(self, q_tokens, q_mask, q_loc, *, cr: int, batch: int,
+                     snapshot=None, base: Optional[str] = None) -> str:
+        """Resolve the per-batch backend for an auto request (DESIGN.md
+        §10): upgrade the hardware-resolved query-major ``base`` backend
+        (default: this engine's own) to its cluster-major twin when the
+        batch dedup factor ``B·cr/U`` crosses ``cm_threshold``.
+
+        The structural bound ``batch·cr / min(batch·cr, c)`` is checked
+        first — when the batch saturates the cluster set (``B·cr ≥
+        threshold·c``, the common serving regime) no measurement is
+        needed and the pick is data-independent. Otherwise the FIRST
+        chunk is routed (:meth:`route` — the cheap encoder+MLP prefix)
+        and the measured distinct-cluster count decides. The last
+        factor used is kept in ``last_dedup_factor`` for observability.
+        """
+        snap = self._snapshot if snapshot is None else snapshot
+        base = self.backend if base is None else base
+        c, cap = snap.buffers["emb"].shape[:2]
+        # shape guard first: refuse plans whose roster overhead outgrows
+        # the stream they save (the plan is traced at the PADDED batch)
+        if not cluster_major_feasible(batch, cr, c, cap):
+            self.last_dedup_factor = None
+            return base
+        eff = min(batch, q_tokens.shape[0])
+        dedup = (eff * cr) / min(eff * cr, c)     # structural lower bound
+        if dedup < self.cm_threshold:
+            # measure on the first chunk, PADDED to the static plan
+            # shape: route_fn then compiles once per (batch, cr) — a
+            # serving flush of any fill level reuses it instead of
+            # retracing the encoder inside the latency-critical flush
+            tok = pad_leading(np.asarray(q_tokens[:eff]), batch)
+            msk = pad_leading(np.asarray(q_mask[:eff]), batch)
+            loc = pad_leading(np.asarray(q_loc[:eff]), batch)
+            top_c = np.asarray(self.route(tok, msk, loc, cr=cr,
+                                          snapshot=snap))[:eff]
+            dedup = (eff * cr) / max(len(np.unique(top_c)), 1)
+        self.last_dedup_factor = float(dedup)
+        return cluster_major_variant(base, dedup,
+                                     threshold=self.cm_threshold)
 
     def query(self, q_tokens, q_mask, q_loc, *, k: int = 20, cr: int = 1,
               batch: int = 256, backend: Optional[str] = None,
@@ -503,9 +750,21 @@ class QueryEngine:
         Reads the snapshot reference exactly once (or serves an explicit
         ``snapshot`` — the server's flush path pins the one it started
         with), so every chunk of the batch scores one consistent index.
-        The plan is selected for the pinned snapshot's precision tier.
+        The plan is selected for the pinned snapshot's precision tier;
+        an auto engine additionally picks query- vs cluster-major per
+        batch (:meth:`pick_backend`) unless ``backend`` overrides it.
         """
         snap = self._snapshot if snapshot is None else snapshot
+        # the per-batch cluster-major pick engages whenever the request
+        # is "auto": explicitly (e.g. the serving drivers' resolved CLI
+        # default, forwarded through ServerConfig.backend) or implicitly
+        # (no override on an auto-constructed engine)
+        if backend == "auto" or (backend is None and self._auto_cm):
+            base = (resolve_backend("auto")[0] if backend == "auto"
+                    else self.backend)
+            backend = self.pick_backend(q_tokens, q_mask, q_loc, cr=cr,
+                                        batch=batch, snapshot=snap,
+                                        base=base)
         fn = self.query_fn(k=k, cr=cr, backend=backend, batch=batch,
                            precision=snap.meta.precision)
         buf = snap.buffers

@@ -13,7 +13,10 @@ request pays compile latency, repeated work, or a ragged-batch recompile:
   ``QueryEngine.query`` → ``engine.run_batched``, so a partial flush is
   zero-padded to the jitted batch shape by exactly the same rule as any
   direct engine call — micro-batched results are bit-identical to
-  offline ones (tests/test_server.py).
+  offline ones at a fixed backend (tests/test_server.py; an AUTO
+  engine picks query- vs cluster-major per batch, DESIGN.md §10, so
+  differently-composed batches are bit-compatible modulo tie order
+  within equal scores).
 
 * a **two-tier result cache** that exploits workload skew (WISK's
   observation: real query logs are heavily repeated):
@@ -85,7 +88,11 @@ class ServerConfig:
     max_delay_ms    deadline flush: the oldest queued request never waits
                     longer than this before its batch is launched
     k, cr           top-k size and routed-clusters fanout of every answer
-    backend         engine backend for flushes (None → the engine's own)
+    backend         engine backend for flushes (any of engine.BACKENDS,
+                    e.g. "pallas-cm" to force cluster-major batched
+                    execution; None → the engine's own pick — an auto
+                    engine then chooses query- vs cluster-major per
+                    micro-batch from its dedup factor, DESIGN.md §10)
     cache_size      exact-tier LRU entries
     near_cells      near-duplicate tier grid resolution per axis
                     (0 disables the tier — the default: it approximates)
@@ -243,21 +250,42 @@ class StreamingServer:
 
         Runs an all-padding batch through the *same* bound plan the flush
         path uses (same ``(k, cr, backend)`` plan key, same batch shape),
-        so the jit cache is hot before the first live request. Returns
-        {"backend@batch": seconds} and records it in ``stats``.
+        so the jit cache is hot before the first live request. An "auto"
+        configuration picks query- vs cluster-major per LIVE batch
+        (DESIGN.md §10) — warmup's identical all-padding rows would
+        mistrain that pick (they all route to one cluster, so the
+        measured dedup is always maximal) — so auto warm-up pre-traces
+        BOTH twins explicitly and leaves the choice to real traffic.
+        Returns {"backend@batch": seconds} and records it in ``stats``.
         """
-        L = self.engine.cfg.max_len
+        eng = self.engine
+        L = eng.cfg.max_len
         for backend in backends or (self.cfg.backend,):
             for b in batch_sizes or (self.cfg.batch_size,):
+                targets = [backend]
+                if backend == "auto" or (backend is None and eng._auto_cm):
+                    base = (engine_lib.resolve_backend("auto")[0]
+                            if backend == "auto" else eng.backend)
+                    targets = [base]
+                    c, cap = eng.snapshot.buffers["emb"].shape[:2]
+                    if engine_lib.cluster_major_feasible(b, self.cfg.cr,
+                                                         c, cap):
+                        targets.append(engine_lib.cluster_major_variant(
+                            base, float("inf")))
                 tok = np.zeros((b, L), np.int32)
                 tok[:, 0] = 1                        # CLS: keep masks non-empty
                 msk = tok != 0
                 loc = np.zeros((b, 2), np.float32)
-                t0 = time.perf_counter()
-                self.engine.query(tok, msk, loc, k=self.cfg.k, cr=self.cfg.cr,
-                                  batch=b, backend=backend)
-                name = f"{backend or self.engine.backend}@{b}"
-                self.stats.compile_seconds[name] = time.perf_counter() - t0
+                for target in targets:
+                    t0 = time.perf_counter()
+                    eng.query(tok, msk, loc, k=self.cfg.k, cr=self.cfg.cr,
+                              batch=b, backend=target)
+                    name = f"{target or eng.backend}@{b}"
+                    self.stats.compile_seconds[name] = \
+                        time.perf_counter() - t0
+        # warmup's degenerate routing is not traffic: don't let its
+        # artificial dedup factor leak into metrics()
+        eng.last_dedup_factor = None
         return dict(self.stats.compile_seconds)
 
     # --- snapshot publication (DESIGN.md §8) ------------------------------
@@ -463,7 +491,9 @@ class StreamingServer:
     def metrics(self, wall_seconds: Optional[float] = None) -> dict:
         """One flat dict for drivers/benchmarks: hit rates, batch fill,
         latency percentiles (ms), flush/invalidation counters, compile
-        seconds, and QPS when ``wall_seconds`` is given."""
+        seconds, the engine's last measured route-dedup factor (the
+        cluster-major auto signal, DESIGN.md §10), and QPS when
+        ``wall_seconds`` is given."""
         s = self.stats
         n = max(s.n_requests, 1)
         filled = s.engine_batches * self.cfg.batch_size
@@ -480,6 +510,7 @@ class StreamingServer:
             "flushes": dict(s.flushes),
             "invalidations": s.invalidations,
             "compile_seconds": dict(s.compile_seconds),
+            "dedup_factor": self.engine.last_dedup_factor,
         }
         if wall_seconds is not None and wall_seconds > 0:
             out["qps"] = s.n_requests / wall_seconds

@@ -18,6 +18,12 @@ is precisely what keeps the capacity (and thus the dispatch cost) tight.
 
 Compute cost: c·Qcap·cap·d ≈ (balance·cr)·B·(n/c)·d = the paper's 1/c
 search-space reduction, now bandwidth-local per chip.
+
+The same sort-based scatter core (:func:`_sorted_runs`) also builds the
+single-host CLUSTER-MAJOR batch plan (:func:`cluster_major_plan`,
+DESIGN.md §10): instead of one roster row per cluster shard, one row
+per *distinct routed* cluster, so the engine's ``pallas-cm`` backend
+streams each distinct cluster's resident tiles once per batch.
 """
 from __future__ import annotations
 
@@ -39,6 +45,28 @@ def query_capacity(batch: int, n_clusters: int, cr: int,
     return max(8, -(-c // 8) * 8)
 
 
+def _sorted_runs(flat):
+    """Stable-sort a flat vector of routed cluster ids and mark its runs.
+
+    → (sort_idx, sorted_c, is_start, pos): ``sort_idx`` the stable
+    argsort, ``sorted_c`` the sorted cluster ids, ``is_start`` True at
+    the first element of each equal-cluster run, ``pos`` each element's
+    rank within its run. This is the sort-based scatter core shared by
+    :func:`dispatch_queries` (one roster row per cluster, all ``c`` of
+    them) and :func:`cluster_major_plan` (one roster row per DISTINCT
+    routed cluster).
+    """
+    n = flat.shape[0]
+    sort_idx = jnp.argsort(flat, stable=True)
+    sorted_c = flat[sort_idx]
+    ar = jnp.arange(n)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_c[1:] != sorted_c[:-1]])
+    run_start = jax.lax.cummax(jnp.where(is_start, ar, 0))
+    pos = ar - run_start
+    return sort_idx, sorted_c, is_start, pos
+
+
 def dispatch_queries(top_c, q_feat, *, n_clusters: int, capacity: int):
     """Sort-based dispatch (mirrors models/moe.py).
 
@@ -54,13 +82,7 @@ def dispatch_queries(top_c, q_feat, *, n_clusters: int, capacity: int):
     b, cr = top_c.shape
     n = b * cr
     flat = top_c.reshape(n)
-    sort_idx = jnp.argsort(flat, stable=True)
-    sorted_c = flat[sort_idx]
-    ar = jnp.arange(n)
-    is_start = jnp.concatenate(
-        [jnp.ones((1,), bool), sorted_c[1:] != sorted_c[:-1]])
-    run_start = jax.lax.cummax(jnp.where(is_start, ar, 0))
-    pos = ar - run_start
+    sort_idx, sorted_c, _, pos = _sorted_runs(flat)
     keep = pos < capacity
     slot = jnp.where(keep, sorted_c * capacity + pos, n_clusters * capacity)
     n_dropped = jnp.sum(~keep).astype(jnp.int32)
@@ -73,6 +95,73 @@ def dispatch_queries(top_c, q_feat, *, n_clusters: int, capacity: int):
                             jnp.zeros((1,) + q_feat.shape[1:], q_feat.dtype)])
     q_buf = fpad[jnp.where(origin < n, origin, n)]
     return q_buf, origin, n_dropped
+
+
+def cluster_major_plan(top_c, *, n_clusters: int,
+                       qcap: Optional[int] = None,
+                       u_max: Optional[int] = None):
+    """Batch execution plan for CLUSTER-MAJOR scanning (DESIGN.md §10).
+
+    Where :func:`dispatch_queries` builds one roster row for every one
+    of the ``c`` clusters (the sharded all-to-all layout), this dedupes
+    the batch's routed clusters and builds one row per **distinct**
+    routed cluster — the plan the cluster-major kernel
+    (``kernels.fused_topk_score_cluster_major``) streams: each distinct
+    cluster's resident tiles cross HBM once per batch, scored against
+    that cluster's whole query roster.
+
+    top_c: (B, cr) routed cluster ids (duplicates allowed — a query
+    routed twice to one cluster occupies two roster slots, preserving
+    the query-major duplicate semantics). Returns
+
+      u          (u_max,) int32 — the distinct routed cluster ids, one
+                 per roster row, in ascending cluster order. Slots past
+                 the realized distinct count ``U`` hold cluster 0 with
+                 an empty roster (static shapes: ``u_max`` defaults to
+                 ``min(B·cr, n_clusters)``, the structural upper bound
+                 on ``U``).
+      roster     (u_max, qcap) int32 — the inverse map: flattened
+                 (query, route) indices in ``[0, B·cr)`` assigned to
+                 each distinct cluster, ``B·cr`` marking empty slots.
+                 ``qcap`` defaults to ``B·cr`` (exact: nothing can
+                 drop); a smaller ``qcap`` bounds the roster like the
+                 dispatch capacity does.
+      n_distinct () int32 — the realized U; the batch dedup factor is
+                 ``B·cr / U`` (the auto heuristic's signal).
+      n_dropped  () int32 — (query, route) pairs that exceeded ``qcap``
+                 (or ``u_max``) and were NOT placed; surfaced, never
+                 silently truncated, exactly like the dispatch path.
+    """
+    b, cr = top_c.shape
+    n = b * cr
+    u_max = min(n, n_clusters) if u_max is None else u_max
+    qcap = n if qcap is None else qcap
+    flat = top_c.reshape(n)
+    sort_idx, sorted_c, is_start, pos = _sorted_runs(flat)
+    slot_of = jnp.cumsum(is_start) - 1            # distinct-slot per pair
+    n_distinct = slot_of[-1].astype(jnp.int32) + 1
+    keep = (pos < qcap) & (slot_of < u_max)
+    dest = jnp.where(keep, slot_of * qcap + pos, u_max * qcap)
+    n_dropped = jnp.sum(~keep).astype(jnp.int32)
+
+    roster = jnp.full((u_max * qcap + 1,), n, jnp.int32)
+    roster = roster.at[dest].set(sort_idx.astype(jnp.int32))
+    roster = roster[:-1].reshape(u_max, qcap)
+
+    u_dest = jnp.where(is_start & (slot_of < u_max), slot_of, u_max)
+    u = jnp.zeros((u_max + 1,), jnp.int32)
+    u = u.at[u_dest].set(sorted_c.astype(jnp.int32))[:u_max]
+    return u, roster, n_distinct, n_dropped
+
+
+def roster_query_rows(roster, *, cr: int, n_total: int):
+    """Invert roster slots to query rows: slot value ``o ∈ [0, B·cr)``
+    is the flattened (query, route) pair, so the query row is
+    ``o // cr``; empty slots (``o == n_total``) clamp to row 0 — mask
+    them via ``roster < n_total`` (the kernel and the merge both do).
+    The ONE definition of the roster's empty-slot semantics, shared by
+    the pallas-cm gather, the dense oracle, and the tests."""
+    return jnp.where(roster < n_total, roster, 0) // cr
 
 
 def cluster_dispatch_query(snapshot, q_tokens, q_mask, q_loc, *,

@@ -16,7 +16,7 @@ select into one pass is what reaches the HBM roofline.
 Grid: (B/block_m, N/block_n), last dim innermost (sequential) so output
 revisiting is legal on TPU.
 
-Two variants live here:
+Three variants live here:
 
 * :func:`fused_topk_score` — the original gather-path kernel. The caller
   materializes a ``(B, cr·cap, d)`` candidate copy (``buf[top_c]``) and the
@@ -31,10 +31,26 @@ Two variants live here:
   lists merge into one running top-k in VMEM instead of a second host-side
   top-k. Output ids are global object ids (taken from ``buf_ids`` in-kernel)
   so the caller needs no ``take_along_axis`` either.
+* :func:`fused_topk_score_cluster_major` — the batched-IVF inversion of
+  the routed kernel (DESIGN.md §10). The routed kernel is query-major:
+  its ``(B, cr, cap/bn)`` grid re-streams a popular cluster's tiles once
+  per routed query, so under skewed routing the dominant HBM stream is
+  ``B·cr/U``× larger than the distinct-cluster working set ``U``. This
+  kernel runs the batch plan of ``serving.cluster_major_plan`` instead:
+  grid ``(u_max, cap/bn)`` scalar-prefetches the distinct routed
+  clusters ``u`` and their query roster, DMAs each distinct cluster's
+  tiles **once per batch**, and scores them against the cluster's whole
+  roster in a single ``(Qcap, d) × (d, bn)`` MXU matmul. Per-roster-slot
+  running top-k lives in the revisited ``(1, Qcap, k)`` output block;
+  the caller folds the ``cr`` partial lists per query with
+  ``engine.merge_cluster_major`` (a thin scatter + one top-k). With a
+  quantized buffer the dequant also happens once per distinct cluster
+  per batch, not once per route — the dedup and the precision cut
+  compose multiplicatively.
 
 Precision policy (DESIGN.md §9): the roofline is set by streaming the
-candidate embeddings, so both kernels grow **dequant-in-kernel** variants
-for quantized resident buffers. When a per-row scale array is passed
+candidate embeddings, so every kernel here grows a **dequant-in-kernel**
+variant for quantized resident buffers. When a per-row scale array is passed
 (``cand_scale`` / ``buf_scale``, int8 buffers), the compressed tile is
 DMA'd to VMEM, upcast to f32 and multiplied by its scales *there*, and
 then hits the same MXU matmul and running top-k — only compressed bytes
@@ -314,3 +330,164 @@ def fused_topk_score_routed(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc,
         interpret=interpret,
     )(top_c.astype(jnp.int32), q_emb, q_loc, w_st, w_hat,
       *emb_args, buf_loc, buf_ids)
+
+
+# ---------------------------------------------------------------------------
+# Cluster-major variant: stream each distinct routed cluster once per batch
+# ---------------------------------------------------------------------------
+
+
+def _cluster_major_body(roster_ref, qe_ref, ql_ref, qw_ref, wh_ref, ce,
+                        bl_ref, bi_ref, os_ref, oi_ref, *, k: int, t: int,
+                        dist_max: float, n_total: int):
+    """Score one (block_n, d) resident tile (``ce`` already f32,
+    dequantized by the caller) against the WHOLE query roster of the
+    distinct cluster owning it, and fold into each roster slot's
+    running top-k."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        os_ref[...] = jnp.full_like(os_ref, NEG_INF)
+        oi_ref[...] = jnp.full_like(oi_ref, -1)
+
+    q = qe_ref[...][0].astype(jnp.float32)           # (Qcap, d)
+    trel = jax.lax.dot_general(
+        q, ce, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)           # (Qcap, bn) one matmul
+
+    dloc = ql_ref[...][0][:, None, :] - bl_ref[...][0][None]  # (Qcap, bn, 2)
+    dist = jnp.sqrt(jnp.sum(dloc * dloc, axis=-1))    # (Qcap, bn)
+    s_in = 1.0 - jnp.clip(dist / dist_max, 0.0, 1.0)
+    idx = jnp.clip((s_in * t).astype(jnp.int32), 0, t - 1)
+    srel = jnp.take(wh_ref[...], idx)                 # (Qcap, bn)
+
+    w = qw_ref[...][0].astype(jnp.float32)            # (Qcap, 2)
+    st = w[:, :1] * trel + w[:, 1:2] * srel
+    ids = bi_ref[...][0]                              # (bn,) object ids
+    # mask buffer padding AND empty roster slots (roster pad = n_total):
+    # a pad slot's partials stay (-1, NEG_INF) so the caller's merge can
+    # scatter them anywhere harmlessly
+    live = roster_ref[i, :] < n_total                 # (Qcap,)
+    valid = live[:, None] & (ids[None, :] >= 0)       # (Qcap, bn)
+    st = jnp.where(valid, st, NEG_INF)
+    ids2 = jnp.where(valid, jnp.broadcast_to(ids[None, :], st.shape), -1)
+
+    # per-roster-slot running top-k in the revisited output block;
+    # carrying OBJECT ids keeps the final per-query merge order-free
+    cat_s = jnp.concatenate([os_ref[...][0], st], axis=1)   # (Qcap, k+bn)
+    cat_i = jnp.concatenate([oi_ref[...][0], ids2], axis=1)
+    vals, pos = jax.lax.top_k(cat_s, k)
+    os_ref[...] = vals[None]
+    oi_ref[...] = jnp.take_along_axis(cat_i, pos, axis=1)[None]
+
+
+def _cluster_major_kernel(u_ref, roster_ref, qe_ref, ql_ref, qw_ref, wh_ref,
+                          be_ref, bl_ref, bi_ref, os_ref, oi_ref, **kw):
+    _cluster_major_body(roster_ref, qe_ref, ql_ref, qw_ref, wh_ref,
+                        be_ref[...][0].astype(jnp.float32),
+                        bl_ref, bi_ref, os_ref, oi_ref, **kw)
+
+
+def _cluster_major_kernel_dequant(u_ref, roster_ref, qe_ref, ql_ref, qw_ref,
+                                  wh_ref, be_ref, bs_ref, bl_ref, bi_ref,
+                                  os_ref, oi_ref, **kw):
+    # int8 tile → upcast + per-row scale in VMEM ONCE per distinct
+    # cluster per batch (the query-major kernel re-dequantizes per route)
+    ce = be_ref[...][0].astype(jnp.float32) * bs_ref[...][0][:, None]
+    _cluster_major_body(roster_ref, qe_ref, ql_ref, qw_ref, wh_ref, ce,
+                        bl_ref, bi_ref, os_ref, oi_ref, **kw)
+
+
+def fused_topk_score_cluster_major(q_emb_r, q_loc_r, w_st_r, u, roster,
+                                   buf_emb, buf_loc, buf_ids, w_hat, *,
+                                   k: int, dist_max: float, n_total: int,
+                                   block_n: int = 512, buf_scale=None,
+                                   interpret: bool = True):
+    """Cluster-major fused score + top-k over the deduped batch plan.
+
+    Inputs are the plan of ``serving.cluster_major_plan`` plus the
+    roster-gathered query payloads: q_emb_r (u_max, Qcap, d) /
+    q_loc_r (u_max, Qcap, 2) / w_st_r (u_max, Qcap, 2) the queries of
+    each distinct cluster's roster; u (u_max,) int32 distinct routed
+    cluster ids; roster (u_max, Qcap) int32 flattened (query, route)
+    indices with ``n_total = B·cr`` marking empty slots (both ``u`` and
+    ``roster`` are scalar-prefetched); buf_emb (c, cap, d) in f32, bf16,
+    or int8; buf_loc (c, cap, 2); buf_ids (c, cap) int32 (-1 pad);
+    w_hat (t,) f32; buf_scale (c, cap) f32 per-row dequant scales
+    (required for int8 buffers, omitted otherwise).
+
+    Returns partial per-roster-slot top-k lists
+    (scores (u_max, Qcap, k) f32, ids (u_max, Qcap, k) i32 global object
+    ids, (-1, NEG_INF) on empty roster slots and past-the-end). Fold
+    them per query with ``engine.merge_cluster_major(roster)`` — the
+    partial lists of a query's ``cr`` routes live at its roster slots.
+
+    Grid ``(u_max, cap/block_n)``: step ``(i, j)`` DMAs tile ``j`` of
+    distinct cluster ``u[i]`` — each distinct cluster's resident bytes
+    cross HBM ONCE per batch instead of once per routed query, so the
+    stream shrinks by the batch dedup factor ``B·cr/U`` (structurally
+    bounded by ``B·cr / min(B·cr, c)``). The whole roster is scored
+    against the tile in one ``(Qcap, d) × (d, block_n)`` MXU matmul; on
+    a real TPU prefer ``Qcap`` a multiple of 8 (it is the matmul's
+    sublane dim) — the default ``Qcap = B·cr`` of the engine's plans
+    satisfies this for any batch that is itself a multiple of 8.
+    """
+    u_max, qcap, d = q_emb_r.shape
+    c, cap, _ = buf_emb.shape
+    t = w_hat.shape[0]
+    requested = min(block_n, cap)
+    block_n = _largest_divisor_tile(cap, requested)
+    if block_n < max(1, requested // 4):
+        import warnings
+        warnings.warn(
+            f"fused_topk_score_cluster_major: capacity {cap} has no "
+            f"divisor near the requested tile size ({requested}); tiles "
+            f"collapsed to {block_n} — pathological grid. Prefer a "
+            f"capacity with a large power-of-two factor "
+            f"(build_cluster_buffers rounds to multiples of 128)",
+            stacklevel=2)
+    grid = (u_max, cap // block_n)
+
+    dequant = buf_scale is not None
+    emb_specs = [pl.BlockSpec((1, block_n, d),
+                              lambda i, j, u_, ro: (u_[i], j, 0))]
+    emb_args = [buf_emb]
+    if dequant:
+        emb_specs.append(pl.BlockSpec((1, block_n),
+                                      lambda i, j, u_, ro: (u_[i], j)))
+        emb_args.append(buf_scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, qcap, d), lambda i, j, u_, ro: (i, 0, 0)),
+            pl.BlockSpec((1, qcap, 2), lambda i, j, u_, ro: (i, 0, 0)),
+            pl.BlockSpec((1, qcap, 2), lambda i, j, u_, ro: (i, 0, 0)),
+            pl.BlockSpec((t,), lambda i, j, u_, ro: (0,)),          # w_hat
+            *emb_specs,                                 # buf_emb [, scale]
+            pl.BlockSpec((1, block_n, 2),
+                         lambda i, j, u_, ro: (u_[i], j, 0)),       # buf_loc
+            pl.BlockSpec((1, block_n),
+                         lambda i, j, u_, ro: (u_[i], j)),          # buf_ids
+        ],
+        out_specs=[
+            pl.BlockSpec((1, qcap, k), lambda i, j, u_, ro: (i, 0, 0)),
+            pl.BlockSpec((1, qcap, k), lambda i, j, u_, ro: (i, 0, 0)),
+        ],
+    )
+    kern = functools.partial(
+        _cluster_major_kernel_dequant if dequant else _cluster_major_kernel,
+        k=k, t=t, dist_max=float(dist_max), n_total=int(n_total))
+    out_shape = [
+        jax.ShapeDtypeStruct((u_max, qcap, k), jnp.float32),
+        jax.ShapeDtypeStruct((u_max, qcap, k), jnp.int32),
+    ]
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(u.astype(jnp.int32), roster.astype(jnp.int32),
+      q_emb_r, q_loc_r, w_st_r, w_hat, *emb_args, buf_loc, buf_ids)

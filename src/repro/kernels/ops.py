@@ -53,6 +53,24 @@ def fused_topk_score_routed(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc,
         interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("k", "dist_max", "n_total",
+                                             "block_n", "interpret"))
+def fused_topk_score_cluster_major(q_emb_r, q_loc_r, w_st_r, u, roster,
+                                   buf_emb, buf_loc, buf_ids, w_hat, *, k,
+                                   dist_max, n_total, block_n=512,
+                                   buf_scale=None, interpret=None):
+    """Cluster-major query-phase kernel: stream each distinct routed
+    cluster once per batch against its whole query roster (DESIGN.md
+    §10). Inputs/outputs per the kernel docstring — fold the returned
+    per-roster-slot partial top-k lists with
+    ``engine.merge_cluster_major``."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _fts.fused_topk_score_cluster_major(
+        q_emb_r, q_loc_r, w_st_r, u, roster, buf_emb, buf_loc, buf_ids,
+        w_hat, k=k, dist_max=dist_max, n_total=n_total, block_n=block_n,
+        buf_scale=buf_scale, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k", "interpret"))
 def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,

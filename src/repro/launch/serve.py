@@ -80,7 +80,14 @@ def main(argv=None):
                     help="DEPRECATED alias for --backend pallas "
                          "(warns and forwards)")
     ap.add_argument("--backend", default=None,
-                    choices=["pallas", "dense", "auto"])
+                    choices=["pallas", "pallas-cm", "dense", "dense-cm",
+                             "auto"],
+                    help="engine backend: *-cm forces cluster-major "
+                         "batched execution (each distinct routed "
+                         "cluster streamed once per micro-batch, "
+                         "DESIGN.md §10); auto picks query- vs "
+                         "cluster-major per batch from the measured "
+                         "route dedup factor")
     ap.add_argument("--precision", default=None,
                     choices=list(index_lib.PRECISIONS),
                     help="resident-buffer storage tier (DESIGN.md §9): "
@@ -245,6 +252,9 @@ def main(argv=None):
           f"coalesced={m['coalesced']})")
     print(f"micro-batch : {m['engine_batches']} engine batches, "
           f"fill={m['batch_fill']:.1%}, flushes={m['flushes']}")
+    if m.get("dedup_factor"):
+        print(f"route dedup : {m['dedup_factor']:.1f}x "
+              f"(B*cr / distinct clusters — the cluster-major win)")
     print(f"recall@{args.k} under serving: "
           f"{cm.recall_at_k(served_ids, served_pos, args.k):.4f}")
     return 0

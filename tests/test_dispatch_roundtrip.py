@@ -79,6 +79,96 @@ def test_no_drops_when_capacity_suffices():
     assert int((origin < b * cr).sum()) == b * cr
 
 
+def test_dispatch_degenerate_all_distinct():
+    """U = B·cr: every route its own cluster — one slot per row, no
+    drops even at capacity 1."""
+    b, cr, c = 4, 2, 8
+    top_c = np.arange(8, dtype=np.int32).reshape(b, cr)
+    _, origin, n_dropped = _dispatch(top_c, _unique_payload(b, cr), c, 1)
+    assert n_dropped == 0
+    assert ((origin < b * cr).sum(axis=1) == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# cluster_major_plan: the DISTINCT-cluster roster (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def _plan(top_c, c, **kw):
+    u, roster, n_distinct, n_dropped = serving.cluster_major_plan(
+        jnp.asarray(top_c), n_clusters=c, **kw)
+    return (np.asarray(u), np.asarray(roster), int(n_distinct),
+            int(n_dropped))
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("b,cr,c", [(16, 2, 4), (8, 4, 2), (6, 1, 8)])
+def test_cluster_major_plan_roundtrip_invariants(b, cr, c, seed):
+    """(a) every (query, route) pair is placed exactly once or counted
+    dropped, (b) each roster row holds exactly the pairs routed to its
+    ``u`` cluster, (c) ``n_distinct`` is the realized U and u's live
+    slots are the distinct clusters in ascending order."""
+    rng = np.random.default_rng(seed)
+    top_c = rng.integers(0, c, size=(b, cr)).astype(np.int32)
+    u, roster, n_distinct, n_dropped = _plan(top_c, c)
+    n = b * cr
+    flat = top_c.reshape(-1)
+    distinct = np.unique(flat)
+    assert n_distinct == len(distinct)
+    assert (u[:n_distinct] == distinct).all()      # ascending, deduped
+    placed = roster[roster < n]
+    assert len(set(placed.tolist())) == len(placed)
+    assert len(placed) + n_dropped == n
+    assert n_dropped == 0                          # default qcap = B·cr
+    for slot in range(len(u)):
+        entries = roster[slot][roster[slot] < n]
+        if slot < n_distinct:
+            # exactly the pairs routed to this distinct cluster
+            assert sorted(entries.tolist()) == sorted(
+                np.flatnonzero(flat == u[slot]).tolist())
+        else:
+            assert entries.size == 0               # padding slots empty
+
+
+def test_cluster_major_plan_single_cluster_saturation():
+    """All B·cr routes land on ONE cluster: U=1, roster row 0 saturated.
+    At qcap exactly B·cr nothing drops; one below, exactly one pair
+    drops (the LAST in stable sort order) and is counted."""
+    b, cr, c = 8, 2, 4
+    n = b * cr
+    top_c = np.full((b, cr), 2, np.int32)
+    u, roster, n_distinct, n_dropped = _plan(top_c, c)
+    assert n_distinct == 1 and n_dropped == 0 and u[0] == 2
+    assert sorted(roster[0].tolist()) == list(range(n))    # saturated
+    assert (roster[1:] == n).all()
+    # exact saturation boundary: qcap = n-1 drops exactly one pair
+    u, roster, n_distinct, n_dropped = _plan(top_c, c, qcap=n - 1)
+    assert n_distinct == 1 and n_dropped == 1
+    assert sorted(roster[0].tolist()) == list(range(n - 1))
+
+
+def test_cluster_major_plan_all_distinct():
+    """U = B·cr (every route a different cluster): one entry per roster
+    row, u enumerates them all, qcap=1 suffices with zero drops."""
+    b, cr, c = 4, 2, 8
+    top_c = np.arange(8, dtype=np.int32).reshape(b, cr)
+    u, roster, n_distinct, n_dropped = _plan(top_c, c, qcap=1)
+    assert n_distinct == b * cr and n_dropped == 0
+    assert (u == np.arange(8)).all()
+    assert ((roster < b * cr).sum(axis=1) == 1).all()
+
+
+def test_cluster_major_plan_u_max_truncation_counted():
+    """A caller-forced u_max below the realized U drops whole clusters —
+    counted, never silent."""
+    b, cr, c = 4, 1, 8
+    top_c = np.array([[0], [2], [5], [7]], np.int32)
+    u, roster, n_distinct, n_dropped = _plan(top_c, c, u_max=2)
+    assert n_distinct == 4            # realized U is still reported
+    assert n_dropped == 2             # clusters 5 and 7 fell off the plan
+    assert (u == np.array([0, 2])).all()
+
+
 def test_cluster_dispatch_query_surfaces_drops(rng):
     """End-to-end: return_dropped=True reports the overflow count and the
     dropped queries degrade to empty lists rather than wrong results."""

@@ -159,8 +159,12 @@ def engine_setup():
     return cfg, params, iparams, norm, buf, w_hat
 
 
+@pytest.mark.parametrize("backend", ["pallas", "pallas-cm", "dense-cm"])
 @pytest.mark.parametrize("cr", [1, 2, 4])
-def test_engine_backend_parity_end_to_end(engine_setup, cr, rng):
+def test_engine_backend_parity_end_to_end(engine_setup, cr, backend, rng):
+    """Every non-reference backend — query-major pallas AND the two
+    cluster-major flavors (DESIGN.md §10) — matches the dense oracle
+    through the full encode→route→scan pipeline."""
     cfg, params, iparams, norm, buf, w_hat = engine_setup
     b, k = 8, 5
     tok = jnp.asarray(rng.integers(2, 512, (b, 8)), jnp.int32)
@@ -170,7 +174,7 @@ def test_engine_backend_parity_end_to_end(engine_setup, cr, rng):
          buf["scale"], tok, msk, ql)
     fd = engine.make_query_fn(cfg, cr=cr, k=k, backend="dense",
                               dist_max=DIST_MAX)
-    fp = engine.make_query_fn(cfg, cr=cr, k=k, backend="pallas",
+    fp = engine.make_query_fn(cfg, cr=cr, k=k, backend=backend,
                               interpret=True, dist_max=DIST_MAX)
     i_d, s_d = fd(*a)
     i_p, s_p = fp(*a)
@@ -185,13 +189,15 @@ def test_engine_backend_parity_end_to_end(engine_setup, cr, rng):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.parametrize("backend", ["pallas", "pallas-cm", "dense-cm"])
 @pytest.mark.parametrize("precision", ["bf16", "int8"])
 @pytest.mark.parametrize("cr", [1, 2])
 def test_engine_precision_tier_backend_parity(engine_setup, precision, cr,
-                                              rng):
-    """Within a precision tier the two backends must agree: the kernel
-    dequantizes in VMEM with the same per-row scales the dense path
-    applies after its gather."""
+                                              backend, rng):
+    """Within a precision tier every backend must agree with the dense
+    reference: the kernels (query- AND cluster-major) dequantize in VMEM
+    with the same per-row scales the dense paths apply after their
+    gathers."""
     from repro.core import index as il2
     cfg, params, iparams, norm, buf, w_hat = engine_setup
     qbuf = il2.quantize_buffers(buf, precision)
@@ -205,7 +211,7 @@ def test_engine_precision_tier_backend_parity(engine_setup, precision, cr,
          qbuf["ids"], qbuf["scale"], tok, msk, ql)
     fd = engine.make_query_fn(cfg, cr=cr, k=k, backend="dense",
                               dist_max=DIST_MAX, precision=precision)
-    fp = engine.make_query_fn(cfg, cr=cr, k=k, backend="pallas",
+    fp = engine.make_query_fn(cfg, cr=cr, k=k, backend=backend,
                               interpret=True, dist_max=DIST_MAX,
                               precision=precision)
     i_d, s_d = fd(*a)
@@ -364,3 +370,16 @@ def test_pallas_jaxpr_has_no_candidate_gather(engine_setup, rng):
     assert max(pallas_sizes) < cand_size, (
         f"pallas path has an intermediate ≥ candidate copy: "
         f"{max(pallas_sizes)} vs {cand_size}")
+    # cluster-major goes FURTHER: its largest intermediate is bounded by
+    # the distinct-cluster working set min(B·cr, c)·cap·d — smaller than
+    # the query-major candidate copy whenever the batch saturates the
+    # cluster set (here 4 < 16 routed scans). This bound assumes the
+    # roster payload fits it, i.e. B·cr ≤ cap (here 16 ≤ 64) — exactly
+    # the regime engine.cluster_major_feasible admits for auto
+    cm_sizes = sizes("pallas-cm")
+    c = buf["emb"].shape[0]
+    cm_bound = min(b * cr, c) * cap * d
+    assert cand_size not in cm_sizes
+    assert max(cm_sizes) <= cm_bound < cand_size, (
+        f"cluster-major intermediate {max(cm_sizes)} exceeds the "
+        f"distinct-cluster working set {cm_bound}")
