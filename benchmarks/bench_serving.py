@@ -5,9 +5,16 @@ against a trained retriever.
 Emits ``BENCH_serving.json`` (schema documented in README.md
 §Benchmarks) to start the serving perf trajectory: latency percentiles
 p50/p95/p99, achieved QPS, cache hit rate per tier, micro-batch fill —
-plus a pure cache-replay pass that bounds the hot-set ceiling, and the
+plus a pure cache-replay pass that bounds the hot-set ceiling, the
 artifact-lifecycle costs (snapshot save / load / atomic hot-swap
-seconds) a deploy pipeline budgets around.
+seconds) a deploy pipeline budgets around, and a **sustained-churn**
+scenario for the LSM write path (DESIGN.md §11): rounds of
+insert/delete/query applied identically to a delta server and to an
+eager (``delta_threshold=0``, O(index)-per-write) twin. The churn
+section carries an ``acceptance`` block — write cost O(batch) not
+O(index) (speedup bound), p99 flat across rounds, recall within 0.005
+of the always-folded oracle, post-compaction top-k overlap — gated in
+CI (.github/workflows/ci.yml).
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--fast]
 """
@@ -38,6 +45,13 @@ REQUESTS_PER_UNIQUE = 5
 JITTER_FRAC = 0.3          # requests re-issued a few meters away: these
 JITTER = 0.002             # miss the exact tier but hit the near tier
 
+# --- sustained-churn scenario (writes + queries, DESIGN.md §11) -----------
+CHURN_ROUNDS = 10
+CHURN_INSERTS = 32         # new objects per round
+CHURN_DELETES = 16         # tombstoned base objects per round
+CHURN_QUERIES = 128        # served queries per round
+CHURN_DELTA_THRESHOLD = 192  # 48 writes/round ⇒ size-compaction ~every 4
+
 
 def _replay(server, corpus, picks, *, jitter_rng=None):
     tok, msk = corpus.query_tokens(picks)
@@ -52,6 +66,144 @@ def _replay(server, corpus, picks, *, jitter_rng=None):
     results = asyncio.run(server_lib.closed_loop(server, requests,
                                                  concurrency=BATCH))
     return results, time.perf_counter() - t0
+
+
+def _churn(corpus, te, snap0):
+    """A/B the LSM write path under sustained churn.
+
+    The SAME mutation + query log runs against two fresh servers over
+    ``snap0``: one with delta segments (size-triggered background
+    compaction) and an eager twin (``delta_threshold=0``) that folds
+    every write into the base buffers — the always-compacted oracle.
+    Per round: insert CHURN_INSERTS synthetic objects, tombstone
+    CHURN_DELETES never-relevant base objects, then serve CHURN_QUERIES
+    Zipf-skewed queries. Medians make the numbers robust to the one-off
+    compile spikes (round-1 traces) and the rounds whose write absorbs
+    an inline compaction."""
+    rng = np.random.default_rng(common.SEED + 71)
+    base_ids = np.asarray(snap0.buffers["ids"])
+    base_emb = np.asarray(snap0.buffers["emb"], np.float32)
+    live = base_emb[base_ids >= 0]
+    mu, sd = float(live.mean()), float(live.std())
+    d = base_emb.shape[-1]
+
+    # deletions only ever hit objects that are not a positive of any
+    # served query, so recall is comparable across rounds
+    protected = set()
+    for q in te:
+        protected.update(int(i) for i in corpus.positives[q])
+    pool = [i for i in range(corpus.cfg.n_objects) if i not in protected]
+    rng.shuffle(pool)
+    assert len(pool) >= CHURN_ROUNDS * CHURN_DELETES
+
+    def mk(threshold):
+        srv = api.Searcher(snap0).serve(server_lib.ServerConfig(
+            batch_size=BATCH, max_delay_ms=MAX_DELAY_MS, k=K, cr=CR,
+            near_cells=NEAR_CELLS, delta_threshold=threshold))
+        srv.warmup()
+        return srv
+
+    servers = {"delta": mk(CHURN_DELTA_THRESHOLD), "eager": mk(0)}
+    w_ms = {name: [] for name in servers}
+    p99_ms = {name: [] for name in servers}
+    rec = {name: [] for name in servers}
+    next_id = 10_000_000
+    for _ in range(CHURN_ROUNDS):
+        emb = (mu + sd * rng.standard_normal((CHURN_INSERTS, d))
+               ).astype(np.float32)
+        loc = rng.uniform(size=(CHURN_INSERTS, 2)).astype(np.float32)
+        new_ids = np.arange(next_id, next_id + CHURN_INSERTS)
+        next_id += CHURN_INSERTS
+        victims = [pool.pop() for _ in range(CHURN_DELETES)]
+        picks = te[server_lib.zipf_sample(rng, len(te), CHURN_QUERIES,
+                                          a=SKEW)]
+        tok, msk = corpus.query_tokens(picks)
+        qloc = corpus.q_loc[picks].astype(np.float32)
+        pos = [corpus.positives[q] for q in picks]
+        for name, srv in servers.items():
+            t0 = time.perf_counter()
+            srv.insert_objects(emb, loc, new_ids)
+            srv.delete_objects(victims)
+            w_ms[name].append((time.perf_counter() - t0) * 1e3)
+            n0 = len(srv.stats.latencies_s)
+            out_ids, _ = srv.serve_all(tok, msk, qloc)
+            lat = np.asarray(list(srv.stats.latencies_s)[n0:], np.float64)
+            p99_ms[name].append(float(np.percentile(lat, 99) * 1e3))
+            rec[name].append(cm.recall_at_k(out_ids, pos, K))
+
+    # post-compaction parity probe: the pending delta folds into base
+    # and the SAME queries must surface (essentially) the same ids.
+    # Full fan-out (cr = n_clusters) so the probe measures compaction
+    # parity, not routing: pre-compaction delta rows are scanned
+    # exhaustively while folded rows live in exactly one cluster, so at
+    # cr=1 a boundary row can legitimately drop out of a cell the query
+    # does not route to — that effect is recall (measured above), not a
+    # compaction bug.
+    srv = servers["delta"]
+    pending = int(srv.engine.snapshot.meta.delta_rows)
+    n_clusters = base_emb.shape[0]
+    probe = te[:min(len(te), CHURN_QUERIES)]
+    tokp, mskp = corpus.query_tokens(probe)
+    locp = corpus.q_loc[probe].astype(np.float32)
+    ids_pre, _ = srv.engine.query(tokp, mskp, locp, k=K, cr=n_clusters,
+                                  batch=BATCH)
+    t0 = time.perf_counter()
+    srv.compact_now()
+    compact_ms = (time.perf_counter() - t0) * 1e3
+    ids_post, _ = srv.engine.query(tokp, mskp, locp, k=K, cr=n_clusters,
+                                   batch=BATCH)
+    overlap = float(np.mean([
+        len(set(a[a >= 0]) & set(b[b >= 0])) / max(1, len(set(a[a >= 0])))
+        for a, b in zip(ids_pre, ids_post)]))
+
+    # p99 flatness over rounds, skipping round 1 (plan-tracing spike)
+    head = float(np.mean(p99_ms["delta"][1:4]))
+    tail = float(np.mean(p99_ms["delta"][-3:]))
+    w_med = {name: float(np.median(v)) for name, v in w_ms.items()}
+    acceptance = {
+        "write_speedup": w_med["eager"] / max(w_med["delta"], 1e-9),
+        "write_speedup_min": 2.0,
+        "recall_delta": float(np.mean(rec["delta"]) - np.mean(rec["eager"])),
+        "recall_delta_min": -0.005,
+        "p99_ratio": tail / max(head, 1e-9),
+        "p99_ratio_max": 5.0,
+        "post_compaction_overlap": overlap,
+        "overlap_min": 0.999,
+    }
+    acceptance["pass"] = bool(
+        acceptance["write_speedup"] >= acceptance["write_speedup_min"]
+        and acceptance["recall_delta"] >= acceptance["recall_delta_min"]
+        and acceptance["p99_ratio"] <= acceptance["p99_ratio_max"]
+        and acceptance["post_compaction_overlap"] >= acceptance["overlap_min"])
+
+    m = srv.metrics()
+    churn = {
+        "rounds": CHURN_ROUNDS,
+        "inserts_per_round": CHURN_INSERTS,
+        "deletes_per_round": CHURN_DELETES,
+        "queries_per_round": CHURN_QUERIES,
+        "delta_threshold": CHURN_DELTA_THRESHOLD,
+        "write_ms_median": w_med,
+        "write_ms_per_round": w_ms,
+        "p99_ms_per_round": p99_ms,
+        "recall_at_k_per_round": rec,
+        "writes": m["writes"],
+        "compactions": m["compactions"],
+        "compaction_triggers": m["compaction_triggers"],
+        "pending_delta_rows_at_probe": pending,
+        "compact_now_ms": compact_ms,
+        "acceptance": acceptance,
+    }
+    row = common.fmt_row("serving(churn)", {
+        "write_ms(delta)": w_med["delta"],
+        "write_ms(eager)": w_med["eager"],
+        "write_speedup": acceptance["write_speedup"],
+        "p99_ratio": acceptance["p99_ratio"],
+        f"recall@{K}": float(np.mean(rec["delta"])),
+        "recall_delta": acceptance["recall_delta"],
+        "overlap": acceptance["post_compaction_overlap"],
+        "pass": int(acceptance["pass"])})
+    return churn, row
 
 
 def run(out_path: str = OUT_PATH):
@@ -100,6 +252,9 @@ def run(out_path: str = OUT_PATH):
                    "swap_ms": t_swap * 1e3,
                    "version_after_swap": server.engine.snapshot.meta.version}
 
+    # --- sustained churn: delta write path vs eager twin ------------------
+    churn, churn_row = _churn(corpus, te, snap)
+
     report = {
         "bench": "serving",
         "config": {
@@ -129,6 +284,7 @@ def run(out_path: str = OUT_PATH):
             "hit_rate": m_hot["hit_rate"],
         },
         "snapshot": snapshot_ms,
+        "churn": churn,
     }
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
@@ -148,6 +304,7 @@ def run(out_path: str = OUT_PATH):
             "save_ms": snapshot_ms["save_ms"],
             "load_ms": snapshot_ms["load_ms"],
             "swap_ms": snapshot_ms["swap_ms"]}),
+        churn_row,
         common.fmt_row("serving(json)", {"path": out_path}),
     ]
     return rows

@@ -22,6 +22,13 @@ snapshot, on every backend (tests/test_snapshot.py), and a snapshot
 published to a live server swaps atomically — zero torn or failed
 requests (core/server.py).
 
+Writes go through the server's LSM-style delta path (DESIGN.md §11):
+``server.insert_objects`` / ``delete_objects`` are O(batch) — rows
+append to the snapshot's delta segment, deletes tombstone, queries
+merge both with the base, and background compaction folds the delta
+into the cluster buffers past a threshold. A snapshot with pending
+mutations round-trips through save/load like any other (schema v3).
+
 ``python -m repro.api`` runs the save→load→query round-trip self-test
 on a small random index (``make snapshot-roundtrip``).
 """
@@ -251,6 +258,27 @@ def _roundtrip_selftest(directory: Optional[str] = None) -> int:
             print(f"snapshot-roundtrip [{backend:9s}|{precision:4s}] "
                   f"{'bit-identical' if ok else 'MISMATCH'}  ({path})")
             failures += 0 if ok else 1
+        # delta leg (schema v3): a snapshot with pending mutations must
+        # round-trip and serve identically before and after the trip
+        from repro.core import delta as delta_lib
+        seg = delta_lib.DeltaSegment.empty(cfg.d_model, precision)
+        seg = seg.insert(rng.normal(size=(3, cfg.d_model)).astype(np.float32),
+                         rng.uniform(size=(3, 2)).astype(np.float32),
+                         np.arange(9000, 9003))
+        seg = seg.delete([0, 1])
+        snap_d = snap_p.with_delta(seg)
+        tmp_d = os.path.join(root, precision + "-delta")
+        save(snap_d, tmp_d)
+        loaded_d = load(tmp_d)
+        assert loaded_d.meta == snap_d.meta, (loaded_d.meta, snap_d.meta)
+        a = Searcher(snap_d, backend="dense").query(tok, msk, loc, k=5,
+                                                    cr=2, batch=4)
+        b = Searcher(loaded_d, backend="dense").query(tok, msk, loc, k=5,
+                                                      cr=2, batch=4)
+        ok = (np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1]))
+        print(f"snapshot-roundtrip [delta    |{precision:4s}] "
+              f"{'bit-identical' if ok else 'MISMATCH'}")
+        failures += 0 if ok else 1
     return failures
 
 

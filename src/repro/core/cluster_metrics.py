@@ -12,10 +12,22 @@ def imbalance_factor(obj_assign, n_clusters: int) -> float:
     paper tabulates, e.g. 1.3–1.5 for c=20.)
     """
     sizes = np.bincount(np.asarray(obj_assign), minlength=n_clusters)
+    return imbalance_factor_from_counts(sizes)
+
+
+def imbalance_factor_from_counts(counts) -> float:
+    """IF(C) from the per-cluster size vector directly (uniform = 1.0).
+
+    The serving stack's compaction trigger uses this on the buffers'
+    live ``counts`` (core/server.py) — the assignment vector of
+    :func:`imbalance_factor` doesn't exist for a mutated index whose
+    objects never lived in one array.
+    """
+    sizes = np.asarray(counts, np.float64)
     tot = sizes.sum()
     if tot == 0:
         return 0.0
-    return float((sizes.astype(np.float64) ** 2).sum() / tot**2 * n_clusters)
+    return float((sizes ** 2).sum() / tot**2 * sizes.shape[0])
 
 
 def cluster_precision(q_assign, positives, obj_assign, n_clusters: int):

@@ -1,0 +1,192 @@
+"""Delta segment: the mutable half of the LSM-style mutation path.
+
+The base index is an immutable ``IndexSnapshot`` — cheap to share, cheap
+to serve, expensive to mutate (`insert_objects` rewrites (c, cap, d)
+buffers, O(index) per write batch). A :class:`DeltaSegment` is the small
+mutable overlay in front of it:
+
+* ``insert`` appends a chunk of rows in O(batch) — prior chunks are
+  shared structurally, nothing is copied or re-routed;
+* ``delete`` records ids in a **tombstone** set (applied to BASE results
+  at query time) and physically drops any delta-resident rows with those
+  ids, so delta rows are always live and never need tombstone filtering;
+* queries brute-force scan the delta (it is small by construction — the
+  server compacts it past a threshold) and merge into the base top-k
+  (``engine.merge_delta``);
+* compaction (:meth:`IndexSnapshot.compact`) folds tombstones + delta
+  rows into a fresh base via the §4.3 delete/insert policy and clears
+  the delta — one version bump, query results unchanged.
+
+Rows are quantized to the snapshot's precision tier on the way IN (the
+same ``quantize_rows`` the buffers use) so a delta-resident object
+scores identically before and after compaction; the raw f32 rows are
+kept alongside so compaction re-quantizes from the exact source instead
+of compounding error.
+
+Everything here is host-side numpy; the jitted scan lives in
+``core/engine.make_delta_scan_fn``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import ml_dtypes
+import numpy as np
+
+from repro.core.index import PAD_LOC, PRECISIONS, quantize_rows
+
+_STORE_DTYPE = {"f32": np.float32, "bf16": ml_dtypes.bfloat16,
+                "int8": np.int8}
+
+# chunk / concatenated-array field names, in canonical order
+FIELDS = ("emb", "scale", "loc", "ids", "raw")
+
+
+def _empty_arrays(d: int, precision: str) -> Dict[str, np.ndarray]:
+    return {
+        "emb": np.zeros((0, d), _STORE_DTYPE[precision]),
+        "scale": np.zeros((0,), np.float32),
+        "loc": np.zeros((0, 2), np.float32),
+        "ids": np.zeros((0,), np.int32),
+        "raw": np.zeros((0, d), np.float32),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaSegment:
+    """Immutable value type: every mutation returns a NEW segment.
+
+    ``chunks`` is a tuple of per-insert row blocks (dicts over
+    :data:`FIELDS`); appending shares all prior chunks, so an insert is
+    O(batch) regardless of how much the delta already holds. ``ids_live``
+    is the set of delta-resident ids (O(1) duplicate checks);
+    ``tombstones`` the ids deleted from the BASE since the last
+    compaction.
+    """
+
+    d: int
+    precision: str = "f32"
+    chunks: Tuple[Dict[str, np.ndarray], ...] = ()
+    ids_live: frozenset = frozenset()
+    tombstones: frozenset = frozenset()
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def empty(cls, d: int, precision: str = "f32") -> "DeltaSegment":
+        if precision not in PRECISIONS:
+            raise ValueError(f"precision must be one of {PRECISIONS}, "
+                             f"got {precision!r}")
+        return cls(d=int(d), precision=precision)
+
+    # -- inspection ---------------------------------------------------------
+
+    @property
+    def n_rows(self) -> int:
+        return sum(c["ids"].shape[0] for c in self.chunks)
+
+    @property
+    def n_tombstones(self) -> int:
+        return len(self.tombstones)
+
+    @property
+    def is_empty(self) -> bool:
+        return not self.chunks and not self.tombstones
+
+    def arrays(self) -> Dict[str, np.ndarray]:
+        """Concatenated row arrays (memoized; cheap when chunks are few)."""
+        memo = self.__dict__.get("_arrays")
+        if memo is None:
+            if not self.chunks:
+                memo = _empty_arrays(self.d, self.precision)
+            else:
+                memo = {f: np.concatenate([c[f] for c in self.chunks])
+                        for f in FIELDS}
+            object.__setattr__(self, "_arrays", memo)
+        return memo
+
+    def tombstone_array(self) -> np.ndarray:
+        """Sorted int64 id array (np.isin-friendly)."""
+        return np.sort(np.fromiter(self.tombstones, np.int64,
+                                   len(self.tombstones)))
+
+    # -- mutations ----------------------------------------------------------
+
+    def insert(self, new_emb, new_loc, new_ids) -> "DeltaSegment":
+        """Append a batch of rows. O(batch): prior chunks are shared."""
+        raw = np.asarray(new_emb, np.float32).reshape(-1, self.d)
+        loc = np.asarray(new_loc, np.float32).reshape(-1, 2)
+        ids = np.asarray(new_ids, np.int32).reshape(-1)
+        if not (raw.shape[0] == loc.shape[0] == ids.shape[0]):
+            raise ValueError("insert: emb/loc/ids batch sizes disagree")
+        if (ids < 0).any():
+            raise ValueError("insert: ids must be non-negative "
+                             "(-1 is the padding sentinel)")
+        dup = self.ids_live.intersection(ids.tolist())
+        if dup or len(set(ids.tolist())) != ids.shape[0]:
+            raise ValueError(f"insert: duplicate ids in delta: "
+                             f"{sorted(dup) or 'within batch'}")
+        stored, scale = quantize_rows(raw, self.precision)
+        chunk = {"emb": stored, "scale": scale.astype(np.float32),
+                 "loc": loc, "ids": ids, "raw": raw}
+        return dataclasses.replace(
+            self, chunks=self.chunks + (chunk,),
+            ids_live=self.ids_live.union(ids.tolist()))
+
+    def delete(self, del_ids) -> "DeltaSegment":
+        """Tombstone ids for the base; drop matching delta rows physically.
+
+        Ids need not be live — deleting an unknown id is a no-op beyond
+        the (harmless) tombstone entry.
+        """
+        dels = set(int(i) for i in np.asarray(del_ids).reshape(-1))
+        in_delta = self.ids_live.intersection(dels)
+        chunks = self.chunks
+        if in_delta:
+            kill = np.fromiter(in_delta, np.int64, len(in_delta))
+            new_chunks = []
+            for c in chunks:
+                keep = ~np.isin(c["ids"], kill)
+                if keep.all():
+                    new_chunks.append(c)
+                elif keep.any():
+                    new_chunks.append({f: c[f][keep] for f in FIELDS})
+            chunks = tuple(new_chunks)
+        return dataclasses.replace(
+            self, chunks=chunks,
+            ids_live=self.ids_live.difference(dels),
+            tombstones=self.tombstones.union(dels))
+
+    # -- serialization (snapshot schema v3) ---------------------------------
+
+    def to_leaves(self) -> Dict[str, np.ndarray]:
+        """Canonical single-chunk array dict + tombstones, for checkpointing."""
+        leaves = dict(self.arrays())
+        leaves["tombstones"] = self.tombstone_array()
+        return leaves
+
+    @classmethod
+    def from_leaves(cls, d: int, precision: str, leaves) -> "DeltaSegment":
+        arrs = {f: np.asarray(leaves[f]) for f in FIELDS}
+        arrs["emb"] = arrs["emb"].astype(_STORE_DTYPE[precision])
+        tomb = frozenset(int(i) for i in np.asarray(leaves["tombstones"]))
+        chunks = (arrs,) if arrs["ids"].shape[0] else ()
+        return cls(d=int(d), precision=precision, chunks=chunks,
+                   ids_live=frozenset(int(i) for i in arrs["ids"]),
+                   tombstones=tomb)
+
+
+def live_counts(buffers, delta: "DeltaSegment | None") -> np.ndarray:
+    """Effective per-cluster live sizes of the BASE: counts minus
+    tombstoned rows still physically resident. O(index) — only call on
+    slow paths (compaction-trigger checks with ``max_imbalance`` set)."""
+    counts = np.asarray(buffers["counts"]).astype(np.int64).copy()
+    if delta is not None and delta.tombstones:
+        ids = np.asarray(buffers["ids"])
+        dead = np.isin(ids, delta.tombstone_array()) & (ids >= 0)
+        counts -= dead.sum(axis=-1)
+    return counts
+
+
+__all__ = ["DeltaSegment", "live_counts", "FIELDS", "PAD_LOC"]

@@ -117,6 +117,16 @@ CLUSTER_MAJOR_DEDUP_THRESHOLD = 2.0
 # traced plans an engine keeps before evicting least-recently-used ones
 DEFAULT_PLAN_CACHE_SIZE = 32
 
+# delta-segment scans pad the row count up to a multiple of this, so a
+# growing delta retraces the scan once per bucket, not once per insert
+DELTA_PAD_BUCKET = 128
+
+# when a snapshot carries tombstones, the base top-k is over-fetched by
+# the tombstone count (rounded up to this bucket — bounded recompiles):
+# every tombstone can knock one entry out of the base list, so fetching
+# k + n_tombstones guarantees the post-filter top-k is exact
+TOMBSTONE_K_BUCKET = 32
+
 
 # ---------------------------------------------------------------------------
 # Backend selection
@@ -466,6 +476,97 @@ def make_route_fn(cfg, *, cr: int = 1):
 
 
 # ---------------------------------------------------------------------------
+# Delta-segment scan + merge (the LSM mutation path, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def make_delta_scan_fn(cfg, *, k: int = 20, dist_max: float = 1.4142,
+                       weight_mode: str = "mlp", precision: str = "f32"):
+    """Build the jitted brute-force scan over a delta segment's rows.
+
+    The delta is small by construction (the server compacts it past a
+    threshold), so it is scored WITHOUT routing: every query sees every
+    delta row — a freshly inserted object can never be hidden by a
+    routing miss before compaction folds it into its cluster.
+
+    signature: fn(rel_params, w_hat, d_emb (m, d), d_scale (m,),
+                  d_loc (m, 2), d_ids (m,), q_tokens, q_mask, q_loc)
+               -> (ids (B, k), scores (B, k))
+
+    with the usual ``(-1, NEG_INF)`` padding convention; padding rows in
+    the delta arrays (``ids == -1``) mask exactly like buffer padding.
+    Scoring goes through :func:`score_candidates` with the same
+    precision semantics as the base backends, so a row scores
+    bit-identically whether it is delta-resident or compacted (same
+    stored quantized values, same dequant, same ST form).
+    """
+    if precision not in index_lib.PRECISIONS:
+        raise ValueError(f"precision must be one of {index_lib.PRECISIONS}, "
+                         f"got {precision!r}")
+
+    def scan_fn(rel_params, w_hat, d_emb, d_scale, d_loc, d_ids,
+                q_tokens, q_mask, q_loc):
+        q_emb = relevance.encode_queries(rel_params, q_tokens, q_mask, cfg)
+        w = relevance.st_weights(rel_params, q_emb, weight_mode=weight_mode)
+        scale = d_scale[None] if precision == "int8" else None
+        st = score_candidates(q_emb, q_loc, w, d_emb[None], d_loc[None],
+                              d_ids[None], w_hat, dist_max=dist_max,
+                              cand_scale=scale)             # (B, m)
+        kk = min(k, d_emb.shape[0])
+        vals, pos = jax.lax.top_k(st, kk)
+        ids = jnp.take(d_ids, pos).astype(jnp.int32)
+        if kk < k:
+            pad = ((0, 0), (0, k - kk))
+            vals = jnp.pad(vals, pad, constant_values=NEG_INF)
+            ids = jnp.pad(ids, pad, constant_values=-1)
+        return ids, vals
+
+    return jax.jit(scan_fn)
+
+
+def merge_delta(base_ids, base_scores, delta_ids=None, delta_scores=None, *,
+                tombstones=None, k=None):
+    """Merge a delta scan's partial top-k into the base engine's (host).
+
+    ``tombstones`` (sorted id array) is applied to the BASE lists only —
+    tombstoned entries become ``(-1, NEG_INF)`` pairs and sink out of
+    the top-k. Delta rows are live by construction (``DeltaSegment.delete``
+    drops them physically), so the delta lists are merged unfiltered.
+
+    Ids may appear in both lists only if the same id was inserted twice
+    without an intervening delete — a contract violation upstream
+    (``DeltaSegment.insert`` raises on delta-resident duplicates).
+
+    The sort is stable with base entries first: on an exact score tie
+    the base row wins, matching the "earlier candidate wins" tie rule of
+    ``jax.lax.top_k`` inside the backends. ``k`` defaults to the base
+    list width; pass it explicitly when the base lists were over-fetched
+    to absorb tombstone kills (:data:`TOMBSTONE_K_BUCKET`). Returns
+    ``(ids (B, k) i32, scores (B, k) f32 descending)`` — the engine's
+    output contract.
+    """
+    base_ids = np.asarray(base_ids)
+    base_scores = np.asarray(base_scores, np.float32)
+    if k is None:
+        k = base_ids.shape[-1]
+    if tombstones is not None and len(tombstones):
+        dead = np.isin(base_ids, np.asarray(tombstones))
+        base_ids = np.where(dead, -1, base_ids)
+        base_scores = np.where(dead, NEG_INF, base_scores)
+    if delta_ids is None:
+        cat_i = base_ids
+        cat_v = base_scores
+    else:
+        cat_i = np.concatenate([base_ids, np.asarray(delta_ids)], axis=-1)
+        cat_v = np.concatenate(
+            [base_scores, np.asarray(delta_scores, np.float32)], axis=-1)
+    order = np.argsort(-cat_v, axis=-1, kind="stable")[..., :k]
+    ids = np.take_along_axis(cat_i, order, axis=-1).astype(np.int32)
+    scores = np.take_along_axis(cat_v, order, axis=-1).astype(np.float32)
+    return ids, scores
+
+
+# ---------------------------------------------------------------------------
 # Static-shape batch padding (one compile per batch shape)
 # ---------------------------------------------------------------------------
 
@@ -576,6 +677,7 @@ class QueryEngine:
         self.max_plans = int(max_plans)
         self._plans: "collections.OrderedDict" = collections.OrderedDict()
         self._route_plans = {}          # keyed cr: tiny, never evicted
+        self._delta_plans = {}          # keyed (k, precision): tiny too
 
     # --- construction -----------------------------------------------------
 
@@ -742,6 +844,39 @@ class QueryEngine:
         return cluster_major_variant(base, dedup,
                                      threshold=self.cm_threshold)
 
+    def delta_scan_fn(self, *, k: int, precision: str):
+        """The jitted delta scan plan for ``(k, precision)``. Retraces
+        lazily per padded row-count bucket (:data:`DELTA_PAD_BUCKET`)."""
+        key = (k, precision)
+        if key not in self._delta_plans:
+            self._delta_plans[key] = make_delta_scan_fn(
+                self.cfg, k=k, dist_max=self.dist_max,
+                weight_mode=self.weight_mode, precision=precision)
+        return self._delta_plans[key]
+
+    def _scan_delta(self, snap, q_tokens, q_mask, q_loc, *, k: int,
+                    batch: int):
+        """Brute-force scan the pinned snapshot's delta rows: every
+        query × every delta row, padded to the bucketed static shape."""
+        arrs = snap.delta.arrays()
+        m = arrs["ids"].shape[0]
+        m_pad = -(-m // DELTA_PAD_BUCKET) * DELTA_PAD_BUCKET
+        emb = np.zeros((m_pad,) + arrs["emb"].shape[1:], arrs["emb"].dtype)
+        emb[:m] = arrs["emb"]
+        scale = np.ones((m_pad,), np.float32)
+        scale[:m] = arrs["scale"]
+        loc = np.full((m_pad, 2), index_lib.PAD_LOC, np.float32)
+        loc[:m] = arrs["loc"]
+        ids = np.full((m_pad,), -1, np.int32)
+        ids[:m] = arrs["ids"]
+        fn = self.delta_scan_fn(k=k, precision=snap.meta.precision)
+        w_hat = snap.w_hat
+        de, ds, dl, di = (jnp.asarray(a) for a in (emb, scale, loc, ids))
+        return run_batched(
+            lambda t, mk, l: fn(snap.rel_params, w_hat, de, ds, dl, di,
+                                t, mk, l),
+            [q_tokens, q_mask, q_loc], batch=batch)
+
     def query(self, q_tokens, q_mask, q_loc, *, k: int = 20, cr: int = 1,
               batch: int = 256, backend: Optional[str] = None,
               snapshot=None):
@@ -753,6 +888,13 @@ class QueryEngine:
         The plan is selected for the pinned snapshot's precision tier;
         an auto engine additionally picks query- vs cluster-major per
         batch (:meth:`pick_backend`) unless ``backend`` overrides it.
+
+        When the pinned snapshot carries a delta segment (DESIGN.md
+        §11), the base results are post-processed on the host: the delta
+        rows are scanned (:meth:`_scan_delta`, same ``batch``), the base
+        lists tombstone-filtered, and both merged by
+        :func:`merge_delta`. A compacted (or delta-free) snapshot skips
+        all of it — the fast path is byte-identical to before.
         """
         snap = self._snapshot if snapshot is None else snapshot
         # the per-batch cluster-major pick engages whenever the request
@@ -765,12 +907,33 @@ class QueryEngine:
             backend = self.pick_backend(q_tokens, q_mask, q_loc, cr=cr,
                                         batch=batch, snapshot=snap,
                                         base=base)
-        fn = self.query_fn(k=k, cr=cr, backend=backend, batch=batch,
-                           precision=snap.meta.precision)
         buf = snap.buffers
+        delta = getattr(snap, "delta", None)
+        use_delta = delta is not None and not delta.is_empty
+        # every tombstone can kill one base entry, so over-fetch the
+        # base list by the tombstone count (bucketed — bounded
+        # recompiles; capped by the routed candidate pool) and trim back
+        # to k after the merge: the post-filter top-k is then exactly
+        # what a compacted snapshot would return
+        k_fetch = k
+        if use_delta and delta.n_tombstones:
+            extra = (-(-delta.n_tombstones // TOMBSTONE_K_BUCKET)
+                     * TOMBSTONE_K_BUCKET)
+            pool = cr * int(buf["capacity"])
+            k_fetch = max(k, min(k + extra, pool))
+        fn = self.query_fn(k=k_fetch, cr=cr, backend=backend, batch=batch,
+                           precision=snap.meta.precision)
         w_hat = snap.w_hat          # once per call, not per chunk
-        return run_batched(
+        ids, scores = run_batched(
             lambda t, m, l: fn(snap.rel_params, snap.index_params,
                                w_hat, snap.norm, buf["emb"], buf["loc"],
                                buf["ids"], buf["scale"], t, m, l),
             [q_tokens, q_mask, q_loc], batch=batch)
+        if not use_delta:
+            return ids, scores
+        d_ids = d_scores = None
+        if delta.n_rows:
+            d_ids, d_scores = self._scan_delta(snap, q_tokens, q_mask,
+                                               q_loc, k=k, batch=batch)
+        return merge_delta(ids, scores, d_ids, d_scores,
+                           tombstones=delta.tombstone_array(), k=k)

@@ -42,6 +42,12 @@ from repro.models import layers
 
 PRECISIONS = ("f32", "bf16", "int8")
 
+# Padding sentinel for ``loc`` rows: far enough outside any normalized
+# corpus extent that a padded slot can never look spatially relevant.
+# Both the build path and the mutation path MUST use the same value, or
+# a mutated index diverges bit-wise from a rebuilt one.
+PAD_LOC = 1e6
+
 
 # ---------------------------------------------------------------------------
 # Feature construction (Eq. 9–10)
@@ -237,7 +243,7 @@ def build_cluster_buffers(assign_top, emb, loc, *, n_clusters: int,
     valid = ids >= 0
     # zero out padding so fused scores on pads are harmless (masked anyway)
     buf_emb[~valid] = 0.0
-    buf_loc[~valid] = 1e6
+    buf_loc[~valid] = PAD_LOC
     buf_emb, buf_scale = quantize_rows(buf_emb, precision)
     return {
         "emb": jnp.asarray(buf_emb), "loc": jnp.asarray(buf_loc),
@@ -260,12 +266,16 @@ def route_queries(params, q_feats, *, cr: int = 1):
 # ---------------------------------------------------------------------------
 
 
-def insert_objects(buffers, params, norm, new_emb, new_loc, new_ids):
+def insert_objects(buffers, params, norm, new_emb, new_loc, new_ids, *,
+                   spill: int = 3):
     """Route new objects through the trained index into their buffers.
 
-    Falls back to the least-loaded cluster when the routed one is full;
-    if even that cluster has no free slot (the whole index is at
-    capacity) a ValueError is raised. Writes go to the first FREE slot
+    Placement mirrors :func:`build_cluster_buffers` (paper §4.3): each
+    object walks its top-``spill`` preferred clusters best-first and
+    lands in the first with a free slot; only when ALL spill hops are
+    full does it fall back to the least-loaded cluster. If even that
+    cluster has no free slot (the whole index is at capacity) a
+    ValueError is raised. Writes go to the first FREE slot
     (``id == -1``) rather than ``counts[ci]`` — after delete_objects a
     cluster has interior holes, and slot ``counts[ci]`` may hold a live
     object (regression: tests/test_index_mutation.py).
@@ -275,21 +285,29 @@ def insert_objects(buffers, params, norm, new_emb, new_loc, new_ids):
     so an insert never changes the buffer's storage dtype.
     """
     feats = build_features(new_emb, new_loc, norm)
-    cl = np.asarray(assign_clusters(params, feats))
+    n_clusters = int(np.asarray(buffers["counts"]).shape[0])
+    hops = max(1, min(int(spill), n_clusters))
+    cl = np.asarray(assign_clusters(params, feats, top=hops))
+    if cl.ndim == 1:
+        cl = cl[:, None]
     emb_np = {k: np.asarray(v).copy() for k, v in buffers.items()
               if k in ("emb", "loc", "ids", "scale")}
     counts = np.asarray(buffers["counts"]).copy()
     cap = buffers["capacity"]
     q_emb, q_scale = quantize_rows(np.asarray(new_emb, np.float32),
                                    buffers.get("precision", "f32"))
-    for j, ci in enumerate(cl):
-        ci = int(ci)
-        if counts[ci] >= cap:
+    for j in range(cl.shape[0]):
+        ci = -1
+        for h in range(cl.shape[1]):          # spill hops, best first
+            if counts[int(cl[j, h])] < cap:
+                ci = int(cl[j, h])
+                break
+        if ci < 0:
             ci = int(np.argmin(counts))       # least-loaded fallback
         if counts[ci] >= cap:                 # fallback full too: all full
             raise ValueError(
                 f"insert_objects: all clusters at capacity {cap} "
-                f"(inserted {j}/{len(cl)}); rebuild with higher capacity")
+                f"(inserted {j}/{cl.shape[0]}); rebuild with higher capacity")
         free = np.flatnonzero(emb_np["ids"][ci] < 0)
         if free.size == 0:                    # counts out of sync with ids
             raise ValueError(
@@ -308,17 +326,26 @@ def insert_objects(buffers, params, norm, new_emb, new_loc, new_ids):
 
 
 def delete_objects(buffers, del_ids):
-    """Mark deleted ids as padding (lazy deletion, compaction on rebuild)."""
+    """Mark deleted ids as padding (lazy deletion, compaction on rebuild).
+
+    A deleted slot is restored to EXACTLY the padding convention of
+    :func:`build_cluster_buffers` — emb 0, scale 1, loc ``PAD_LOC``,
+    id -1 — so a mutated index stays bit-identical to a rebuilt one.
+    (Regression: ``loc`` used to keep the deleted object's live value.)
+    """
     ids = np.asarray(buffers["ids"]).copy()
     emb = np.asarray(buffers["emb"]).copy()
+    loc = np.asarray(buffers["loc"]).copy()
     scale = np.asarray(buffers["scale"]).copy()
     mask = np.isin(ids, np.asarray(del_ids))
     ids[mask] = -1
     emb[mask] = 0.0
+    loc[mask] = PAD_LOC
     scale[mask] = 1.0          # padding rows dequantize as exact zeros
     out = dict(buffers)
     out["ids"] = jnp.asarray(ids)
     out["emb"] = jnp.asarray(emb)
+    out["loc"] = jnp.asarray(loc)
     out["scale"] = jnp.asarray(scale)
     out["counts"] = jnp.asarray((ids >= 0).sum(-1))
     return out

@@ -37,10 +37,23 @@ request pays compile latency, repeated work, or a ragged-batch recompile:
   copy's flush completed) are coalesced onto one future instead of
   occupying two batch slots.
 
+* an **LSM-style write path** (DESIGN.md §11) — :meth:`insert_objects`
+  / :meth:`delete_objects` append to the snapshot's small mutable
+  **delta segment** (core/delta.py) in O(batch) and publish the
+  successor (``snapshot.with_delta`` — ``meta.version`` + 1); queries
+  brute-force scan the delta and merge it into the base top-k
+  (``engine.merge_delta``), with deletes as tombstones. When the delta
+  crosses ``delta_threshold`` rows+tombstones — or, with
+  ``max_imbalance`` set, when the live cluster sizes degrade past that
+  imbalance-factor bound — a background **compaction**
+  (``snapshot.compact``: the §4.3 delete/insert fold, one version
+  bump) runs on the next event-loop tick, between flushes, and
+  publishes the folded base. ``delta_threshold=0`` disables the delta
+  entirely: every write folds eagerly through ``with_buffers``
+  (O(index) per batch — the legacy path, kept as the bench baseline).
+
 * **atomic snapshot publication** — the server never mutates the
-  engine's resident state. :meth:`insert_objects` / :meth:`delete_objects`
-  build new buffers (core/index.py), derive the successor snapshot
-  (``snapshot.with_buffers`` — ``meta.version`` + 1), and
+  engine's resident state. Writes derive the successor snapshot and
   :meth:`publish` it: one engine reference swap plus a cache clear in
   the same event-loop step. Every cache key additionally embeds
   ``snapshot.meta.version``, so even a stale entry could never be
@@ -70,8 +83,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import delta as delta_lib
 from repro.core import engine as engine_lib
 from repro.core import index as index_lib
+from repro.core import cluster_metrics as cm
 
 
 # ---------------------------------------------------------------------------
@@ -97,6 +112,18 @@ class ServerConfig:
     near_cells      near-duplicate tier grid resolution per axis
                     (0 disables the tier — the default: it approximates)
     near_cache_size near-tier LRU entries
+    delta_threshold compaction trigger: fold the delta into the base
+                    once ``delta_rows + tombstones`` reaches this.
+                    0 disables the delta path entirely — every write
+                    eagerly rebuilds buffers (O(index), the legacy
+                    behavior and the churn-bench baseline)
+    max_imbalance   optional second trigger: compact when the LIVE
+                    per-cluster sizes' imbalance factor
+                    (cluster_metrics.imbalance_factor; uniform = 1.0)
+                    exceeds this bound. 0 disables (the default —
+                    the check is O(index) per write batch)
+    spill           §4.3 spill hops for insert routing (both the delta
+                    compaction fold and the eager path)
     """
     batch_size: int = 64
     max_delay_ms: float = 2.0
@@ -106,6 +133,9 @@ class ServerConfig:
     cache_size: int = 8192
     near_cells: int = 0
     near_cache_size: int = 8192
+    delta_threshold: int = 1024
+    max_imbalance: float = 0.0
+    spill: int = 3
 
 
 LATENCY_WINDOW = 65536       # sliding window of most-recent request latencies
@@ -128,6 +158,10 @@ class ServerStats:
     flushes: Dict[str, int] = dataclasses.field(
         default_factory=lambda: {"size": 0, "deadline": 0, "drain": 0})
     invalidations: int = 0
+    writes: int = 0                    # insert/delete batches accepted
+    compactions: int = 0
+    compaction_triggers: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"size": 0, "imbalance": 0, "manual": 0})
     compile_seconds: Dict[str, float] = dataclasses.field(default_factory=dict)
     latencies_s: "collections.deque" = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
@@ -207,11 +241,12 @@ def near_key(tokens: np.ndarray, mask: np.ndarray, loc: np.ndarray,
 
 
 class _Pending:
-    __slots__ = ("tokens", "mask", "loc", "ekey", "nkey", "future")
+    __slots__ = ("tokens", "mask", "loc", "ekey", "ikey", "nkey", "future")
 
-    def __init__(self, tokens, mask, loc, ekey, nkey, future):
+    def __init__(self, tokens, mask, loc, ekey, ikey, nkey, future):
         self.tokens, self.mask, self.loc = tokens, mask, loc
-        self.ekey, self.nkey, self.future = ekey, nkey, future
+        self.ekey, self.ikey = ekey, ikey
+        self.nkey, self.future = nkey, future
 
 
 class StreamingServer:
@@ -241,6 +276,7 @@ class StreamingServer:
         self._pending: List[_Pending] = []
         self._timer: Optional[asyncio.TimerHandle] = None
         self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._compaction_handle: Optional[asyncio.Handle] = None
 
     # --- warm-up manager --------------------------------------------------
 
@@ -288,12 +324,24 @@ class StreamingServer:
         eng.last_dedup_factor = None
         return dict(self.stats.compile_seconds)
 
-    # --- snapshot publication (DESIGN.md §8) ------------------------------
+    # --- the write path (DESIGN.md §8 + §11) ------------------------------
+
+    def _delta_of(self, snap) -> delta_lib.DeltaSegment:
+        if snap.delta is not None:
+            return snap.delta
+        return delta_lib.DeltaSegment.empty(
+            int(snap.buffers["emb"].shape[-1]), snap.meta.precision)
 
     def insert_objects(self, new_emb, new_loc, new_ids):
-        """Route new objects through the trained index and publish the
-        successor snapshot (index.insert_objects semantics,
-        bounds-checked). Returns the published :class:`IndexSnapshot`.
+        """Accept a batch of new objects and publish the successor
+        snapshot. Returns the snapshot being served after the call.
+
+        O(batch): the rows append to the snapshot's delta segment
+        (quantized at its precision tier); queries see them immediately
+        via the engine's delta scan. Compaction folds them into their
+        §4.3 clusters later (:meth:`_maybe_compact`). With
+        ``delta_threshold=0`` the fold happens eagerly instead
+        (``index.insert_objects`` — O(index), the legacy path).
 
         After a publish the SERVER'S SNAPSHOT is the source of truth for
         the corpus: a ``ListRetriever`` that originally supplied the
@@ -301,17 +349,83 @@ class StreamingServer:
         oracles (``brute_force``, cluster metrics) describe the old
         corpus until it is rebuilt."""
         snap = self.engine.snapshot
-        buf = index_lib.insert_objects(
-            snap.buffers, snap.index_params, snap.norm,
-            new_emb, new_loc, new_ids)
-        return self.publish(snap.with_buffers(buf))
+        self.stats.writes += 1
+        if self.cfg.delta_threshold <= 0:
+            buf = index_lib.insert_objects(
+                snap.buffers, snap.index_params, snap.norm,
+                new_emb, new_loc, new_ids, spill=self.cfg.spill)
+            return self.publish(snap.with_buffers(buf))
+        delta = self._delta_of(snap).insert(new_emb, new_loc, new_ids)
+        self.publish(snap.with_delta(delta))
+        self._maybe_compact()
+        return self.engine.snapshot
 
     def delete_objects(self, del_ids):
-        """Lazily delete objects (slots masked to -1) and publish the
-        successor snapshot. Returns it."""
+        """Delete objects and publish the successor snapshot. Returns
+        the snapshot being served after the call.
+
+        O(batch): the ids join the delta's tombstone set (filtering base
+        results at query time; delta-resident rows are dropped
+        physically). With ``delta_threshold=0``: the legacy eager mask
+        (``index.delete_objects`` — O(index))."""
         snap = self.engine.snapshot
-        buf = index_lib.delete_objects(snap.buffers, del_ids)
-        return self.publish(snap.with_buffers(buf))
+        self.stats.writes += 1
+        if self.cfg.delta_threshold <= 0:
+            buf = index_lib.delete_objects(snap.buffers, del_ids)
+            return self.publish(snap.with_buffers(buf))
+        delta = self._delta_of(snap).delete(del_ids)
+        self.publish(snap.with_delta(delta))
+        self._maybe_compact()
+        return self.engine.snapshot
+
+    def _maybe_compact(self):
+        """Check the compaction triggers; fold now (no running event
+        loop) or on the next loop tick (between flushes, so a compaction
+        never sits inside a write call's latency or splits a batch)."""
+        snap = self.engine.snapshot
+        delta = snap.delta
+        if delta is None or delta.is_empty:
+            return
+        trigger = None
+        if delta.n_rows + delta.n_tombstones >= self.cfg.delta_threshold:
+            trigger = "size"
+        elif self.cfg.max_imbalance > 0:
+            counts = delta_lib.live_counts(snap.buffers, delta)
+            if cm.imbalance_factor_from_counts(counts) > self.cfg.max_imbalance:
+                trigger = "imbalance"
+        if trigger is None:
+            return
+        try:
+            loop = asyncio.get_running_loop()
+        except RuntimeError:
+            loop = None
+        if loop is None:
+            self._compact(trigger)
+        elif self._compaction_handle is None:
+            self._compaction_handle = loop.call_soon(self._compact_cb,
+                                                     trigger)
+
+    def _compact_cb(self, trigger: str):
+        self._compaction_handle = None
+        self._compact(trigger)
+
+    def _compact(self, trigger: str):
+        """Fold the current delta into the base and publish — atomic
+        like any publish; the pre-compaction snapshot keeps serving any
+        flush that already pinned it."""
+        snap = self.engine.snapshot
+        if snap.delta is None or snap.delta.is_empty:
+            return
+        self.publish(snap.compact(spill=self.cfg.spill))
+        self.stats.compactions += 1
+        self.stats.compaction_triggers[trigger] = \
+            self.stats.compaction_triggers.get(trigger, 0) + 1
+
+    def compact_now(self):
+        """Force a synchronous compaction (drain loops, shutdown,
+        pre-save). Returns the snapshot being served after the call."""
+        self._compact("manual")
+        return self.engine.snapshot
 
     def publish(self, snapshot):
         """Atomically publish ``snapshot``: swap the engine's reference
@@ -348,6 +462,9 @@ class StreamingServer:
             if self._timer is not None:
                 self._timer.cancel()
                 self._timer = None
+            if self._compaction_handle is not None:
+                self._compaction_handle.cancel()
+                self._compaction_handle = None
             self._pending.clear()
             self._inflight.clear()
             self._loop = loop
@@ -392,7 +509,12 @@ class StreamingServer:
                 self.stats.latencies_s.append(time.perf_counter() - t0)
                 return hit
 
-        inflight = self._inflight.get(ekey)
+        # the in-flight key embeds the snapshot version, like the result
+        # caches: a request arriving just after a publish must NOT
+        # coalesce onto a pre-publish flush's future — that future
+        # resolves against the OLD index generation
+        ikey = (ver, ekey)
+        inflight = self._inflight.get(ikey)
         if inflight is not None:                 # identical request queued:
             self.stats.coalesced += 1            # share its future, don't
             res = await inflight                 # spend a second batch slot
@@ -401,8 +523,9 @@ class StreamingServer:
 
         loop = asyncio.get_running_loop()
         fut: asyncio.Future = loop.create_future()
-        self._inflight[ekey] = fut
-        self._pending.append(_Pending(tokens, mask, loc, ekey, nkey, fut))
+        self._inflight[ikey] = fut
+        self._pending.append(_Pending(tokens, mask, loc, ekey, ikey, nkey,
+                                      fut))
         if len(self._pending) >= self.cfg.batch_size:
             self._flush("size")
         elif self._timer is None:
@@ -439,7 +562,7 @@ class StreamingServer:
                 snapshot=snap)
         except Exception as e:                   # noqa: BLE001
             for p in pending:
-                self._inflight.pop(p.ekey, None)
+                self._inflight.pop(p.ikey, None)
                 if not p.future.done():
                     p.future.set_exception(e)
             return
@@ -454,7 +577,7 @@ class StreamingServer:
             self._exact.put((ver, p.ekey), res)
             if p.nkey is not None:
                 self._near.put((ver, p.nkey), res)
-            self._inflight.pop(p.ekey, None)
+            self._inflight.pop(p.ikey, None)
             if not p.future.done():
                 p.future.set_result(res)
 
@@ -511,6 +634,11 @@ class StreamingServer:
             "invalidations": s.invalidations,
             "compile_seconds": dict(s.compile_seconds),
             "dedup_factor": self.engine.last_dedup_factor,
+            "writes": s.writes,
+            "delta_rows": self.engine.snapshot.meta.delta_rows,
+            "tombstones": self.engine.snapshot.meta.n_tombstones,
+            "compactions": s.compactions,
+            "compaction_triggers": dict(s.compaction_triggers),
         }
         if wall_seconds is not None and wall_seconds > 0:
             out["qps"] = s.n_requests / wall_seconds

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import ckpt
 from repro.configs.base import DualEncoderConfig
+from repro.core import delta as delta_lib
 from repro.core import index as index_lib
 from repro.core import spatial as sp
 
@@ -61,7 +62,12 @@ from repro.core import spatial as sp
 # arrays and ``meta.precision`` the identity block (DESIGN.md §9). A v1
 # artifact has no scale leaf and no precision field, so loads across the
 # bump fail the schema gate (clear ValueError) instead of misreading.
-SCHEMA_VERSION = 2
+# v3: LSM-style mutation path (DESIGN.md §11) — an optional delta
+# segment (pending inserted rows + tombstoned ids) joins the tree, and
+# ``meta.delta_rows`` / ``meta.n_tombstones`` the identity block. A v2
+# artifact cannot declare pending mutations, so loads across the bump
+# fail the schema gate rather than silently dropping them.
+SCHEMA_VERSION = 3
 
 # buffer keys that are arrays (saved as leaves) vs host-side ints (meta)
 _BUFFER_ARRAYS = ("emb", "loc", "ids", "counts", "scale")
@@ -141,6 +147,12 @@ class SnapshotMeta:
     precision       "f32" | "bf16" | "int8" — the buffers' storage tier
                     (DESIGN.md §9); load refuses an unknown tier BEFORE
                     reading any array
+    delta_rows      rows pending in the delta segment (0 = compacted)
+    n_tombstones    ids deleted from the base since the last compaction
+
+    ``n_objects`` counts the BASE buffers only (counts.sum()); the live
+    corpus size is ``n_objects - n_tombstones + delta_rows`` assuming
+    every tombstone hits a base row.
     """
     schema_version: int
     cfg_digest: str
@@ -151,6 +163,8 @@ class SnapshotMeta:
     spatial_mode: str = "step"
     weight_mode: str = "mlp"
     precision: str = "f32"
+    delta_rows: int = 0
+    n_tombstones: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,8 +178,15 @@ class IndexSnapshot:
 
     Construction: :meth:`from_parts` (fresh, version 0),
     :meth:`with_buffers` (derive: new buffers, version + 1),
+    :meth:`with_delta` (derive: new delta segment, version + 1),
+    :meth:`compact` (fold delta into base, version + 1),
     :meth:`load` (from disk). Never mutate a field — the whole point is
     that holders of a snapshot reference can trust it forever.
+
+    ``delta`` is the optional LSM-style mutable overlay
+    (:class:`repro.core.delta.DeltaSegment`, DESIGN.md §11): rows
+    inserted since the base buffers were built plus tombstoned ids.
+    ``None`` means "no pending mutations" (base-only fast path).
     """
     cfg: DualEncoderConfig
     rel_params: Any
@@ -173,6 +194,7 @@ class IndexSnapshot:
     norm: Any
     buffers: dict
     meta: SnapshotMeta
+    delta: Optional[delta_lib.DeltaSegment] = None
 
     # --- construction -----------------------------------------------------
 
@@ -219,6 +241,46 @@ class IndexSnapshot:
             n_objects=int(np.asarray(buffers["counts"]).sum()))
         return dataclasses.replace(self, buffers=buffers, meta=meta)
 
+    def with_delta(self, delta: delta_lib.DeltaSegment) -> "IndexSnapshot":
+        """Derive the successor snapshot with a new delta segment:
+        same params and base buffers, ``meta.version + 1``. This is the
+        O(batch) write path (DESIGN.md §11) — append/tombstone on the
+        delta, derive, publish; the base is untouched until
+        :meth:`compact` folds the delta in."""
+        if delta.precision != self.meta.precision:
+            raise ValueError(
+                f"with_delta: delta is {delta.precision!r} but this "
+                f"snapshot is {self.meta.precision!r}; quantization tiers "
+                f"must match for pre/post-compaction score parity")
+        meta = dataclasses.replace(
+            self.meta, version=self.meta.version + 1, built_at=time.time(),
+            delta_rows=delta.n_rows, n_tombstones=delta.n_tombstones)
+        return dataclasses.replace(self, delta=delta, meta=meta)
+
+    def compact(self, *, spill: int = 3) -> "IndexSnapshot":
+        """Fold the delta into the base buffers: tombstoned rows become
+        padding (``index.delete_objects``), pending rows route into
+        their clusters through the §4.3 policy (``index.insert_objects``
+        — re-quantized from the raw f32 rows the delta kept, so stored
+        values bit-match the delta-resident ones). One version bump;
+        query results are unchanged by construction. Returns ``self``
+        when there is nothing to fold."""
+        if self.delta is None or self.delta.is_empty:
+            return self
+        buf = self.buffers
+        if self.delta.tombstones:
+            buf = index_lib.delete_objects(buf, self.delta.tombstone_array())
+        arrs = self.delta.arrays()
+        if arrs["ids"].shape[0]:
+            buf = index_lib.insert_objects(
+                buf, self.index_params, self.norm,
+                arrs["raw"], arrs["loc"], arrs["ids"], spill=spill)
+        meta = dataclasses.replace(
+            self.meta, version=self.meta.version + 1, built_at=time.time(),
+            n_objects=int(np.asarray(buf["counts"]).sum()),
+            delta_rows=0, n_tombstones=0)
+        return dataclasses.replace(self, buffers=buf, delta=None, meta=meta)
+
     def with_precision(self, precision: str) -> "IndexSnapshot":
         """Derive the same index at another precision tier (DESIGN.md §9):
         requantized buffers (``index.quantize_buffers`` — loc/ids/counts
@@ -227,6 +289,11 @@ class IndexSnapshot:
         FROM the exact f32 tier; returns ``self`` when already there."""
         if precision == self.meta.precision:
             return self
+        if self.delta is not None and not self.delta.is_empty:
+            raise ValueError(
+                "with_precision: snapshot has a non-empty delta segment; "
+                "compact() first so pending mutations requantize with the "
+                "base instead of being carried at the old tier")
         buffers = index_lib.quantize_buffers(self.buffers, precision)
         meta = dataclasses.replace(
             self.meta, precision=precision, version=self.meta.version + 1,
@@ -249,12 +316,18 @@ class IndexSnapshot:
     # --- persistence ------------------------------------------------------
 
     def _tree(self) -> dict:
-        return {
+        tree = {
             "rel_params": self.rel_params,
             "index_params": self.index_params,
             "norm": self.norm,
             "buffers": {k: self.buffers[k] for k in _BUFFER_ARRAYS},
         }
+        if self.delta is not None and not self.delta.is_empty:
+            # canonical single-chunk form + tombstone array; the
+            # manifest's tree_spec records the extra subtree, so loads
+            # of delta-free artifacts need no special casing
+            tree["delta"] = self.delta.to_leaves()
+        return tree
 
     def save(self, directory: str, *, keep: int = 3) -> str:
         """Persist under ``directory`` (ckpt step = meta.version; atomic
@@ -326,15 +399,21 @@ class IndexSnapshot:
         for k in _BUFFER_SCALARS:
             buffers[k] = int(meta[k])
         buffers["precision"] = precision
+        delta = None
+        if "delta" in tree:
+            delta = delta_lib.DeltaSegment.from_leaves(
+                int(buffers["emb"].shape[-1]), precision, tree["delta"])
         sm = SnapshotMeta(
             schema_version=meta["schema_version"],
             cfg_digest=meta["cfg_digest"], n_objects=meta["n_objects"],
             built_at=meta["built_at"], version=meta["version"],
             dist_max=meta["dist_max"], spatial_mode=meta["spatial_mode"],
-            weight_mode=meta["weight_mode"], precision=precision)
+            weight_mode=meta["weight_mode"], precision=precision,
+            delta_rows=meta.get("delta_rows", 0),
+            n_tombstones=meta.get("n_tombstones", 0))
         return cls(cfg=cfg, rel_params=tree["rel_params"],
                    index_params=tree["index_params"], norm=tree["norm"],
-                   buffers=buffers, meta=sm)
+                   buffers=buffers, meta=sm, delta=delta)
 
 
 def load(directory: str, step: Optional[int] = None) -> IndexSnapshot:

@@ -23,6 +23,12 @@ Reports two layers of metrics:
 * serving (streamed): p50/p95/p99 latency, achieved QPS, cache hit
   rates per tier, micro-batch fill, flush-reason counts, and per-shape
   warm-up compile seconds.
+
+``--churn N`` additionally applies N insert+delete batches through the
+server's O(batch) delta write path (DESIGN.md §11) before streaming;
+``--delta-threshold`` / ``--max-imbalance`` control when the background
+compaction folds the delta into the base (0 threshold = legacy eager
+O(index) writes).
 """
 from __future__ import annotations
 
@@ -106,6 +112,21 @@ def main(argv=None):
     ap.add_argument("--cache-size", type=int, default=8192)
     ap.add_argument("--near-cells", type=int, default=0,
                     help="near-duplicate cache grid (0 = exact tier only)")
+    ap.add_argument("--delta-threshold", type=int, default=1024,
+                    help="LSM write path (DESIGN.md §11): compact the "
+                         "delta segment into the base once it holds this "
+                         "many rows+tombstones; 0 = eager O(index) writes")
+    ap.add_argument("--max-imbalance", type=float, default=0.0,
+                    help="also compact when the live cluster sizes' "
+                         "imbalance factor exceeds this (0 = off)")
+    ap.add_argument("--spill", type=int, default=3,
+                    help="insert routing spill hops (paper §4.3)")
+    ap.add_argument("--churn", type=int, default=0,
+                    help="write batches applied through the server before "
+                         "streaming: each inserts 32 synthetic objects "
+                         "and deletes 16 live ones through the O(batch) "
+                         "delta path (recall is then measured against "
+                         "the surviving positives)")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip pre-tracing (the first query run — here the "
                          "quality snapshot — then pays the compile)")
@@ -186,7 +207,9 @@ def main(argv=None):
     server = searcher.serve(server_lib.ServerConfig(
         batch_size=args.serve_batch, max_delay_ms=args.max_delay_ms,
         k=args.k, cr=args.cr, backend=backend,
-        cache_size=args.cache_size, near_cells=args.near_cells))
+        cache_size=args.cache_size, near_cells=args.near_cells,
+        delta_threshold=args.delta_threshold,
+        max_imbalance=args.max_imbalance, spill=args.spill))
     if not args.no_warmup:
         compiles = server.warmup()
         print("== warm-up: pre-traced "
@@ -224,6 +247,29 @@ def main(argv=None):
         print(f"cluster quality: P(C)={pc:.4f} "
               f"IF(C)={cm.imbalance_factor(r.obj_assign, cfg.n_clusters):.3f}")
 
+    # --- churn: exercise the O(batch) write path before streaming ---------
+    deleted: set = set()
+    if args.churn:
+        wrng = np.random.default_rng(args.seed + 99)
+        next_id = 10_000_000
+        t0 = time.perf_counter()
+        for _ in range(args.churn):
+            ne = wrng.normal(size=(32, cfg.d_model)).astype(np.float32)
+            nl = wrng.uniform(size=(32, 2)).astype(np.float32)
+            server.insert_objects(ne, nl, np.arange(next_id, next_id + 32))
+            next_id += 32
+            victims = [int(v) for v in wrng.choice(args.objects, size=16,
+                                                   replace=False)
+                       if v not in deleted]
+            server.delete_objects(np.asarray(victims, np.int64))
+            deleted.update(victims)
+        t_w = time.perf_counter() - t0
+        wm = server.metrics()
+        print(f"== churn: {args.churn} write rounds in {t_w:.2f}s "
+              f"(delta_rows={wm['delta_rows']} "
+              f"tombstones={wm['tombstones']} "
+              f"compactions={wm['compactions']}) ==")
+
     # --- streamed load against the pre-built server -----------------------
     requests, picks = build_workload(corpus, te, args.requests,
                                      skew=args.skew, seed=args.seed)
@@ -243,7 +289,9 @@ def main(argv=None):
     m = server.metrics(wall_seconds=wall)
     lat = m["latency_ms"]
     served_ids = np.stack([res[0] for res in results])
-    served_pos = [corpus.positives[q] for q in picks]
+    served_pos = [np.asarray([p for p in corpus.positives[q]
+                              if int(p) not in deleted])
+                  for q in picks]
     print(f"served QPS  : {m['qps']:.1f} ({wall:.2f}s wall)")
     print(f"latency ms  : p50={lat['p50']:.2f} p95={lat['p95']:.2f} "
           f"p99={lat['p99']:.2f} mean={lat['mean']:.2f}")
@@ -252,6 +300,12 @@ def main(argv=None):
           f"coalesced={m['coalesced']})")
     print(f"micro-batch : {m['engine_batches']} engine batches, "
           f"fill={m['batch_fill']:.1%}, flushes={m['flushes']}")
+    if m["writes"]:
+        print(f"write path  : writes={m['writes']} "
+              f"delta_rows={m['delta_rows']} "
+              f"tombstones={m['tombstones']} "
+              f"compactions={m['compactions']} "
+              f"triggers={m['compaction_triggers']}")
     if m.get("dedup_factor"):
         print(f"route dedup : {m['dedup_factor']:.1f}x "
               f"(B*cr / distinct clusters — the cluster-major win)")

@@ -1,0 +1,409 @@
+"""Delta-segment mutation tier (core/delta.py + engine merge, DESIGN.md §11).
+
+Covers the acceptance criteria of the LSM-style write path:
+
+* ``DeltaSegment`` is an immutable value type: insert is O(batch) with
+  structural sharing, delete tombstones the base and physically drops
+  delta rows, duplicate/invalid ids are refused;
+* queries over a snapshot carrying a delta see exactly the live set —
+  inserted rows surface, deleted ids never do (tombstones filter the
+  base with k over-fetch so no live row is lost);
+* compaction parity: a snapshot queried through delta + tombstones
+  returns the SAME results as the compacted snapshot — ids bit-equal on
+  every tier; scores agree to float-reassociation tolerance (the delta
+  scan reduces over a different candidate-axis length than the gathered
+  buffers, so XLA's reduction blocking may differ by ~1 ulp);
+* a hypothesis property test interleaves insert/delete/query against a
+  brute-force oracle over the live stored rows, across all 3 precision
+  tiers.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import delta as delta_lib
+from repro.core import engine as engine_lib
+from repro.core import index as il
+from repro.core import relevance
+from repro.core.delta import DeltaSegment
+from repro.core.snapshot import IndexSnapshot
+
+DIST_MAX = 1.414
+D = 32                          # d_model of the fixture snapshot
+
+
+# ---------------------------------------------------------------------------
+# Fixture: a tiny built snapshot (random params — the mutation layer is
+# quality-agnostic), plus per-precision derivatives
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def snap():
+    cfg = dataclasses.replace(
+        get_config("list-dual-encoder"),
+        n_layers=2, d_model=D, n_heads=2, d_ff=64, vocab_size=512,
+        max_len=8, spatial_t=50, n_clusters=4, index_mlp_hidden=(16,))
+    rng = np.random.default_rng(13)
+    params = relevance.relevance_init(jax.random.PRNGKey(0), cfg)
+    n, c, cap = 96, cfg.n_clusters, 64        # headroom for compaction
+    obj_emb = rng.normal(size=(n, cfg.d_model)).astype(np.float32)
+    obj_loc = rng.uniform(size=(n, 2)).astype(np.float32)
+    norm = il.loc_normalizer(jnp.asarray(obj_loc))
+    iparams = il.index_init(jax.random.PRNGKey(5), cfg.d_model, c,
+                            hidden=(16,))
+    feats = il.build_features(jnp.asarray(obj_emb), jnp.asarray(obj_loc),
+                              norm)
+    top = np.asarray(il.assign_clusters(iparams, feats, top=2))
+    buf = il.build_cluster_buffers(top, obj_emb, obj_loc, n_clusters=c,
+                                   capacity=cap)
+    return IndexSnapshot.from_parts(cfg, params, iparams, norm, buf,
+                                    dist_max=DIST_MAX)
+
+
+_TIERS = {}
+
+
+def snap_at(snap, precision):
+    """The fixture snapshot at a precision tier (memoized per module)."""
+    if precision not in _TIERS:
+        _TIERS[precision] = (snap if precision == "f32"
+                             else snap.with_precision(precision))
+    return _TIERS[precision]
+
+
+_ENGINES = {}
+
+
+def engine_at(snap, precision):
+    """One dense engine per tier — plans persist across tests/examples;
+    the pinned snapshot is always passed explicitly to query()."""
+    if precision not in _ENGINES:
+        _ENGINES[precision] = engine_lib.QueryEngine.from_snapshot(
+            snap_at(snap, precision), backend="dense")
+    return _ENGINES[precision]
+
+
+def make_requests(rng, n, cfg):
+    tok = rng.integers(2, cfg.vocab_size, (n, cfg.max_len)).astype(np.int32)
+    tok[:, 0] = 1
+    msk = np.ones((n, cfg.max_len), bool)
+    loc = rng.uniform(size=(n, 2)).astype(np.float32)
+    return tok, msk, loc
+
+
+def rows_for(ids, d=D):
+    """Deterministic f32 rows per id — reproducible across processes."""
+    ids = np.asarray(ids).reshape(-1)
+    emb = np.stack([np.random.default_rng(10_000 + int(i))
+                    .normal(size=d).astype(np.float32) for i in ids])
+    loc = np.stack([np.random.default_rng(20_000 + int(i))
+                    .uniform(size=2).astype(np.float32) for i in ids])
+    return emb, loc
+
+
+# ---------------------------------------------------------------------------
+# DeltaSegment value-type contract
+# ---------------------------------------------------------------------------
+
+
+def test_empty_segment():
+    seg = DeltaSegment.empty(D)
+    assert seg.is_empty and seg.n_rows == 0 and seg.n_tombstones == 0
+    arrs = seg.arrays()
+    assert arrs["emb"].shape == (0, D) and arrs["ids"].shape == (0,)
+    assert seg.tombstone_array().dtype == np.int64
+    with pytest.raises(ValueError, match="precision"):
+        DeltaSegment.empty(D, "fp4")
+
+
+def test_insert_shares_prior_chunks():
+    """O(batch) contract: appending must not copy or touch prior chunks."""
+    emb, loc = rows_for([100, 101])
+    seg1 = DeltaSegment.empty(D).insert(emb, loc, [100, 101])
+    emb2, loc2 = rows_for([102])
+    seg2 = seg1.insert(emb2, loc2, [102])
+    assert seg2.chunks[0] is seg1.chunks[0]          # shared, not copied
+    assert seg1.n_rows == 2 and seg2.n_rows == 3     # predecessor untouched
+    assert seg2.ids_live == frozenset({100, 101, 102})
+
+
+def test_insert_refuses_bad_batches():
+    emb, loc = rows_for([100, 101])
+    seg = DeltaSegment.empty(D).insert(emb, loc, [100, 101])
+    with pytest.raises(ValueError, match="duplicate"):
+        seg.insert(*rows_for([101]), [101])          # delta-resident dup
+    with pytest.raises(ValueError, match="duplicate"):
+        seg.insert(*rows_for([5, 5]), [5, 5])        # within-batch dup
+    with pytest.raises(ValueError, match="non-negative"):
+        seg.insert(*rows_for([7]), [-1])
+    with pytest.raises(ValueError, match="disagree"):
+        seg.insert(emb, loc[:1], [200, 201])
+
+
+def test_delete_drops_delta_rows_and_tombstones_base():
+    emb, loc = rows_for([100, 101, 102])
+    seg = DeltaSegment.empty(D).insert(emb, loc, [100, 101, 102])
+    seg2 = seg.delete([101, 777])                    # one resident, one base
+    assert seg2.n_rows == 2                          # row physically gone
+    assert 101 not in seg2.ids_live
+    assert set(seg2.arrays()["ids"].tolist()) == {100, 102}
+    assert seg2.tombstones == frozenset({101, 777})
+    assert seg.n_rows == 3                           # predecessor untouched
+
+
+def test_reinsert_after_delete():
+    """delete frees the id: re-inserting it must succeed, and the fresh
+    row is live even though the tombstone (for the base) remains."""
+    emb, loc = rows_for([100])
+    seg = DeltaSegment.empty(D).insert(emb, loc, [100]).delete([100])
+    assert seg.n_rows == 0 and 100 in seg.tombstones
+    emb2, loc2 = rows_for([100])
+    seg2 = seg.insert(emb2, loc2, [100])
+    assert seg2.n_rows == 1 and 100 in seg2.ids_live
+    assert 100 in seg2.tombstones                    # still kills base rows
+
+
+@pytest.mark.parametrize("precision", il.PRECISIONS)
+def test_leaves_roundtrip(precision):
+    emb, loc = rows_for([100, 101, 102])
+    seg = (DeltaSegment.empty(D, precision)
+           .insert(emb, loc, [100, 101, 102]).delete([101, 55]))
+    back = DeltaSegment.from_leaves(D, precision, seg.to_leaves())
+    assert back.tombstones == seg.tombstones
+    assert back.ids_live == seg.ids_live
+    for f in delta_lib.FIELDS:
+        assert np.array_equal(np.asarray(back.arrays()[f]),
+                              np.asarray(seg.arrays()[f])), f
+
+
+def test_quantized_rows_match_buffer_quantization():
+    """A delta row must carry the SAME stored bytes the compacted buffer
+    will: quantize_rows on the way in, raw f32 kept for requantization."""
+    emb, loc = rows_for([100, 101])
+    seg = DeltaSegment.empty(D, "int8").insert(emb, loc, [100, 101])
+    q, scale = il.quantize_rows(emb, "int8")
+    arrs = seg.arrays()
+    assert arrs["emb"].dtype == np.int8
+    assert np.array_equal(arrs["emb"], q)
+    assert np.array_equal(arrs["scale"], scale)
+    assert np.array_equal(arrs["raw"], emb)          # exact source retained
+
+
+def test_live_counts_subtracts_resident_tombstones(snap):
+    buf = snap.buffers
+    base = delta_lib.live_counts(buf, None)
+    assert np.array_equal(base, np.asarray(buf["counts"]))
+    victims = np.asarray(buf["ids"])[0, :3].tolist()
+    seg = DeltaSegment.empty(D).delete(victims + [999_999])  # one unknown
+    after = delta_lib.live_counts(buf, seg)
+    want = base.copy()
+    want[0] -= 3                                     # unknown id: no effect
+    assert np.array_equal(after, want)
+
+
+# ---------------------------------------------------------------------------
+# merge_delta semantics
+# ---------------------------------------------------------------------------
+
+
+def test_merge_delta_tombstones_filter_base_only():
+    base_i = np.array([[5, 3, 9]])
+    base_v = np.array([[3.0, 2.0, 1.0]], np.float32)
+    delta_i = np.array([[3, -1]])                    # id 3 re-inserted
+    delta_v = np.array([[2.5, engine_lib.NEG_INF]], np.float32)
+    ids, sc = engine_lib.merge_delta(base_i, base_v, delta_i, delta_v,
+                                     tombstones=np.array([3]), k=3)
+    # base's 3 is tombstoned out; delta's 3 (fresh row) survives
+    assert ids.tolist() == [[5, 3, 9]]
+    assert sc.tolist() == [[3.0, 2.5, 1.0]]
+
+
+def test_merge_delta_base_wins_ties_and_trims_to_k():
+    base_i = np.array([[1, 2, 3, 4]])
+    base_v = np.array([[4.0, 3.0, 2.0, 1.0]], np.float32)
+    delta_i = np.array([[7]])
+    delta_v = np.array([[3.0]], np.float32)          # exact tie with id 2
+    ids, sc = engine_lib.merge_delta(base_i, base_v, delta_i, delta_v, k=3)
+    assert ids.shape == (1, 3)                       # over-fetch trimmed
+    assert ids.tolist() == [[1, 2, 7]]               # base entry first on tie
+    assert sc.tolist() == [[4.0, 3.0, 3.0]]
+
+
+# ---------------------------------------------------------------------------
+# Engine queries through a delta-carrying snapshot
+# ---------------------------------------------------------------------------
+
+
+def test_delta_rows_visible_without_routing(snap, rng):
+    """A freshly inserted row can NEVER be hidden by a routing miss: the
+    delta is scanned unrouted, so it surfaces even at cr=1."""
+    emb, loc = rows_for([9000, 9001])
+    seg = DeltaSegment.empty(D).insert(emb, loc, [9000, 9001])
+    snap_d = snap.with_delta(seg)
+    eng = engine_at(snap, "f32")
+    tok, msk, loc_q = make_requests(rng, 6, snap.cfg)
+    k_all = snap.buffers["capacity"]          # the whole cr=1 pool
+    ids, sc = eng.query(tok, msk, loc_q, k=k_all, cr=1, batch=4,
+                        snapshot=snap_d)
+    assert (ids == 9000).any() and (ids == 9001).any()
+    # scores stay descending through the host merge
+    assert (np.diff(sc, axis=-1) <= 0).all()
+
+
+def test_delta_free_path_unchanged(snap, rng):
+    """A compacted / delta-free snapshot takes the exact fast path: the
+    results are byte-identical to an engine that never heard of deltas."""
+    eng = engine_at(snap, "f32")
+    tok, msk, loc_q = make_requests(rng, 6, snap.cfg)
+    ids_a, sc_a = eng.query(tok, msk, loc_q, k=5, cr=2, batch=4,
+                            snapshot=snap)
+    snap_e = snap.with_delta(DeltaSegment.empty(D))   # empty delta attached
+    ids_b, sc_b = eng.query(tok, msk, loc_q, k=5, cr=2, batch=4,
+                            snapshot=snap_e)
+    assert np.array_equal(ids_a, ids_b) and np.array_equal(sc_a, sc_b)
+
+
+@pytest.mark.parametrize("precision", il.PRECISIONS)
+def test_compaction_parity(snap, rng, precision):
+    """THE acceptance criterion: delta + tombstones merged at query time
+    vs the compacted snapshot — ids bit-equal on every tier; scores
+    equal to reassociation tolerance (the stored row bytes are identical
+    pre/post compaction — test_quantized_rows_match_buffer_quantization
+    — but the scan and the gathered buffers reduce over different
+    candidate-axis lengths). Victims are taken from the live top-k so
+    the tombstone over-fetch (not luck) is what preserves parity."""
+    snap_p = snap_at(snap, precision)
+    eng = engine_at(snap, precision)
+    tok, msk, loc_q = make_requests(rng, 10, snap.cfg)
+    c = snap.cfg.n_clusters
+    k = 10
+
+    ids0, _ = eng.query(tok, msk, loc_q, k=k, cr=c, batch=4,
+                        snapshot=snap_p)
+    victims = np.unique(ids0[ids0 >= 0])[:40].tolist()  # top-ranked rows
+
+    new_ids = list(range(9100, 9130))
+    emb, loc = rows_for(new_ids)
+    seg = (DeltaSegment.empty(D, precision)
+           .insert(emb, loc, new_ids)
+           .delete(victims + new_ids[:5]))          # base AND delta victims
+    snap_d = snap_p.with_delta(seg)
+    snap_c = snap_d.compact()
+    assert snap_c.delta is None
+    assert snap_c.meta.version == snap_d.meta.version + 1
+    assert snap_c.meta.precision == precision
+
+    # cr=c: routing covers every cluster, so parity is about the merge,
+    # not about where compaction happened to place the rows
+    ids_d, sc_d = eng.query(tok, msk, loc_q, k=k, cr=c, batch=4,
+                            snapshot=snap_d)
+    ids_c, sc_c = eng.query(tok, msk, loc_q, k=k, cr=c, batch=4,
+                            snapshot=snap_c)
+    assert np.array_equal(ids_d, ids_c)
+    assert np.allclose(sc_d, sc_c, atol=1e-5, rtol=1e-6)
+    assert not np.isin(ids_d, victims).any()        # victims truly gone
+    assert (ids_d >= 9100).any()                    # survivors retrievable
+
+
+# ---------------------------------------------------------------------------
+# Property test: interleaved mutations vs a brute-force oracle
+# ---------------------------------------------------------------------------
+
+
+def _check_interleaved(snap, precision, ops, *, k=8):
+    """Run a mutation log op-by-op, querying after EVERY op: returned
+    ids must be live, deleted ids must never resurface, and the answer
+    must match the ORACLE — the same queries against the fully-rebuilt
+    (compacted) index through the same engine plans. ids bit-equal;
+    scores to reassociation tolerance (the delta scan and the buffers
+    reduce over different candidate-axis lengths).
+
+    ``ops`` entries: ("insert", n) appends n fresh ids; ("delete", x)
+    deletes the (x mod live)-th smallest live id.
+    """
+    snap_p = snap_at(snap, precision)
+    eng = engine_at(snap, precision)
+    cfg = snap.cfg
+    qrng = np.random.default_rng(31)
+    tok, msk, loc_q = make_requests(qrng, 4, cfg)
+    base_ids = np.asarray(snap_p.buffers["ids"])
+    seg = DeltaSegment.empty(D, precision)
+    live = set(int(i) for i in base_ids[base_ids >= 0])
+    deleted = set()
+    next_id = 50_000
+    for op, arg in ops:
+        if op == "insert":
+            ids = list(range(next_id, next_id + arg))
+            next_id += arg
+            emb, loc = rows_for(ids)
+            seg = seg.insert(emb, loc, ids)
+            live |= set(ids)
+            deleted -= set(ids)
+        elif live:
+            victim = sorted(live)[arg % len(live)]
+            seg = seg.delete([victim])
+            live.discard(victim)
+            deleted.add(victim)
+        snap_d = snap_p.with_delta(seg)
+        ids_s, sc_s = eng.query(tok, msk, loc_q, k=k, cr=cfg.n_clusters,
+                                batch=4, snapshot=snap_d)
+        returned = set(int(i) for i in ids_s[ids_s >= 0])
+        assert returned <= live                      # only live ids
+        assert not returned & deleted                # no resurrections
+        snap_c = snap_d.compact()
+        ids_c = np.asarray(snap_c.buffers["ids"])
+        assert set(int(i) for i in ids_c[ids_c >= 0]) == live
+        want_i, want_s = eng.query(tok, msk, loc_q, k=k,
+                                   cr=cfg.n_clusters, batch=4,
+                                   snapshot=snap_c)
+        assert np.array_equal(ids_s, want_i)
+        assert np.allclose(sc_s, want_s, atol=1e-5, rtol=1e-6)
+
+
+# hand-picked interleavings exercising every transition: delete of base
+# rows, delete straight after insert, insert after delete (id reuse is
+# separate — ids here are fresh), long insert runs, delete-only prefixes
+_FIXED_LOGS = [
+    [("insert", 3), ("delete", 5), ("insert", 2), ("delete", 0),
+     ("insert", 1), ("delete", 97)],
+    [("delete", 7), ("delete", 7), ("insert", 4), ("delete", 2)],
+    [("insert", 4), ("insert", 4), ("delete", 123456), ("delete", 3),
+     ("delete", 11), ("insert", 2)],
+]
+
+
+@pytest.mark.parametrize("precision", il.PRECISIONS)
+@pytest.mark.parametrize("log", range(len(_FIXED_LOGS)))
+def test_interleaved_mutations_fixed_logs(snap, precision, log):
+    """The oracle check on fixed mutation logs — always runs, so the
+    write path has deterministic coverage even where hypothesis is
+    unavailable."""
+    _check_interleaved(snap, precision, _FIXED_LOGS[log])
+
+
+@pytest.mark.parametrize("precision", il.PRECISIONS)
+def test_interleaved_mutations_match_oracle(snap, precision):
+    """Satellite acceptance: ANY interleaving of inserts and deletes,
+    queried mid-stream, serves exactly the live set (hypothesis explores
+    the op space; _FIXED_LOGS above keeps deterministic coverage when
+    hypothesis is absent)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    st_ = hypothesis.strategies
+
+    ops_strategy = st_.lists(
+        st_.one_of(
+            st_.tuples(st_.just("insert"), st_.integers(1, 4)),
+            st_.tuples(st_.just("delete"), st_.integers(0, 10 ** 6))),
+        min_size=1, max_size=5)
+
+    @hypothesis.settings(max_examples=10, deadline=None)
+    @hypothesis.given(ops=ops_strategy)
+    def run(ops):
+        _check_interleaved(snap, precision, ops)
+
+    run()

@@ -132,3 +132,86 @@ def test_delete_marks_padding_and_recounts(rng):
     mask = np.isin(np.asarray(buf["ids"]), victims)
     assert (np.asarray(out["emb"])[mask] == 0).all()
     assert (out_ids[mask] == -1).all()
+
+
+def test_delete_restores_full_padding_convention(rng):
+    """Regression: ``delete_objects`` used to leave the deleted object's
+    LIVE location (and scale) behind. Every padding slot — built or
+    deleted — must carry the exact (emb 0, loc PAD_LOC, scale 1, id -1)
+    convention, or a mutated index diverges bit-wise from a rebuilt one
+    (snapshot digests, compaction parity)."""
+    c, cap, d = 2, 8, 8
+    buf, params, norm, _, _ = _tiny_index(rng, n=10, c=c, cap=cap, d=d)
+    ids = np.asarray(buf["ids"])
+    victims = ids[ids >= 0][:3]
+    out = il.delete_objects(buf, victims)
+    pad = np.asarray(out["ids"]) == -1               # built AND deleted pads
+    assert (np.asarray(out["emb"])[pad] == 0).all()
+    assert (np.asarray(out["loc"])[pad] == il.PAD_LOC).all()
+    assert (np.asarray(out["scale"])[pad] == 1.0).all()
+
+
+def test_deleted_index_is_bit_identical_to_rebuilt(rng):
+    """Mutated-vs-rebuilt parity: deleting the last-placed objects must
+    leave buffers ARRAY-IDENTICAL to building from the survivors (the
+    builder places greedily in input order, so dropping a trailing
+    suffix changes no earlier placement). This is what keeps compaction
+    and artifact digests honest — it fails if any deleted field keeps a
+    stale value."""
+    c, cap, d = 4, 8, 8
+    n, n_del = 12, 3
+    emb = rng.normal(size=(n, d)).astype(np.float32)
+    loc = rng.uniform(size=(n, 2)).astype(np.float32)
+    norm = il.loc_normalizer(jnp.asarray(loc))
+    params = il.index_init(jax.random.PRNGKey(0), d, c, hidden=(8,))
+    feats = il.build_features(jnp.asarray(emb), jnp.asarray(loc), norm)
+    top = np.asarray(il.assign_clusters(params, feats, top=2))
+    buf = il.build_cluster_buffers(top, emb, loc, n_clusters=c, capacity=cap)
+    mutated = il.delete_objects(buf, np.arange(n - n_del, n))
+    rebuilt = il.build_cluster_buffers(top[:n - n_del], emb[:n - n_del],
+                                       loc[:n - n_del], n_clusters=c,
+                                       capacity=cap)
+    for f in ("emb", "loc", "ids", "scale", "counts"):
+        assert np.array_equal(np.asarray(mutated[f]),
+                              np.asarray(rebuilt[f])), f
+
+
+def test_insert_prefers_spill_hop_over_least_loaded(rng):
+    """§4.3 spill policy: with the preferred cluster full, an insert
+    lands in the object's NEXT-BEST cluster (2nd spill hop) — NOT in the
+    globally least-loaded one. The least-loaded fallback only engages
+    when every spill hop is full (or spill=1 disables hopping)."""
+    c, cap, d = 4, 8, 8
+    buf, params, norm, _, _ = _tiny_index(rng, n=4, c=c, cap=cap, d=d)
+    new_emb = jnp.asarray(rng.normal(size=(1, d)), jnp.float32)
+    new_loc = jnp.asarray(rng.uniform(size=(1, 2)), jnp.float32)
+    feats = il.build_features(new_emb, new_loc, norm)
+    pref = np.asarray(il.assign_clusters(params, feats, top=c))[0]
+
+    # preferred cluster full; 2nd-best has room but is NOT least-loaded
+    ids = np.asarray(buf["ids"]).copy()
+    counts = np.asarray(buf["counts"]).copy()
+    ids[pref[0]] = 10_000 + np.arange(cap)
+    counts[pref[0]] = cap
+    # top up 2nd-best to 3 residents so some other cluster is emptier
+    fill = 3 - int((ids[pref[1]] >= 0).sum())
+    if fill > 0:
+        free = np.flatnonzero(ids[pref[1]] < 0)[:fill]
+        ids[pref[1], free] = 20_000 + np.arange(fill)
+    counts[pref[1]] = int((ids[pref[1]] >= 0).sum())
+    least = min(range(c), key=lambda j: counts[j])
+    assert least not in (int(pref[0]), int(pref[1]))  # fallback ≠ 2nd hop
+    buf = dict(buf)
+    buf["ids"] = jnp.asarray(ids)
+    buf["counts"] = jnp.asarray(counts)
+
+    out = il.insert_objects(buf, params, norm, new_emb, new_loc,
+                            np.array([777]), spill=3)
+    where = int(np.argwhere(np.asarray(out["ids"]) == 777)[0][0])
+    assert where == int(pref[1])                     # landed in the 2nd hop
+
+    # spill=1: no hopping — the same insert falls back to least-loaded
+    out1 = il.insert_objects(buf, params, norm, new_emb, new_loc,
+                             np.array([778]), spill=1)
+    where1 = int(np.argwhere(np.asarray(out1["ids"]) == 778)[0][0])
+    assert where1 == least

@@ -257,9 +257,13 @@ def test_insert_invalidates_and_stays_bit_identical(engine_parts, rng):
     ids_d, sc_d = direct(eng2, tok, msk, loc, batch=2)
     assert np.array_equal(ids_s, ids_d)
     assert np.array_equal(sc_s, sc_d)
-    # and the inserted ids are actually retrievable by the server
-    assert set(np.unique(ids_s)) <= set(
-        np.asarray(server.engine.buffers["ids"]).ravel().tolist())
+    # and every served id is live: resident in the buffers or (pre-
+    # compaction) in the published snapshot's delta segment
+    snap_pub = server.engine.snapshot
+    live = set(np.asarray(snap_pub.buffers["ids"]).ravel().tolist())
+    if snap_pub.delta is not None:
+        live |= snap_pub.delta.ids_live
+    assert set(np.unique(ids_s)) <= live
 
 
 def test_delete_invalidates(engine_parts, rng):
@@ -272,6 +276,136 @@ def test_delete_invalidates(engine_parts, rng):
     ids2, _ = server.serve_all(tok, msk, loc)
     assert len(calls) == 2                            # recomputed
     assert not set(victims) & set(ids2[0].tolist())   # victims gone
+
+
+def test_inflight_key_is_versioned_across_publish(engine_parts, rng):
+    """Regression (the bug this PR fixes): the in-flight coalescing key
+    used to ignore the snapshot version, so a request arriving just
+    after a publish could coalesce onto a PRE-publish future and be
+    served an answer from the old index generation. Plant a resolved
+    future under the old version's key, publish, submit the identical
+    request: it must NOT coalesce — a fresh engine answer comes back."""
+    cfg = engine_parts[0]
+    server = make_server(engine_parts, batch_size=1)
+    tok, msk, loc = make_requests(rng, 1, server.engine.cfg)
+
+    async def go():
+        server._adopt_loop(asyncio.get_running_loop())
+        ver0 = server.engine.snapshot.meta.version
+        ekey = server_lib.exact_key(
+            np.ascontiguousarray(tok[0]), np.ascontiguousarray(msk[0]),
+            np.ascontiguousarray(loc[0]), server.cfg.k, server.cfg.cr)
+        stale = asyncio.get_running_loop().create_future()
+        stale.set_result(("stale-ids", "stale-scores"))
+        server._inflight[(ver0, ekey)] = stale    # pre-publish in-flight
+        server.insert_objects(                    # publish: version + 1
+            jnp.asarray(rng.normal(size=(2, cfg.d_model)), jnp.float32),
+            jnp.asarray(rng.uniform(size=(2, 2)), jnp.float32),
+            np.arange(4000, 4002))
+        return await server.submit(tok[0], msk[0], loc[0])
+
+    ids, scores = asyncio.run(go())
+    assert server.stats.coalesced == 0            # did NOT share the future
+    assert isinstance(ids, np.ndarray)            # fresh answer, not planted
+    eng2 = engine_lib.QueryEngine.from_snapshot(server.engine.snapshot,
+                                                backend="dense")
+    ids_d, sc_d = direct(eng2, tok, msk, loc, batch=1)
+    assert np.array_equal(ids, ids_d[0]) and np.array_equal(scores, sc_d[0])
+
+
+# ---------------------------------------------------------------------------
+# The LSM write path: delta accumulation, compaction triggers
+# ---------------------------------------------------------------------------
+
+
+def test_delta_write_path_accumulates_then_compacts(engine_parts, rng):
+    """Writes below ``delta_threshold`` accumulate in the delta (buffers
+    untouched — O(batch)); the write that crosses it compacts inline
+    (no running loop) and folds everything into the §4.3 clusters."""
+    cfg = engine_parts[0]
+    server = make_server(engine_parts, delta_threshold=8)
+    snap0 = server.engine.snapshot
+
+    def rows(n):
+        return (jnp.asarray(rng.normal(size=(n, cfg.d_model)), jnp.float32),
+                jnp.asarray(rng.uniform(size=(n, 2)), jnp.float32))
+
+    emb, loc = rows(5)
+    snap1 = server.insert_objects(emb, loc, np.arange(3000, 3005))
+    assert snap1.meta.delta_rows == 5
+    assert np.array_equal(np.asarray(snap1.buffers["ids"]),
+                          np.asarray(snap0.buffers["ids"]))  # base untouched
+    victims = np.asarray(snap0.buffers["ids"])[0, :2].tolist()
+    snap2 = server.delete_objects(victims)
+    assert snap2.meta.n_tombstones == 2 and server.stats.compactions == 0
+
+    emb, loc = rows(1)                 # 5 rows + 2 tombstones + 1 = 8
+    snap3 = server.insert_objects(emb, loc, np.array([3005]))
+    assert server.stats.compactions == 1
+    assert server.stats.compaction_triggers["size"] == 1
+    assert snap3.delta is None and snap3.meta.delta_rows == 0
+    ids = np.asarray(snap3.buffers["ids"])
+    assert ((ids >= 3000) & (ids <= 3005)).sum() == 6   # folded into base
+    assert not np.isin(ids, victims).any()
+    assert server.stats.writes == 3
+
+
+def test_compaction_defers_to_loop_tick(engine_parts, rng):
+    """With an event loop running, the threshold-crossing write returns
+    with the delta still attached; the fold lands on the next loop tick
+    (between flushes), never inside the write call."""
+    cfg = engine_parts[0]
+    server = make_server(engine_parts, delta_threshold=4)
+
+    async def go():
+        server._adopt_loop(asyncio.get_running_loop())
+        emb = jnp.asarray(rng.normal(size=(4, cfg.d_model)), jnp.float32)
+        loc = jnp.asarray(rng.uniform(size=(4, 2)), jnp.float32)
+        snap = server.insert_objects(emb, loc, np.arange(3100, 3104))
+        assert snap.meta.delta_rows == 4          # not folded in-call
+        assert server.stats.compactions == 0
+        await asyncio.sleep(0)                    # one tick
+        assert server.engine.snapshot.delta is None
+
+    asyncio.run(go())
+    assert server.stats.compactions == 1
+    assert (np.asarray(server.engine.snapshot.buffers["ids"]) >= 3100
+            ).sum() == 4
+
+
+def test_imbalance_trigger_compacts(engine_parts, rng):
+    """``max_imbalance``: tombstoning most of every cluster but one
+    skews the LIVE sizes past the bound and triggers the fold even
+    though the delta is nowhere near ``delta_threshold``."""
+    server = make_server(engine_parts, delta_threshold=10 ** 6,
+                        max_imbalance=1.5)
+    ids = np.asarray(server.engine.snapshot.buffers["ids"])
+    counts = np.asarray(server.engine.snapshot.buffers["counts"])
+    keep = int(counts.argmax())
+    victims = [int(i) for c in range(ids.shape[0]) if c != keep
+               for i in ids[c][ids[c] >= 0][2:]]   # leave 2 per other cluster
+    server.delete_objects(victims)
+    assert server.stats.compactions == 1
+    assert server.stats.compaction_triggers["imbalance"] == 1
+    snap = server.engine.snapshot
+    assert snap.delta is None
+    assert not np.isin(np.asarray(snap.buffers["ids"]), victims).any()
+
+
+def test_eager_path_when_delta_disabled(engine_parts, rng):
+    """``delta_threshold=0``: the legacy eager fold — every write goes
+    straight through index.insert/delete_objects into the buffers."""
+    cfg = engine_parts[0]
+    server = make_server(engine_parts, delta_threshold=0)
+    emb = jnp.asarray(rng.normal(size=(3, cfg.d_model)), jnp.float32)
+    loc = jnp.asarray(rng.uniform(size=(3, 2)), jnp.float32)
+    snap = server.insert_objects(emb, loc, np.arange(3200, 3203))
+    assert snap.delta is None and snap.meta.delta_rows == 0
+    assert (np.asarray(snap.buffers["ids"]) >= 3200).sum() == 3
+    snap2 = server.delete_objects([3200])
+    assert not (np.asarray(snap2.buffers["ids"]) == 3200).any()
+    assert server.stats.compactions == 0          # nothing to fold
+    assert server.stats.writes == 2
 
 
 def test_stale_loop_state_is_dropped(engine_parts, rng):

@@ -364,7 +364,8 @@ def test_open_loop_swap_zero_failed_or_torn(snap, rng):
 def test_server_insert_publishes_successor(snap, rng):
     """StreamingServer.insert_objects returns the published successor and
     the inserted ids are immediately retrievable; the old snapshot object
-    is untouched."""
+    is untouched. Pre-compaction the rows live in the delta segment —
+    ``compact_now`` folds them into the buffers."""
     server = server_lib.StreamingServer(
         engine_lib.QueryEngine.from_snapshot(snap, backend="dense"),
         server_lib.ServerConfig(batch_size=2, k=5, cr=4, backend="dense"))
@@ -377,4 +378,76 @@ def test_server_insert_publishes_successor(snap, rng):
     assert snap2.meta.version == snap.meta.version + 1
     assert server.stats.invalidations == 1
     assert not (np.asarray(snap.buffers["ids"]) >= 7000).any()
-    assert (np.asarray(snap2.buffers["ids"]) >= 7000).sum() == 3
+    assert snap.delta is None                       # predecessor untouched
+    # O(batch): rows pend in the delta, the base buffers are untouched
+    assert snap2.meta.delta_rows == 3
+    assert {7000, 7001, 7002} <= set(snap2.delta.ids_live)
+    assert not (np.asarray(snap2.buffers["ids"]) >= 7000).any()
+    snap3 = server.compact_now()
+    assert snap3.delta is None
+    assert (np.asarray(snap3.buffers["ids"]) >= 7000).sum() == 3
+
+
+# ---------------------------------------------------------------------------
+# Schema v3: the delta subtree round-trips
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("precision", ["f32", "int8"])
+def test_delta_roundtrip_bit_identical(snap, tmp_path, rng, precision):
+    """save → load of a snapshot carrying a delta segment (schema v3)
+    reproduces every byte — the delta rows, tombstones, meta — and
+    queries on the loaded artifact are bit-identical."""
+    from repro.core.delta import DeltaSegment
+
+    d = snap.cfg.d_model
+    snap_p = snap if precision == "f32" else snap.with_precision(precision)
+    seg = (DeltaSegment.empty(d, precision)
+           .insert(rng.normal(size=(4, d)).astype(np.float32),
+                   rng.uniform(size=(4, 2)).astype(np.float32),
+                   np.arange(7100, 7104))
+           .delete([7100, int(np.asarray(snap.buffers["ids"])[0, 0])]))
+    snap_d = snap_p.with_delta(seg)
+    assert snap_d.meta.delta_rows == 3 and snap_d.meta.n_tombstones == 2
+
+    api.save(snap_d, str(tmp_path))
+    loaded = api.load(str(tmp_path))
+    assert loaded.meta == snap_d.meta
+    assert loaded.delta is not None
+    assert loaded.delta.tombstones == seg.tombstones
+    assert loaded.delta.ids_live == seg.ids_live
+    for f in ("emb", "scale", "loc", "ids", "raw"):
+        assert np.array_equal(np.asarray(loaded.delta.arrays()[f]),
+                              np.asarray(seg.arrays()[f])), f
+
+    tok, msk, loc = make_requests(rng, 8, snap.cfg)
+    ids_m, sc_m = api.Searcher(snap_d, backend="dense").query(
+        tok, msk, loc, k=5, cr=2, batch=4)
+    ids_l, sc_l = api.Searcher(loaded, backend="dense").query(
+        tok, msk, loc, k=5, cr=2, batch=4)
+    assert np.array_equal(ids_m, ids_l)
+    assert np.array_equal(sc_m, sc_l)               # every score bit
+
+
+def test_with_precision_refuses_nonempty_delta(snap, rng):
+    """Requantization is only defined on a compacted snapshot: the delta
+    keeps raw f32 rows quantized at ITS tier, so switching tiers under a
+    live delta would desynchronize the two."""
+    from repro.core.delta import DeltaSegment
+
+    d = snap.cfg.d_model
+    seg = DeltaSegment.empty(d).insert(
+        rng.normal(size=(2, d)).astype(np.float32),
+        rng.uniform(size=(2, 2)).astype(np.float32), [7200, 7201])
+    snap_d = snap.with_delta(seg)
+    with pytest.raises(ValueError, match="delta"):
+        snap_d.with_precision("int8")
+    assert snap_d.compact().with_precision("int8").meta.precision == "int8"
+
+
+def test_with_delta_refuses_precision_mismatch(snap):
+    from repro.core.delta import DeltaSegment
+
+    seg = DeltaSegment.empty(snap.cfg.d_model, "int8")
+    with pytest.raises(ValueError, match="tiers must match"):
+        snap.with_delta(seg)                        # f32 snap, int8 delta
