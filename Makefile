@@ -3,6 +3,9 @@
 #   make test-slow          - everything, including e2e training +
 #                             interpret-mode decode sweeps (tens of
 #                             minutes on CPU)
+#   make test-mesh          - the mesh-sharding parity tier on 8 forced
+#                             CPU devices (tests/test_mesh_sharding.py +
+#                             tests/test_sharding_rules.py, DESIGN.md §12)
 #   make snapshot-roundtrip - IndexSnapshot save->load->query bit-identity
 #                             self-test on both backends x all precision
 #                             tiers (seconds)
@@ -10,12 +13,17 @@
 #   make bench-serving      - streaming-serving benchmark -> BENCH_serving.json
 #   make bench-kernels      - kernel roofline (backend x precision)
 #                             -> BENCH_kernels.json
+#   make bench-scalability  - Fig7 corpus scaling + mesh-sharded scale-out
+#                             sweep -> BENCH_scalability.json
 
 PY      := python
 PYPATH  := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}
+# multi-device CPU for the mesh tiers: must be exported before jax
+# first initialises its backends (conftest also force-sets it for pytest)
+MESHENV := XLA_FLAGS="--xla_force_host_platform_device_count=8"
 
-.PHONY: test test-slow snapshot-roundtrip bench-smoke bench-serving \
-        bench-kernels
+.PHONY: test test-slow test-mesh snapshot-roundtrip bench-smoke \
+        bench-serving bench-kernels bench-scalability
 
 test:
 	$(PYPATH) $(PY) -m pytest -x -q -m "not slow"
@@ -23,14 +31,21 @@ test:
 test-slow:
 	$(PYPATH) $(PY) -m pytest -x -q
 
+test-mesh:
+	$(MESHENV) $(PYPATH) $(PY) -m pytest -x -q \
+		tests/test_mesh_sharding.py tests/test_sharding_rules.py
+
 snapshot-roundtrip:
 	$(PYPATH) $(PY) -m repro.api
 
 bench-smoke:
-	$(PYPATH) $(PY) -m benchmarks.run --fast --only Kernel_roofline,Table4_memory,Serving_stream
+	$(MESHENV) $(PYPATH) $(PY) -m benchmarks.run --fast --only Kernel_roofline,Table4_memory,Serving_stream,Fig7_scalability
 
 bench-serving:
 	$(PYPATH) $(PY) -m benchmarks.bench_serving
 
 bench-kernels:
 	$(PYPATH) $(PY) -m benchmarks.bench_kernels
+
+bench-scalability:
+	$(MESHENV) $(PYPATH) $(PY) -m benchmarks.bench_scalability

@@ -1,30 +1,58 @@
-"""Paper Fig. 7: LIST / LIST-R query runtime vs corpus size (linear scaling).
+"""Paper Fig. 7: LIST / LIST-R query runtime vs corpus size (linear
+scaling) — plus the mesh-sharded serving scale-out sweep (DESIGN.md §12).
 
-The trained encoder + router are reused; only the corpus (and its buffers)
-grows — matching the paper's augmented-Geo-Glue methodology where no
-ground truth exists for the added POIs (efficiency only).
+Part 1 (corpus rows) reuses the trained encoder + router and only grows
+the corpus (and its buffers) — matching the paper's augmented-Geo-Glue
+methodology where no ground truth exists for the added POIs
+(efficiency only).
+
+Part 2 (mesh rows) takes the trained retriever's OWN snapshot (whose
+corpus has ground truth) and shards its cluster buffers across
+{1, 2, 4, 8} devices: per-device resident bytes must shrink ~linearly
+with the shard count while recall@10 stays EXACTLY unchanged (the
+parity contract — top-k ids are bit-identical across placements,
+tests/test_mesh_sharding.py). On CPU the devices come from
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set before jax
+imports — the Makefile bench-smoke target and the CI job export it);
+shard counts above the available device count are skipped.
+
+Emits ``BENCH_scalability.json`` (schema in README.md §Benchmarks).
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from benchmarks import common
 from repro import api
+from repro.core import cluster_metrics as cm
 from repro.core import index as il
 from repro.core import pipeline as pl
 from repro.core.snapshot import IndexSnapshot
 from repro.data import GeoCorpus, GeoCorpusConfig
 
+OUT_PATH = "BENCH_scalability.json"
+SHARD_COUNTS = (1, 2, 4, 8)
+K = 10
 
-def run():
-    r = common.get_retriever()
+
+def _time_query(searcher, tok, msk, loc, *, k, cr, batch, reps=3):
+    searcher.query(tok, msk, loc, k=k, cr=cr, batch=batch)       # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = searcher.query(tok, msk, loc, k=k, cr=cr, batch=batch)
+    return (time.perf_counter() - t0) / reps, out
+
+
+def _corpus_rows(r):
+    """Fig. 7 proper: runtime vs corpus size on ONE device."""
     cfg = r.cfg
-    rows = []
-    te_small, _ = common.test_split_positives(common.get_corpus())
+    rows, report = [], []
     for n in (2000, 4000, 8000, 16000):
         big = GeoCorpus(GeoCorpusConfig(
             n_objects=n, n_queries=64, n_topics=common.N_TOPICS,
@@ -40,7 +68,6 @@ def run():
         q_loc = big.q_loc[:64].astype(np.float32)
         tok_b, msk_b = big.query_tokens(np.arange(64))
         from repro.core import relevance
-        import jax
 
         @jax.jit
         def score(tok, msk, ql):
@@ -80,7 +107,93 @@ def run():
             "brute_ms/64q": t_brute * 1e3,
             "LIST_ms/64q": t_list * 1e3,
             "cap": buf["capacity"]}))
-    return rows
+        report.append({"n_objects": n, "brute_ms": t_brute * 1e3,
+                       "list_ms": t_list * 1e3,
+                       "capacity": int(buf["capacity"])})
+    return rows, report
+
+
+def _mesh_rows(r):
+    """Scale-out sweep: per-device resident bytes vs shard count, recall
+    and ids pinned against the unsharded engine."""
+    corpus = common.get_corpus()
+    te, positives = common.test_split_positives(corpus)
+    snap = r.snapshot()
+    c = int(np.asarray(snap.buffers["ids"]).shape[0])
+    tok, msk = corpus.query_tokens(te)
+    loc = corpus.q_loc[te].astype(np.float32)
+
+    base_bytes = int(sum(np.asarray(snap.buffers[k]).nbytes
+                         for k in ("emb", "loc", "ids", "scale", "counts")))
+    n_dev = jax.device_count()
+    counts = [s for s in SHARD_COUNTS if s <= n_dev]
+    skipped = [s for s in SHARD_COUNTS if s > n_dev]
+    if skipped:
+        print(f"# scalability: {n_dev} devices — skipping shard counts "
+              f"{skipped} (export XLA_FLAGS="
+              f"--xla_force_host_platform_device_count=8)")
+
+    rows, report = [], []
+    ref_ids = None
+    for s in counts:
+        if s == 1:
+            sd, bytes_dev = snap, base_bytes
+        else:
+            sd = snap.with_mesh(s)
+            bytes_dev = max(sd.shards.nbytes_per_device())
+        t, (ids, _) = _time_query(api.Searcher(sd, backend="dense"),
+                                  tok, msk, loc, k=K, cr=1, batch=64)
+        if ref_ids is None:
+            ref_ids = ids
+        recall = cm.recall_at_k(ids, positives, K)
+        ids_match = float(np.mean(ids == ref_ids))
+        rows.append(common.fmt_row(f"mesh_shards={s}", {
+            "bytes/device_MB": bytes_dev / 1e6,
+            f"recall@{K}": recall,
+            "ids_match": ids_match,
+            "LIST_ms": t * 1e3}))
+        report.append({"n_shards": s, "bytes_per_device": bytes_dev,
+                       "recall_at_10": float(recall),
+                       "ids_match_vs_unsharded": ids_match,
+                       "list_ms": t * 1e3})
+
+    acceptance = {"device_count": n_dev, "shard_counts": counts,
+                  "pass": True}
+    if len(report) > 1:
+        s_max = report[-1]["n_shards"]
+        got = report[0]["bytes_per_device"] / report[-1]["bytes_per_device"]
+        # the per-shard sentinel empty cluster caps the achievable cut:
+        # c rows shrink to ceil(c/S)+1 rows per device, not c/S
+        ideal = c / (-(-c // s_max) + 1)
+        recall_delta = report[-1]["recall_at_10"] - report[0]["recall_at_10"]
+        ids_match = min(row["ids_match_vs_unsharded"] for row in report)
+        acceptance.update({
+            "bytes_reduction": got,
+            "ideal_reduction": ideal,
+            "recall_delta": recall_delta,
+            "ids_match": ids_match,
+            "pass": bool(got >= 0.8 * ideal and abs(recall_delta) < 1e-12
+                         and ids_match == 1.0),
+        })
+    return rows, report, acceptance
+
+
+def run(out_path: str = OUT_PATH):
+    r = common.get_retriever()
+    corpus_rows, corpus_report = _corpus_rows(r)
+    mesh_rows, mesh_report, acceptance = _mesh_rows(r)
+    report = {
+        "bench": "scalability",
+        "config": {"n_clusters": r.cfg.n_clusters,
+                   "n_objects": common.N_OBJECTS, "k": K},
+        "corpus_rows": corpus_report,
+        "mesh_rows": mesh_report,
+        "acceptance": acceptance,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return (corpus_rows + mesh_rows
+            + [common.fmt_row("scalability(json)", {"path": out_path})])
 
 
 if __name__ == "__main__":

@@ -59,8 +59,9 @@ def build(cfg, corpus, *, rel_steps: int = 200, idx_steps: int = 400,
           batch: int = 64, rel_lr: float = 1.5e-3, idx_lr: float = 3e-3,
           capacity: Optional[int] = None, spill: int = 3,
           spatial_mode: str = "step", weight_mode: str = "mlp",
-          precision: str = "f32", seed: int = 0, verbose: bool = False,
-          log_every: Optional[int] = None, return_retriever: bool = False):
+          precision: str = "f32", mesh=None, seed: int = 0,
+          verbose: bool = False, log_every: Optional[int] = None,
+          return_retriever: bool = False):
     """Train LIST end-to-end and return the built :class:`IndexSnapshot`.
 
     Runs the paper's three phases — relevance training (Eq. 8), index
@@ -73,6 +74,12 @@ def build(cfg, corpus, *, rel_steps: int = 200, idx_steps: int = 400,
     quantization, dequantized in-kernel; locations, ids, and the padding
     mask stay exact. An existing f32 snapshot can be requantized later
     with ``snap.with_precision("int8")`` without retraining.
+
+    ``mesh`` (an int shard count or a ``jax.sharding.Mesh`` over the
+    logical ``"cluster"`` axis) partitions the resident cluster buffers
+    across devices along the cluster axis, router and relevance params
+    replicated (DESIGN.md §12). Query results keep bit-identical top-k
+    ids vs the single-device build at any shard count.
 
     ``return_retriever=True`` additionally returns the retriever, for
     callers that need training-time state the artifact deliberately
@@ -88,6 +95,8 @@ def build(cfg, corpus, *, rel_steps: int = 200, idx_steps: int = 400,
                   verbose=verbose, log_every=log)
     r.build(capacity=capacity, spill=spill, precision=precision)
     snap = r.snapshot()
+    if mesh is not None:
+        snap = snap.with_mesh(mesh)
     return (snap, r) if return_retriever else snap
 
 
@@ -97,10 +106,20 @@ def save(snapshot: IndexSnapshot, directory: str, *, keep: int = 3) -> str:
     return snapshot.save(directory, keep=keep)
 
 
-def load(directory: str, *, step: Optional[int] = None) -> IndexSnapshot:
+def load(directory: str, *, step: Optional[int] = None,
+         mesh=None) -> IndexSnapshot:
     """Load the latest (or a specific ``step``/version) committed
-    snapshot. Raises a clear error on schema-version mismatch."""
-    return IndexSnapshot.load(directory, step=step)
+    snapshot. Raises a clear error on schema-version mismatch.
+
+    Arrays are persisted global (gathered on save), so a snapshot can be
+    re-sharded elastically at load time: ``mesh`` (int shard count or a
+    ``jax.sharding.Mesh``) re-partitions the cluster buffers for this
+    process's device topology, independent of how the saving process was
+    sharded (DESIGN.md §12)."""
+    snap = IndexSnapshot.load(directory, step=step)
+    if mesh is not None:
+        snap = snap.with_mesh(mesh)
+    return snap
 
 
 # ---------------------------------------------------------------------------
@@ -278,6 +297,27 @@ def _roundtrip_selftest(directory: Optional[str] = None) -> int:
         ok = (np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1]))
         print(f"snapshot-roundtrip [delta    |{precision:4s}] "
               f"{'bit-identical' if ok else 'MISMATCH'}")
+        failures += 0 if ok else 1
+        # mesh leg (schema v4): a mesh-sharded snapshot must keep
+        # bit-identical top-k ids vs the single-device engine, and its
+        # save/load round trip (gather-on-save) must serve identically.
+        # Adaptive: under plain CPU there is 1 device, under the mesh CI
+        # job XLA_FLAGS forces 8 — shard as wide as the host allows.
+        n_shards = min(2, jax.device_count())
+        snap_m = snap_p.with_mesh(n_shards)
+        a = Searcher(snap_p, backend="dense").query(tok, msk, loc, k=5,
+                                                    cr=2, batch=4)
+        b = Searcher(snap_m, backend="dense").query(tok, msk, loc, k=5,
+                                                    cr=2, batch=4)
+        tmp_m = os.path.join(root, precision + "-mesh")
+        save(snap_m, tmp_m)
+        c_ids, _ = Searcher(load(tmp_m, mesh=n_shards),
+                            backend="dense").query(tok, msk, loc, k=5,
+                                                   cr=2, batch=4)
+        ok = (np.array_equal(a[0], b[0]) and np.array_equal(b[0], c_ids)
+              and np.allclose(a[1], b[1], rtol=2e-5, atol=1e-6))
+        print(f"snapshot-roundtrip [mesh S={n_shards} |{precision:4s}] "
+              f"{'ids bit-identical' if ok else 'MISMATCH'}")
         failures += 0 if ok else 1
     return failures
 

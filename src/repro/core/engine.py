@@ -363,6 +363,51 @@ def dense_cluster_major(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc, buf_ids,
 # ---------------------------------------------------------------------------
 
 
+def _routed_topk(q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids,
+                 buf_scale, w_hat, *, k: int, backend: str, interpret: bool,
+                 dist_max: float, block_n: int, precision: str):
+    """Backend dispatch for the routed scan: score the ``top_c``-routed
+    clusters of an explicit buffer set and keep the top ``k`` — the body
+    shared by :func:`make_query_fn` (inline, after encode+route) and
+    :func:`make_shard_topk_fn` (per shard, routes pre-localized).
+    ``backend`` must be resolved (never "auto"). Returns (ids, scores).
+    """
+    # f32/bf16 stream no scales: the astype upcast is the whole dequant
+    scale = buf_scale if precision == "int8" else None
+    if backend == "pallas":
+        from repro.kernels import fused_topk_score as fts
+        score, ids = fts.fused_topk_score_routed(
+            q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids, w_hat,
+            k=k, dist_max=dist_max, block_n=block_n, buf_scale=scale,
+            interpret=interpret)
+    elif backend == "pallas-cm":
+        # cluster-major (DESIGN.md §10): dedupe the routed clusters,
+        # stream each distinct one ONCE against its query roster
+        from repro.core import serving as serving_lib
+        from repro.kernels import fused_topk_score as fts
+        b = q_emb.shape[0]
+        cr = top_c.shape[1]
+        n = b * cr
+        u, roster, _, _ = serving_lib.cluster_major_plan(
+            top_c, n_clusters=buf_emb.shape[0])
+        qidx = serving_lib.roster_query_rows(roster, cr=cr, n_total=n)
+        ps, pi = fts.fused_topk_score_cluster_major(
+            q_emb[qidx], q_loc[qidx], w[qidx], u, roster,
+            buf_emb, buf_loc, buf_ids, w_hat, k=k, dist_max=dist_max,
+            n_total=n, block_n=block_n, buf_scale=scale,
+            interpret=interpret)
+        score, ids = merge_cluster_major(ps, pi, roster, b=b, cr=cr, k=k)
+    elif backend == "dense-cm":
+        score, ids = dense_cluster_major(
+            q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids, w_hat,
+            k=k, dist_max=dist_max, buf_scale=scale)
+    else:
+        score, ids = dense_routed_topk(
+            q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids, w_hat,
+            k=k, dist_max=dist_max, buf_scale=scale)
+    return ids, score
+
+
 def make_query_fn(cfg, *, cr: int = 1, k: int = 20, backend: str = "auto",
                   interpret: Optional[bool] = None,
                   dist_max: float = 1.4142, weight_mode: str = "mlp",
@@ -421,39 +466,10 @@ def make_query_fn(cfg, *, cr: int = 1, k: int = 20, backend: str = "auto",
         top_c, _ = index_lib.route_queries(index_params, feats, cr=cr)
         w = relevance.st_weights(rel_params, q_emb,
                                  weight_mode=weight_mode)          # (B, 2)
-        # f32/bf16 stream no scales: the astype upcast is the whole dequant
-        scale = buf_scale if precision == "int8" else None
-        if backend == "pallas":
-            from repro.kernels import fused_topk_score as fts
-            score, ids = fts.fused_topk_score_routed(
-                q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids, w_hat,
-                k=k, dist_max=dist_max, block_n=block_n, buf_scale=scale,
-                interpret=interpret)
-        elif backend == "pallas-cm":
-            # cluster-major (DESIGN.md §10): dedupe the routed clusters,
-            # stream each distinct one ONCE against its query roster
-            from repro.core import serving as serving_lib
-            from repro.kernels import fused_topk_score as fts
-            b = q_emb.shape[0]
-            n = b * cr
-            u, roster, _, _ = serving_lib.cluster_major_plan(
-                top_c, n_clusters=buf_emb.shape[0])
-            qidx = serving_lib.roster_query_rows(roster, cr=cr, n_total=n)
-            ps, pi = fts.fused_topk_score_cluster_major(
-                q_emb[qidx], q_loc[qidx], w[qidx], u, roster,
-                buf_emb, buf_loc, buf_ids, w_hat, k=k, dist_max=dist_max,
-                n_total=n, block_n=block_n, buf_scale=scale,
-                interpret=interpret)
-            score, ids = merge_cluster_major(ps, pi, roster, b=b, cr=cr, k=k)
-        elif backend == "dense-cm":
-            score, ids = dense_cluster_major(
-                q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids, w_hat,
-                k=k, dist_max=dist_max, buf_scale=scale)
-        else:
-            score, ids = dense_routed_topk(
-                q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids, w_hat,
-                k=k, dist_max=dist_max, buf_scale=scale)
-        return ids, score
+        return _routed_topk(q_emb, q_loc, w, top_c, buf_emb, buf_loc,
+                            buf_ids, buf_scale, w_hat, k=k, backend=backend,
+                            interpret=interpret, dist_max=dist_max,
+                            block_n=block_n, precision=precision)
 
     return jax.jit(query_fn)
 
@@ -473,6 +489,111 @@ def make_route_fn(cfg, *, cr: int = 1):
         return top_c
 
     return jax.jit(route_fn)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded execution (DESIGN.md §12): shared prefix → per-shard
+# scan → host tree merge. The shard_topk idiom of
+# pseudo_labels.mine_negatives_sharded, promoted to the serving path.
+# ---------------------------------------------------------------------------
+
+
+def make_prefix_fn(cfg, *, cr: int = 1, weight_mode: str = "mlp"):
+    """Build the jitted GLOBAL prefix of the sharded query phase:
+    encode → mixing weights → route, run ONCE per chunk on the default
+    device (router + relevance params are replicated). ``fn(rel_params,
+    index_params, norm, q_tokens, q_mask, q_loc) -> (q_emb (B, d),
+    w (B, 2), top_c (B, cr))``.
+
+    One program for EVERY shard count (its shapes don't depend on the
+    mesh), so ``q_emb``/``w``/``top_c`` are bit-identical across
+    placements — the first leg of the parity contract."""
+    def prefix_fn(rel_params, index_params, norm, q_tokens, q_mask, q_loc):
+        q_emb = relevance.encode_queries(rel_params, q_tokens, q_mask, cfg)
+        feats = index_lib.build_features(q_emb, q_loc, norm)
+        top_c, _ = index_lib.route_queries(index_params, feats, cr=cr)
+        w = relevance.st_weights(rel_params, q_emb, weight_mode=weight_mode)
+        return q_emb, w, top_c
+
+    return jax.jit(prefix_fn)
+
+
+def make_shard_topk_fn(*, k: int = 20, backend: str = "dense",
+                       interpret: Optional[bool] = None,
+                       dist_max: float = 1.4142, block_n: int = 512,
+                       precision: str = "f32"):
+    """Build the jitted PER-SHARD suffix of the sharded query phase:
+    score one shard's local cluster buffers against pre-encoded queries
+    and pre-localized routes, any backend (DESIGN.md §12).
+
+    signature: fn(w_hat, buf_emb, buf_loc, buf_ids, buf_scale,
+                  q_emb, q_loc, w, top_c) -> (ids (B, k), scores (B, k))
+
+    ``buf_*`` are one shard's local buffers (``c_local + 1`` clusters,
+    the last the sentinel empty cluster) and ``top_c`` holds LOCAL rows
+    (``serving.localize_routes`` — off-shard routes point at the
+    sentinel, scoring ``(−1, NEG_INF)`` like padding). Execution is
+    pinned by data placement: the buffers are device-committed
+    (``sharding.ClusterShards.parts``), so jax runs each shard's call
+    on its shard's device — pass the query-side arrays as host numpy
+    (uncommitted) or the mixed-commitment check will refuse the call.
+
+    Per-candidate scores are bitwise identical to the single-device
+    scan: the same ``cr·cap`` candidate rows (off-shard ones masked),
+    the same per-row reductions, so per-shard top-k + the host tree
+    merge (:func:`merge_shard_topk`) reproduce the single-device top-k
+    exactly whenever scores at the k boundary are distinct."""
+    backend, interpret = resolve_backend(backend, interpret)
+    if precision not in index_lib.PRECISIONS:
+        raise ValueError(f"precision must be one of {index_lib.PRECISIONS}, "
+                         f"got {precision!r}")
+
+    def shard_fn(w_hat, buf_emb, buf_loc, buf_ids, buf_scale,
+                 q_emb, q_loc, w, top_c):
+        return _routed_topk(q_emb, q_loc, w, top_c, buf_emb, buf_loc,
+                            buf_ids, buf_scale, w_hat, k=k, backend=backend,
+                            interpret=interpret, dist_max=dist_max,
+                            block_n=block_n, precision=precision)
+
+    return jax.jit(shard_fn)
+
+
+def merge_shard_topk(parts, *, k: Optional[int] = None):
+    """Pairwise tree-reduce per-shard partial top-k lists (host, numpy)
+    — ``pseudo_labels.shard_topk``'s merge, promoted to serving.
+
+    ``parts`` is a sequence of per-shard ``(ids (B, m), scores (B, m))``
+    pairs in shard order. Pairs are merged pairwise (top-k of top-ks —
+    each level keeps the best ``k``) until one list remains; ``k``
+    defaults to the partial width. The per-level sort is STABLE with
+    the lower-index operand's entries first, so an exact cross-shard
+    score tie resolves in shard order — the one documented divergence
+    from single-device tie order (DESIGN.md §12); within a shard ties
+    already match (same ``jax.lax.top_k``). Returns ``(ids (B, k) i32,
+    scores (B, k) f32 descending)`` — the engine's output contract.
+    """
+    items = [(np.asarray(i), np.asarray(v, np.float32)) for i, v in parts]
+    if not items:
+        raise ValueError("merge_shard_topk: no partial lists")
+    if k is None:
+        k = items[0][0].shape[-1]
+
+    def merge2(a, b):
+        ci = np.concatenate([a[0], b[0]], axis=-1)
+        cv = np.concatenate([a[1], b[1]], axis=-1)
+        order = np.argsort(-cv, axis=-1, kind="stable")[..., :k]
+        return (np.take_along_axis(ci, order, axis=-1),
+                np.take_along_axis(cv, order, axis=-1))
+
+    while len(items) > 1:
+        nxt = [merge2(items[i], items[i + 1])
+               for i in range(0, len(items) - 1, 2)]
+        if len(items) % 2:
+            nxt.append(items[-1])
+        items = nxt
+    ids, scores = items[0]
+    return (ids[..., :k].astype(np.int32),
+            scores[..., :k].astype(np.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -678,6 +799,7 @@ class QueryEngine:
         self._plans: "collections.OrderedDict" = collections.OrderedDict()
         self._route_plans = {}          # keyed cr: tiny, never evicted
         self._delta_plans = {}          # keyed (k, precision): tiny too
+        self._prefix_plans = {}         # keyed cr: the sharded-path prefix
 
     # --- construction -----------------------------------------------------
 
@@ -844,6 +966,75 @@ class QueryEngine:
         return cluster_major_variant(base, dedup,
                                      threshold=self.cm_threshold)
 
+    def prefix_fn(self, *, cr: int):
+        """The jitted sharded-path prefix (:func:`make_prefix_fn`) for
+        ``cr`` — one per engine regardless of shard count, so encode/
+        route results are bit-identical across placements."""
+        if cr not in self._prefix_plans:
+            self._prefix_plans[cr] = make_prefix_fn(
+                self.cfg, cr=cr, weight_mode=self.weight_mode)
+        return self._prefix_plans[cr]
+
+    def shard_topk_fn(self, *, k: int, backend: Optional[str] = None,
+                      batch: Optional[int] = None,
+                      precision: Optional[str] = None):
+        """The traced per-shard plan (:func:`make_shard_topk_fn`),
+        cached in the same bounded LRU as the query plans under the key
+        ``("shard", batch, k, backend, precision)``. ONE program serves
+        every shard — the local buffer shapes agree across shards by
+        construction (sentinel + remainder padding), and jax compiles
+        one executable per committed device."""
+        backend = self.backend if backend is None else backend
+        if precision is None:
+            precision = self._snapshot.meta.precision
+        key = ("shard", batch, k, backend, precision)
+        if key not in self._plans:
+            while len(self._plans) >= self.max_plans:
+                self._plans.popitem(last=False)
+            self._plans[key] = make_shard_topk_fn(
+                k=k, backend=backend, interpret=self.interpret,
+                dist_max=self.dist_max, precision=precision)
+        self._plans.move_to_end(key)
+        return self._plans[key]
+
+    def _query_sharded(self, snap, q_tokens, q_mask, q_loc, *, k: int,
+                       cr: int, batch: int, backend: Optional[str]):
+        """The mesh-sharded scan (DESIGN.md §12): shared prefix on the
+        default device, localized per-shard scans pinned to each
+        shard's device by their committed buffers, host tree merge."""
+        from repro.core import serving as serving_lib
+
+        shards = snap.shards
+        backend = self.backend if backend is None else backend
+        prefix = self.prefix_fn(cr=cr)
+        sfn = self.shard_topk_fn(k=k, backend=backend, batch=batch,
+                                 precision=snap.meta.precision)
+        # host (uncommitted) copies of everything the per-shard calls
+        # consume: a committed default-device operand would clash with
+        # buffers committed on shard s (jax refuses mixed commitments)
+        w_hat = np.asarray(snap.w_hat)
+
+        def chunk_fn(t, m, l):
+            q_emb, w, top_c = prefix(snap.rel_params, snap.index_params,
+                                     snap.norm, t, m, l)
+            q_emb = np.asarray(q_emb)
+            w = np.asarray(w)
+            top_c = np.asarray(top_c)
+            loc = np.asarray(l)
+            partials = []
+            for s, part in enumerate(shards.parts):
+                local_c = serving_lib.localize_routes(
+                    top_c, shards.shard_of, shards.local_of, s,
+                    sentinel=shards.sentinel)
+                # async dispatch: shard s computes while s+1 dispatches
+                partials.append(sfn(w_hat, part["emb"], part["loc"],
+                                    part["ids"], part["scale"],
+                                    q_emb, loc, w, local_c))
+            return merge_shard_topk(
+                [(np.asarray(i), np.asarray(v)) for i, v in partials], k=k)
+
+        return run_batched(chunk_fn, [q_tokens, q_mask, q_loc], batch=batch)
+
     def delta_scan_fn(self, *, k: int, precision: str):
         """The jitted delta scan plan for ``(k, precision)``. Retraces
         lazily per padded row-count bucket (:data:`DELTA_PAD_BUCKET`)."""
@@ -895,6 +1086,11 @@ class QueryEngine:
         lists tombstone-filtered, and both merged by
         :func:`merge_delta`. A compacted (or delta-free) snapshot skips
         all of it — the fast path is byte-identical to before.
+
+        When the pinned snapshot is mesh-sharded (``snap.shards``,
+        DESIGN.md §12), the base scan runs per shard and tree-merges
+        (:meth:`_query_sharded`) BEFORE the delta merge — the delta
+        path is placement-agnostic and composes unchanged.
         """
         snap = self._snapshot if snapshot is None else snapshot
         # the per-batch cluster-major pick engages whenever the request
@@ -921,14 +1117,21 @@ class QueryEngine:
                      * TOMBSTONE_K_BUCKET)
             pool = cr * int(buf["capacity"])
             k_fetch = max(k, min(k + extra, pool))
-        fn = self.query_fn(k=k_fetch, cr=cr, backend=backend, batch=batch,
-                           precision=snap.meta.precision)
-        w_hat = snap.w_hat          # once per call, not per chunk
-        ids, scores = run_batched(
-            lambda t, m, l: fn(snap.rel_params, snap.index_params,
-                               w_hat, snap.norm, buf["emb"], buf["loc"],
-                               buf["ids"], buf["scale"], t, m, l),
-            [q_tokens, q_mask, q_loc], batch=batch)
+        if getattr(snap, "shards", None) is not None:
+            # mesh-sharded snapshot (DESIGN.md §12): per-shard plans +
+            # host tree merge, then the same delta merge below
+            ids, scores = self._query_sharded(
+                snap, q_tokens, q_mask, q_loc, k=k_fetch, cr=cr,
+                batch=batch, backend=backend)
+        else:
+            fn = self.query_fn(k=k_fetch, cr=cr, backend=backend,
+                               batch=batch, precision=snap.meta.precision)
+            w_hat = snap.w_hat          # once per call, not per chunk
+            ids, scores = run_batched(
+                lambda t, m, l: fn(snap.rel_params, snap.index_params,
+                                   w_hat, snap.norm, buf["emb"], buf["loc"],
+                                   buf["ids"], buf["scale"], t, m, l),
+                [q_tokens, q_mask, q_loc], batch=batch)
         if not use_delta:
             return ids, scores
         d_ids = d_scores = None

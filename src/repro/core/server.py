@@ -640,6 +640,13 @@ class StreamingServer:
             "compactions": s.compactions,
             "compaction_triggers": dict(s.compaction_triggers),
         }
+        snap = self.engine.snapshot
+        out["n_shards"] = snap.meta.n_shards
+        if snap.shards is not None:
+            # mesh-sharded serving (DESIGN.md §12): resident bytes per
+            # device — the number that should shrink ~linearly with the
+            # shard count at unchanged recall (bench_scalability.py)
+            out["shard_bytes_per_device"] = snap.shards.nbytes_per_device()
         if wall_seconds is not None and wall_seconds > 0:
             out["qps"] = s.n_requests / wall_seconds
         return out

@@ -30,6 +30,7 @@ from __future__ import annotations
 import functools
 from typing import Optional, Tuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -152,6 +153,33 @@ def cluster_major_plan(top_c, *, n_clusters: int,
     u = jnp.zeros((u_max + 1,), jnp.int32)
     u = u.at[u_dest].set(sorted_c.astype(jnp.int32))[:u_max]
     return u, roster, n_distinct, n_dropped
+
+
+def localize_routes(top_c, shard_of, local_of, shard: int, *,
+                    sentinel: int):
+    """Map GLOBAL routed cluster ids to one shard's LOCAL buffer rows
+    (host, numpy) — the route-localization step of mesh-sharded serving
+    (DESIGN.md §12).
+
+    ``top_c (B, cr)`` global routed cluster ids; ``shard_of`` /
+    ``local_of`` the ``(c,)`` placement maps of
+    ``sharding.ClusterShards``; ``sentinel`` the shard's appended empty
+    cluster row (``ClusterShards.sentinel``). Routes owned by ``shard``
+    map to their local row; every other route maps to the sentinel, so
+    the per-shard plan keeps its static ``(B, cr)`` shape and off-shard
+    candidates mask to ``(−1, NEG_INF)`` exactly like padding slots —
+    never clamped into a real cluster by jit's out-of-bounds indexing.
+
+    This is the ONE definition of off-shard route semantics, shared by
+    the engine's sharded path and the mesh parity tests. Duplicate
+    routes to one cluster land on one shard together, preserving the
+    single-device duplicate semantics the cluster-major plan relies on.
+    """
+    tc = np.asarray(top_c)
+    shard_of = np.asarray(shard_of)
+    local_of = np.asarray(local_of)
+    on = shard_of[tc] == shard
+    return np.where(on, local_of[tc], sentinel).astype(np.int32)
 
 
 def roster_query_rows(roster, *, cr: int, n_total: int):

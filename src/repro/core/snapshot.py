@@ -67,7 +67,14 @@ from repro.core import spatial as sp
 # ``meta.delta_rows`` / ``meta.n_tombstones`` the identity block. A v2
 # artifact cannot declare pending mutations, so loads across the bump
 # fail the schema gate rather than silently dropping them.
-SCHEMA_VERSION = 3
+# v4: mesh-sharded serving (DESIGN.md §12) — ``meta.n_shards`` joins
+# the identity block as placement provenance. Arrays are still saved
+# GLOBAL (gather-on-save: a sharded snapshot keeps its host-side global
+# buffers, so the artifact bakes in no topology); load() always hands
+# back an unsharded snapshot and ``api.load(..., mesh=)`` /
+# ``with_mesh`` re-shard under whatever device count the loading host
+# has — the elastic 8→4→1 reload the parity tests pin.
+SCHEMA_VERSION = 4
 
 # buffer keys that are arrays (saved as leaves) vs host-side ints (meta)
 _BUFFER_ARRAYS = ("emb", "loc", "ids", "counts", "scale")
@@ -149,6 +156,13 @@ class SnapshotMeta:
                     reading any array
     delta_rows      rows pending in the delta segment (0 = compacted)
     n_tombstones    ids deleted from the base since the last compaction
+    n_shards        device shards the cluster buffers are partitioned
+                    across (DESIGN.md §12); 1 = single-device. Placement
+                    provenance, NOT content identity: with_mesh derives
+                    a re-placed snapshot withOUT a version bump (results
+                    are bit-identical by the parity contract), and
+                    load() always normalizes to 1 — the artifact's
+                    arrays are global, re-shard after loading
 
     ``n_objects`` counts the BASE buffers only (counts.sum()); the live
     corpus size is ``n_objects - n_tombstones + delta_rows`` assuming
@@ -165,6 +179,7 @@ class SnapshotMeta:
     precision: str = "f32"
     delta_rows: int = 0
     n_tombstones: int = 0
+    n_shards: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -187,6 +202,15 @@ class IndexSnapshot:
     (:class:`repro.core.delta.DeltaSegment`, DESIGN.md §11): rows
     inserted since the base buffers were built plus tombstoned ids.
     ``None`` means "no pending mutations" (base-only fast path).
+
+    ``shards`` is the optional mesh placement
+    (:class:`repro.distributed.sharding.ClusterShards`, DESIGN.md §12):
+    per-device committed partitions of the cluster buffers along the
+    cluster axis, derived by :meth:`with_mesh`. When set, ``buffers``
+    holds the HOST-side global arrays (shapes / persistence / compaction
+    — device memory only carries the per-shard parts) and
+    ``QueryEngine.query`` runs the per-shard plan + tree merge instead
+    of the single-device scan. ``None`` = unsharded (the default).
     """
     cfg: DualEncoderConfig
     rel_params: Any
@@ -195,6 +219,7 @@ class IndexSnapshot:
     buffers: dict
     meta: SnapshotMeta
     delta: Optional[delta_lib.DeltaSegment] = None
+    shards: Optional[Any] = None
 
     # --- construction -----------------------------------------------------
 
@@ -239,7 +264,63 @@ class IndexSnapshot:
         meta = dataclasses.replace(
             self.meta, version=self.meta.version + 1, built_at=time.time(),
             n_objects=int(np.asarray(buffers["counts"]).sum()))
-        return dataclasses.replace(self, buffers=buffers, meta=meta)
+        # content changed: a predecessor's mesh parts are stale, re-shard
+        out = dataclasses.replace(self, buffers=buffers, meta=meta,
+                                  shards=None)
+        return out._reshard_like(self)
+
+    def with_mesh(self, mesh, *, assignment=None) -> "IndexSnapshot":
+        """Derive the same snapshot with its cluster buffers partitioned
+        across a device mesh (DESIGN.md §12): ``mesh`` is a shard count
+        or a mesh carrying the ``cluster`` axis; ``assignment`` an
+        optional ``(c,)`` cluster→shard map. Router/relevance params
+        replicate (they stay plain snapshot fields — every per-shard
+        plan reads the same reference).
+
+        Placement, NOT content: results are bit-identical to the
+        unsharded snapshot (the parity contract the mesh test tier
+        pins), so the version does NOT bump and server result caches
+        keyed on it stay valid across a re-shard publish. ``buffers``
+        drops to host numpy — device memory holds only the per-shard
+        parts. ``with_mesh(None)`` (or :meth:`unshard`) removes the
+        placement. A non-empty delta segment rides along unsharded (it
+        is small and host-merged, DESIGN.md §11)."""
+        from repro.distributed import sharding as sharding_lib
+
+        if mesh is None:
+            return self.unshard()
+        host = {k: np.asarray(self.buffers[k]) for k in _BUFFER_ARRAYS}
+        for k in _BUFFER_SCALARS + ("precision",):
+            host[k] = self.buffers[k]
+        shards = sharding_lib.shard_cluster_buffers(host, mesh,
+                                                    assignment=assignment)
+        meta = dataclasses.replace(self.meta, n_shards=shards.n_shards)
+        return dataclasses.replace(self, buffers=host, shards=shards,
+                                   meta=meta)
+
+    def unshard(self) -> "IndexSnapshot":
+        """Drop the mesh placement: single-device serving again, with
+        the global buffers re-materialized as device arrays (the
+        unsharded fast path keeps them resident). No version bump —
+        the placement inverse of :meth:`with_mesh`."""
+        if self.shards is None and self.meta.n_shards == 1:
+            return self
+        buffers = dict(self.buffers)
+        for k in _BUFFER_ARRAYS:
+            buffers[k] = jnp.asarray(buffers[k])
+        meta = dataclasses.replace(self.meta, n_shards=1)
+        return dataclasses.replace(self, buffers=buffers, shards=None,
+                                   meta=meta)
+
+    def _reshard_like(self, predecessor: "IndexSnapshot") -> "IndexSnapshot":
+        """Re-derive the mesh placement after a content change: buffer
+        contents (or the cluster count) changed, so the predecessor's
+        parts are stale — re-shard onto the same device count with the
+        default block assignment (a custom assignment cannot survive a
+        cluster-count change)."""
+        if predecessor.shards is None:
+            return self
+        return self.with_mesh(predecessor.shards.n_shards)
 
     def with_delta(self, delta: delta_lib.DeltaSegment) -> "IndexSnapshot":
         """Derive the successor snapshot with a new delta segment:
@@ -279,7 +360,9 @@ class IndexSnapshot:
             self.meta, version=self.meta.version + 1, built_at=time.time(),
             n_objects=int(np.asarray(buf["counts"]).sum()),
             delta_rows=0, n_tombstones=0)
-        return dataclasses.replace(self, buffers=buf, delta=None, meta=meta)
+        out = dataclasses.replace(self, buffers=buf, delta=None, meta=meta,
+                                  shards=None)
+        return out._reshard_like(self)
 
     def with_precision(self, precision: str) -> "IndexSnapshot":
         """Derive the same index at another precision tier (DESIGN.md §9):
@@ -298,7 +381,9 @@ class IndexSnapshot:
         meta = dataclasses.replace(
             self.meta, precision=precision, version=self.meta.version + 1,
             built_at=time.time())
-        return dataclasses.replace(self, buffers=buffers, meta=meta)
+        out = dataclasses.replace(self, buffers=buffers, meta=meta,
+                                  shards=None)
+        return out._reshard_like(self)
 
     # --- derived serve-form state -----------------------------------------
 
@@ -403,6 +488,10 @@ class IndexSnapshot:
         if "delta" in tree:
             delta = delta_lib.DeltaSegment.from_leaves(
                 int(buffers["emb"].shape[-1]), precision, tree["delta"])
+        # n_shards normalizes to 1: the artifact's arrays are GLOBAL
+        # (gather-on-save), so placement never survives the trip — the
+        # manifest's value is provenance only. Re-shard with with_mesh
+        # (or api.load(mesh=)) under the loading host's device count.
         sm = SnapshotMeta(
             schema_version=meta["schema_version"],
             cfg_digest=meta["cfg_digest"], n_objects=meta["n_objects"],
@@ -410,7 +499,7 @@ class IndexSnapshot:
             dist_max=meta["dist_max"], spatial_mode=meta["spatial_mode"],
             weight_mode=meta["weight_mode"], precision=precision,
             delta_rows=meta.get("delta_rows", 0),
-            n_tombstones=meta.get("n_tombstones", 0))
+            n_tombstones=meta.get("n_tombstones", 0), n_shards=1)
         return cls(cfg=cfg, rel_params=tree["rel_params"],
                    index_params=tree["index_params"], norm=tree["norm"],
                    buffers=buffers, meta=sm, delta=delta)

@@ -12,14 +12,21 @@ is mesh-agnostic.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import re
 import threading
+import warnings
 from typing import Optional, Tuple
 
+import numpy as np
 import jax
 from jax.sharding import PartitionSpec as P
 
 _STATE = threading.local()
+
+# the logical (and physical) axis name cluster buffers partition along
+# for mesh-sharded serving (DESIGN.md §12)
+CLUSTER_AXIS = "cluster"
 
 
 def current_rules() -> Optional[dict]:
@@ -41,7 +48,8 @@ def rules_for_mesh(mesh) -> dict:
     names = mesh.axis_names
     dp = tuple(n for n in names if n in ("pod", "data"))
     tp = tuple(n for n in names if n == "model")
-    return {"dp": dp, "tp": tp, "all": tuple(names),
+    cluster = tuple(n for n in names if n == CLUSTER_AXIS)
+    return {"dp": dp, "tp": tp, "cluster": cluster, "all": tuple(names),
             "_sizes": {n: mesh.shape[n] for n in names},
             "_mesh": mesh}
 
@@ -154,11 +162,22 @@ def param_specs(params_shape, rules_table, *, extra_leading=None):
                 if spec is None:
                     return None
                 # divisibility guard: drop sharding on any dim the mesh
-                # axes don't divide (e.g. odd-sized embedding tables)
+                # axes don't divide (e.g. odd-sized embedding tables) —
+                # and SAY so: a silently replicated dim looks identical
+                # to a sharded one until a device runs out of memory
+                padded = tuple(spec) + (None,) * (ndim - len(tuple(spec)))
                 fixed = tuple(
                     e if leaf.shape[i] % _axes_size(e) == 0 else None
-                    for i, e in enumerate(tuple(spec) + (None,) * (
-                        ndim - len(tuple(spec)))))
+                    for i, e in enumerate(padded))
+                for i, (want, got) in enumerate(zip(padded, fixed)):
+                    if want is not None and got is None:
+                        warnings.warn(
+                            f"param_specs: dropping sharding {want!r} on "
+                            f"dim {i} of {ps!r} (shape {tuple(leaf.shape)}"
+                            f"): {leaf.shape[i]} is not divisible by the "
+                            f"mesh axes' size {_axes_size(want)}; the dim "
+                            f"will be REPLICATED",
+                            UserWarning, stacklevel=2)
                 return P(*fixed)
         return logical_spec(*((None,) * ndim))
 
@@ -170,6 +189,203 @@ def named_shardings(mesh, spec_tree):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s if s is not None else P()), spec_tree,
         is_leaf=lambda s: s is None or isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded cluster buffers (serving scale-out, DESIGN.md §12).
+#
+# LIST's resident (c, cap, d) cluster buffers are the only state that
+# grows with the corpus; router + relevance params are tiny and
+# replicate. Partitioning is along the CLUSTER axis — the learned
+# clustering stays intact under scale-out (WISK's argument), each shard
+# holding whole clusters. ``shard_cluster_buffers`` resolves WHICH dims
+# shard through the same logical-axis machinery as the training params
+# (CLUSTER_BUFFER_RULES → param_specs → named_shardings), places the
+# shard-stacked arrays, and hands back per-shard device-committed parts
+# for the engine's per-shard plans (engine.make_shard_topk_fn).
+# ---------------------------------------------------------------------------
+
+# (regex on buffer key, trailing logical axes): every resident array
+# partitions along its leading cluster axis; row contents stay local.
+CLUSTER_BUFFER_RULES = (
+    (r"emb$", (CLUSTER_AXIS, None, None)),     # (c, cap, d)
+    (r"loc$", (CLUSTER_AXIS, None, None)),     # (c, cap, 2)
+    (r"ids$", (CLUSTER_AXIS, None)),           # (c, cap)
+    (r"scale$", (CLUSTER_AXIS, None)),         # (c, cap)
+    (r"counts$", (CLUSTER_AXIS,)),             # (c,)
+    (r".*", (None,)),                          # anything else: replicate
+)
+
+
+def cluster_mesh(n_shards: int):
+    """A 1-D mesh over the first ``n_shards`` local devices, physical
+    axis named :data:`CLUSTER_AXIS`. On CPU, multi-device comes from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    jax imports) — that is how the mesh test tier runs on CI runners."""
+    devs = jax.devices()
+    if not (1 <= n_shards <= len(devs)):
+        raise ValueError(
+            f"cluster_mesh: n_shards={n_shards} needs 1..{len(devs)} "
+            f"available devices (have {len(devs)}; on CPU raise the "
+            f"count with XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count=N before jax is imported)")
+    return jax.sharding.Mesh(np.asarray(devs[:n_shards]), (CLUSTER_AXIS,))
+
+
+def _as_cluster_mesh(mesh):
+    if isinstance(mesh, (int, np.integer)):
+        return cluster_mesh(int(mesh))
+    if CLUSTER_AXIS not in mesh.axis_names:
+        raise ValueError(
+            f"shard_cluster_buffers: mesh axes {mesh.axis_names} carry "
+            f"no {CLUSTER_AXIS!r} axis; build one with cluster_mesh(n)")
+    return mesh
+
+
+def cluster_buffer_specs(stacked: dict):
+    """PartitionSpec tree for a dict of shard-stacked cluster-buffer
+    arrays, resolved through :data:`CLUSTER_BUFFER_RULES` under the
+    currently bound :func:`axis_rules`."""
+    return param_specs(stacked, CLUSTER_BUFFER_RULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterShards:
+    """The placement record of one mesh-sharded set of cluster buffers.
+
+    n_shards   shard (device) count
+    c_global   real cluster count of the base buffers
+    c_local    cluster rows per shard EXCLUDING the sentinel (the max
+               group size; shards with fewer real clusters pad with
+               empty ones — the ``c % n_shards`` remainder policy)
+    shard_of   (c_global,) int32 — global cluster id → owning shard
+    local_of   (c_global,) int32 — global cluster id → local buffer row
+    parts      per-shard dicts of DEVICE-COMMITTED buffer arrays
+               (emb/loc/ids/scale/counts), each shaped like a local
+               buffer set of ``c_local + 1`` clusters: row ``c_local``
+               is the SENTINEL empty cluster (ids −1 throughout) that
+               off-shard routes localize to (serving.localize_routes),
+               so every shard scores a full static-shape plan and
+               off-shard candidates mask to NEG_INF exactly like
+               padding slots
+    devices    the mesh devices, parts[s] committed on devices[s]
+
+    Placement only — query results are bit-identical to the unsharded
+    buffers by the parity contract (DESIGN.md §12), which is why
+    deriving one (IndexSnapshot.with_mesh) does NOT bump the snapshot
+    version.
+    """
+    n_shards: int
+    c_global: int
+    c_local: int
+    shard_of: np.ndarray
+    local_of: np.ndarray
+    parts: tuple
+    devices: tuple
+
+    @property
+    def sentinel(self) -> int:
+        """Local row index of the per-shard empty sentinel cluster."""
+        return self.c_local
+
+    def nbytes_per_device(self):
+        """Resident buffer bytes committed per device (the scalability
+        headline: ~1/n_shards of the unsharded footprint each)."""
+        return [int(sum(np.asarray(a).nbytes for a in part.values()))
+                for part in self.parts]
+
+
+def shard_cluster_buffers(buffers: dict, mesh, *,
+                          assignment=None) -> ClusterShards:
+    """Partition packed cluster buffers cluster-major across a mesh.
+
+    ``buffers`` is the dict of ``index.build_cluster_buffers`` (any
+    precision tier — the storage dtypes ride along untouched); ``mesh``
+    a shard count or a mesh carrying a :data:`CLUSTER_AXIS` axis;
+    ``assignment`` an optional ``(c,)`` cluster→shard map (default:
+    contiguous blocks of ``ceil(c / n_shards)`` clusters). Non-divisible
+    ``c % n_shards`` is handled by padding short shards with EMPTY
+    clusters, never by mis-sharding rows.
+
+    Every shard's local buffers get one appended sentinel empty cluster
+    (local row ``c_local``) so off-shard routes stay in-bounds under
+    jit's clamped indexing — see :class:`ClusterShards`. Placement goes
+    through the logical-axis machinery (:data:`CLUSTER_BUFFER_RULES` →
+    :func:`param_specs` → :func:`named_shardings`): the shard-stacked
+    arrays are ``device_put`` with the resolved NamedShardings and the
+    per-device parts are their addressable shards — genuinely committed
+    per device, which is what pins each per-shard plan's execution to
+    its shard's device.
+    """
+    from repro.core import index as index_lib   # lazy: core imports us
+
+    mesh = _as_cluster_mesh(mesh)
+    n_shards = int(mesh.shape[CLUSTER_AXIS])
+    host = {k: np.asarray(buffers[k])
+            for k in ("emb", "loc", "ids", "scale", "counts")}
+    c = host["ids"].shape[0]
+    if assignment is None:
+        per = -(-c // n_shards)
+        assignment = (np.arange(c) // per).astype(np.int32)
+    else:
+        assignment = np.asarray(assignment, np.int32)
+        if assignment.shape != (c,):
+            raise ValueError(
+                f"shard_cluster_buffers: assignment shape "
+                f"{assignment.shape} != ({c},)")
+        if assignment.size and (assignment.min() < 0
+                                or assignment.max() >= n_shards):
+            raise ValueError(
+                f"shard_cluster_buffers: assignment values must lie in "
+                f"[0, {n_shards}), got "
+                f"[{assignment.min()}, {assignment.max()}]")
+    groups = [np.flatnonzero(assignment == s) for s in range(n_shards)]
+    c_local = max(1, max((len(g) for g in groups), default=1))
+    local_of = np.zeros(c, np.int32)
+    for g in groups:
+        local_of[g] = np.arange(len(g), dtype=np.int32)
+
+    # empty-cluster fill per key: exactly the buffer padding convention
+    # (index.build_cluster_buffers / delete_objects), so a sentinel or
+    # remainder-padding row scores NEG_INF through the same ids<0 mask
+    fills = {"emb": 0, "loc": index_lib.PAD_LOC, "ids": -1, "scale": 1,
+             "counts": 0}
+    rows = c_local + 1                     # + the sentinel empty cluster
+    stacked = {}
+    for key, arr in host.items():
+        if key == "counts":
+            arr = arr.astype(np.int32)     # device arrays stay x32
+        out = np.full((n_shards, rows) + arr.shape[1:], fills[key],
+                      dtype=arr.dtype)
+        for s, g in enumerate(groups):
+            out[s, :len(g)] = arr[g]
+        stacked[key] = out.reshape((n_shards * rows,) + arr.shape[1:])
+
+    with axis_rules(rules_for_mesh(mesh)):
+        specs = cluster_buffer_specs(stacked)
+    for key, spec in specs.items():
+        assert spec is not None and tuple(spec)[0] == CLUSTER_AXIS, (
+            f"cluster rules failed to shard {key!r}: {spec}")
+    shardings = named_shardings(mesh, specs)
+    global_arrs = {k: jax.device_put(v, shardings[k])
+                   for k, v in stacked.items()}
+
+    # per-device parts = the addressable shards, in shard order (the
+    # leading-dim slice start identifies which shard a piece is)
+    parts = []
+    for s in range(n_shards):
+        parts.append({})
+    for key, arr in global_arrs.items():
+        pieces = sorted(arr.addressable_shards,
+                        key=lambda sh: sh.index[0].start or 0)
+        assert len(pieces) == n_shards, (key, len(pieces), n_shards)
+        for s, piece in enumerate(pieces):
+            parts[s][key] = piece.data
+    devices = tuple(np.asarray(mesh.devices).flat)
+    return ClusterShards(
+        n_shards=n_shards, c_global=c, c_local=c_local,
+        shard_of=assignment, local_of=local_of,
+        parts=tuple(parts), devices=devices)
 
 
 def opt_state_specs(params_shapes, params_specs, optimizer: str):

@@ -100,6 +100,13 @@ def main(argv=None):
                          "int8 streams ~4x fewer HBM bytes in the scan "
                          "kernel; default f32 on build, the artifact's "
                          "own tier on --snapshot-dir load")
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="shard the resident cluster buffers across N "
+                         "devices along the cluster axis (DESIGN.md §12); "
+                         "router/relevance params replicated, top-k ids "
+                         "bit-identical to single-device serving. On a "
+                         "CPU-only host export XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--snapshot-dir", default=None,
                     help="durable IndexSnapshot artifact dir: load it when "
@@ -191,6 +198,12 @@ def main(argv=None):
         if args.snapshot_dir:
             path = api.save(snap, args.snapshot_dir)
             print(f"== saved snapshot v{snap.meta.version} -> {path} ==")
+    if args.mesh:
+        snap = snap.with_mesh(args.mesh)
+        per_dev = snap.shards.nbytes_per_device()
+        print(f"== mesh: cluster buffers sharded across "
+              f"{snap.meta.n_shards} devices, "
+              f"{max(per_dev) / 1e6:.2f} MB/device resident ==")
     buf = snap.buffers
     counts = np.asarray(buf["counts"])
     print(f"== index: clusters={counts.tolist()} "

@@ -1,4 +1,17 @@
 import dataclasses
+import os
+
+# Multi-device CPU: the mesh-sharding tier (tests/test_mesh_sharding.py,
+# DESIGN.md §12) partitions cluster buffers across jax devices, and XLA
+# only honours --xla_force_host_platform_device_count if it is in the
+# environment BEFORE jax first initialises its backends — hence here, at
+# the top of conftest, ahead of any repro/jax import. Append-safe: an
+# externally-set XLA_FLAGS (e.g. the CI mesh job) is preserved.
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()
 
 import numpy as np
 import pytest

@@ -1,0 +1,258 @@
+"""Direct unit tier for distributed/sharding.py.
+
+The logical→physical machinery was previously only exercised indirectly
+(through the training launcher and, now, mesh-sharded serving). This
+tier pins its contracts on their own:
+
+* ``rules_for_mesh`` binds dp/tp/cluster logical axes per mesh shape;
+* ``logical_spec`` maps logical names under the bound rules (multi-axis
+  dp collapses to a tuple entry, singletons to a bare name, and outside
+  any binding it is None so model code stays mesh-agnostic);
+* the ``param_specs`` divisibility guard WARNS and replicates a dim the
+  mesh axes don't divide — never mis-shards, never silently;
+* ``named_shardings`` maps a spec pytree (including None leaves) to
+  NamedShardings on the mesh;
+* ``shard_cluster_buffers`` places whole clusters per shard with
+  bit-identical rows, per-shard sentinel empty clusters, device-committed
+  parts, and validates explicit assignments (DESIGN.md §12).
+
+Runs multi-device on CPU via the conftest-set
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+import numpy as np
+import jax
+import pytest
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import index as il
+from repro.distributed import sharding as sh
+
+
+def make_mesh(shape, names):
+    devs = jax.devices()
+    n = int(np.prod(shape))
+    if len(devs) < n:
+        pytest.skip(f"needs {n} devices, have {len(devs)}")
+    return Mesh(np.asarray(devs[:n]).reshape(shape), names)
+
+
+# ---------------------------------------------------------------------------
+# rules_for_mesh / logical_spec
+# ---------------------------------------------------------------------------
+
+
+def test_rules_for_mesh_single_pod():
+    mesh = make_mesh((2, 4), ("data", "model"))
+    rules = sh.rules_for_mesh(mesh)
+    assert rules["dp"] == ("data",)
+    assert rules["tp"] == ("model",)
+    assert rules["cluster"] == ()
+    assert rules["all"] == ("data", "model")
+    assert rules["_sizes"] == {"data": 2, "model": 4}
+
+
+def test_rules_for_mesh_multi_pod_dp_spans_axes():
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    rules = sh.rules_for_mesh(mesh)
+    assert rules["dp"] == ("pod", "data")
+    assert rules["tp"] == ("model",)
+
+
+def test_rules_for_mesh_cluster_axis():
+    mesh = sh.cluster_mesh(min(4, len(jax.devices())))
+    rules = sh.rules_for_mesh(mesh)
+    assert rules["cluster"] == (sh.CLUSTER_AXIS,)
+    assert rules["dp"] == () and rules["tp"] == ()
+
+
+def test_logical_spec_under_rules():
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    with sh.axis_rules(sh.rules_for_mesh(mesh)):
+        # multi-axis dp stays a tuple entry; singleton tp collapses
+        assert sh.logical_spec("dp", None, "tp") == P(("pod", "data"),
+                                                      None, "model")
+        assert sh.logical_spec(None, "tp") == P(None, "model")
+        # unknown logical name → replicated (empty tuple entry)
+        assert sh.logical_spec("nope") == P(())
+
+
+def test_logical_spec_is_none_outside_binding():
+    assert sh.current_rules() is None
+    assert sh.logical_spec("dp", "tp") is None
+    # and constrain is a no-op, not an error
+    x = np.ones((4, 4), np.float32)
+    assert sh.constrain(x, "dp", "tp") is x
+
+
+# ---------------------------------------------------------------------------
+# param_specs divisibility guard
+# ---------------------------------------------------------------------------
+
+
+def test_param_specs_divisible_dim_shards():
+    mesh = make_mesh((2,), ("model",))
+    with sh.axis_rules(sh.rules_for_mesh(mesh)):
+        specs = sh.param_specs({"tables": np.zeros((8, 4), np.float32)},
+                               sh.REC_PARAM_RULES)
+    assert specs["tables"] == P("model", None)
+
+
+def test_param_specs_nondivisible_dim_warns_and_replicates():
+    """The guard must SAY it dropped a sharding: a silently replicated
+    dim looks identical to a sharded one until a device OOMs."""
+    mesh = make_mesh((2,), ("model",))
+    with sh.axis_rules(sh.rules_for_mesh(mesh)):
+        with pytest.warns(UserWarning, match="not divisible"):
+            specs = sh.param_specs({"tables": np.zeros((7, 4), np.float32)},
+                                   sh.REC_PARAM_RULES)
+    assert specs["tables"] == P(None, None)     # replicated, not mis-sharded
+
+
+def test_param_specs_leading_scan_dims_padded():
+    """Rules give specs for the TRAILING dims; stacked scan dims pad
+    with None on the left."""
+    mesh = make_mesh((2,), ("model",))
+    with sh.axis_rules(sh.rules_for_mesh(mesh)):
+        specs = sh.param_specs({"item_embed": np.zeros((3, 8, 4))},
+                               sh.REC_PARAM_RULES)
+    assert specs["item_embed"] == P(None, "model", None)
+
+
+# ---------------------------------------------------------------------------
+# named_shardings pytree mapping
+# ---------------------------------------------------------------------------
+
+
+def test_named_shardings_maps_pytree_with_none_leaves():
+    mesh = make_mesh((2,), ("model",))
+    tree = {"a": P("model", None), "b": None, "nested": {"c": P(None)}}
+    out = sh.named_shardings(mesh, tree)
+    assert all(isinstance(v, NamedSharding)
+               for v in jax.tree.leaves(out))
+    assert out["a"].spec == P("model", None)
+    assert out["b"].spec == P()                 # None → fully replicated
+    assert out["nested"]["c"].spec == P(None)
+    assert out["a"].mesh.shape == {"model": 2}
+
+
+# ---------------------------------------------------------------------------
+# cluster meshes + shard_cluster_buffers
+# ---------------------------------------------------------------------------
+
+
+def _tiny_buffers(rng, c=6, cap=8, d=16):
+    ids = np.full((c, cap), -1, np.int64)
+    counts = rng.integers(1, cap + 1, size=c).astype(np.int64)
+    for i, n in enumerate(counts):
+        ids[i, :n] = rng.integers(0, 10_000, size=n)
+    return {
+        "emb": rng.normal(size=(c, cap, d)).astype(np.float32),
+        "loc": rng.uniform(size=(c, cap, 2)).astype(np.float32),
+        "ids": ids,
+        "scale": np.ones((c, cap), np.float32),
+        "counts": counts,
+        "capacity": cap,
+        "n_spilled": 0,
+    }
+
+
+def test_cluster_mesh_rejects_bad_counts():
+    n_dev = len(jax.devices())
+    with pytest.raises(ValueError, match="devices"):
+        sh.cluster_mesh(0)
+    with pytest.raises(ValueError, match="devices"):
+        sh.cluster_mesh(n_dev + 1)
+
+
+def test_cluster_mesh_requires_cluster_axis():
+    mesh = make_mesh((2,), ("model",))
+    with pytest.raises(ValueError, match=sh.CLUSTER_AXIS):
+        sh._as_cluster_mesh(mesh)
+
+
+def test_cluster_buffer_specs_shard_leading_axis():
+    if len(jax.devices()) < 2:
+        pytest.skip("needs 2 devices")
+    mesh = sh.cluster_mesh(2)
+    stacked = {"emb": np.zeros((4, 8, 16), np.float32),
+               "loc": np.zeros((4, 8, 2), np.float32),
+               "ids": np.zeros((4, 8), np.int32),
+               "scale": np.zeros((4, 8), np.float32),
+               "counts": np.zeros((4,), np.int32)}
+    with sh.axis_rules(sh.rules_for_mesh(mesh)):
+        specs = sh.cluster_buffer_specs(stacked)
+    assert specs["emb"] == P(sh.CLUSTER_AXIS, None, None)
+    assert specs["loc"] == P(sh.CLUSTER_AXIS, None, None)
+    assert specs["ids"] == P(sh.CLUSTER_AXIS, None)
+    assert specs["scale"] == P(sh.CLUSTER_AXIS, None)
+    assert specs["counts"] == P(sh.CLUSTER_AXIS)
+
+
+def test_shard_cluster_buffers_validates_assignment():
+    if len(jax.devices()) < 2:
+        pytest.skip("needs 2 devices")
+    buf = _tiny_buffers(np.random.default_rng(0))
+    with pytest.raises(ValueError, match="assignment shape"):
+        sh.shard_cluster_buffers(buf, 2, assignment=np.zeros(3, np.int32))
+    with pytest.raises(ValueError, match="must lie in"):
+        sh.shard_cluster_buffers(buf, 2,
+                                 assignment=np.full(6, 5, np.int32))
+
+
+def test_shard_cluster_buffers_layout_and_commitment():
+    """c=6 over 4 shards: blocks of 2, every real row bit-identical on
+    its owning shard, sentinel + remainder rows empty (ids −1), each
+    part committed to exactly its shard's device, and per-device bytes
+    ≈ 1/n_shards of the whole."""
+    n_shards = min(4, len(jax.devices()))
+    if n_shards < 2:
+        pytest.skip("needs 2+ devices")
+    buf = _tiny_buffers(np.random.default_rng(1), c=6)
+    shards = sh.shard_cluster_buffers(buf, n_shards)
+
+    assert shards.n_shards == n_shards
+    assert shards.c_global == 6
+    per = -(-6 // n_shards)
+    assert shards.c_local == per
+    assert shards.sentinel == shards.c_local
+    # every global cluster's rows, bit-for-bit, on its owning shard
+    for g in range(6):
+        s, r = int(shards.shard_of[g]), int(shards.local_of[g])
+        part = shards.parts[s]
+        for key in ("emb", "loc", "ids", "scale"):
+            assert np.array_equal(np.asarray(part[key])[r], buf[key][g]), \
+                (key, g)
+        assert int(np.asarray(part["counts"])[r]) == int(buf["counts"][g])
+    # sentinel (and any remainder padding) rows are EMPTY clusters
+    for s, part in enumerate(shards.parts):
+        ids = np.asarray(part["ids"])
+        assert ids.shape[0] == shards.c_local + 1
+        n_real = int(np.sum(shards.shard_of == s))
+        assert (ids[n_real:] == -1).all()
+        assert (np.asarray(part["loc"])[shards.sentinel] == il.PAD_LOC).all()
+        # device commitment: the part lives on exactly its shard's device
+        assert part["emb"].devices() == {shards.devices[s]}
+    # the scalability headline in miniature
+    per_dev = shards.nbytes_per_device()
+    total = sum(int(np.asarray(buf[k]).nbytes)
+                for k in ("emb", "loc", "ids", "scale"))
+    assert max(per_dev) < total
+
+
+def test_shard_cluster_buffers_random_assignment_covers_all():
+    n_shards = min(4, len(jax.devices()))
+    if n_shards < 2:
+        pytest.skip("needs 2+ devices")
+    rng = np.random.default_rng(3)
+    buf = _tiny_buffers(rng, c=9)
+    assignment = rng.integers(0, n_shards, size=9).astype(np.int32)
+    shards = sh.shard_cluster_buffers(buf, n_shards, assignment=assignment)
+    assert np.array_equal(shards.shard_of, assignment)
+    seen = set()
+    for g in range(9):
+        s, r = int(shards.shard_of[g]), int(shards.local_of[g])
+        assert np.array_equal(
+            np.asarray(shards.parts[s]["ids"])[r], buf["ids"][g])
+        seen.add((s, r))
+    assert len(seen) == 9                       # no two clusters collide
