@@ -9,8 +9,15 @@
 #   make snapshot-roundtrip - IndexSnapshot save->load->query bit-identity
 #                             self-test on both backends x all precision
 #                             tiers (seconds)
-#   make bench-smoke        - CI-scale benchmark smoke (--fast settings)
+#   make bench-smoke        - CI-scale benchmark smoke (--fast settings,
+#                             EVERY registered benchmark)
 #   make bench-serving      - streaming-serving benchmark -> BENCH_serving.json
+#   make bench-filters      - filtered-search + subscription-dispatch
+#                             acceptance -> `filters` section of
+#                             BENCH_serving.json
+#   make test-filters       - the filtered/continuous parity tier
+#                             (4 backends x 3 precision tiers + the
+#                             standing-query replay oracle)
 #   make bench-kernels      - kernel roofline (backend x precision)
 #                             -> BENCH_kernels.json
 #   make bench-scalability  - Fig7 corpus scaling + mesh-sharded scale-out
@@ -22,8 +29,9 @@ PYPATH  := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}
 # first initialises its backends (conftest also force-sets it for pytest)
 MESHENV := XLA_FLAGS="--xla_force_host_platform_device_count=8"
 
-.PHONY: test test-slow test-mesh snapshot-roundtrip bench-smoke \
-        bench-serving bench-kernels bench-scalability
+.PHONY: test test-slow test-mesh test-filters snapshot-roundtrip \
+        bench-smoke bench-serving bench-filters bench-kernels \
+        bench-scalability
 
 test:
 	$(PYPATH) $(PY) -m pytest -x -q -m "not slow"
@@ -38,11 +46,19 @@ test-mesh:
 snapshot-roundtrip:
 	$(PYPATH) $(PY) -m repro.api
 
+test-filters:
+	$(MESHENV) $(PYPATH) $(PY) -m pytest -x -q \
+		tests/test_filters.py tests/test_continuous.py
+
+# no --only: the smoke covers EVERY registered benchmark suite
 bench-smoke:
-	$(MESHENV) $(PYPATH) $(PY) -m benchmarks.run --fast --only Kernel_roofline,Table4_memory,Serving_stream,Fig7_scalability
+	$(MESHENV) $(PYPATH) $(PY) -m benchmarks.run --fast
 
 bench-serving:
 	$(PYPATH) $(PY) -m benchmarks.bench_serving
+
+bench-filters:
+	$(PYPATH) $(PY) -m benchmarks.bench_filters
 
 bench-kernels:
 	$(PYPATH) $(PY) -m benchmarks.bench_kernels

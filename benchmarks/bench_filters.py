@@ -1,0 +1,233 @@
+"""Filtered-search + continuous-query benchmark (core/filters.py,
+core/continuous.py, DESIGN.md §13).
+
+Two acceptance measurements, appended as the ``filters`` section of
+``BENCH_serving.json`` (the serving perf trajectory file) and gated in
+CI (.github/workflows/ci.yml, ``filtered-parity`` job):
+
+* **Filtered throughput within ~2× of unfiltered at equal recall.**
+  The same query batch runs through the warmed engine twice: once
+  unfiltered, once under a PASS-ALL (but non-no-op) FilterSpec — the
+  predicate mask streams and evaluates for every candidate, yet admits
+  every row, so the two answers are id-identical (recall is EQUAL by
+  construction, not approximately). The slowdown ratio isolates the
+  pure predicate-mask overhead. A selective per-tenant filter is also
+  timed for color (its recall target differs, so it carries no gate).
+
+* **Subscription dispatch cost O(distinct routed clusters), measured.**
+  A roster of S standing queries receives an insert batch; a spy on
+  ``engine.score_candidates`` counts the actual scoring calls the
+  reversed cluster-major dispatch makes. The gate is exact equality
+  with the number of distinct assigned clusters (≤ n_clusters) — NOT
+  with S — demonstrated at two roster sizes (8 and 8·8): same call
+  count, roster size 8× larger.
+
+    PYTHONPATH=src python -m benchmarks.bench_filters [--fast]
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import continuous as cont_lib
+from repro.core import engine as engine_lib
+from repro.core import filters as filters_lib
+from repro.core import server as server_lib
+
+OUT_PATH = "BENCH_serving.json"
+
+K = 10
+CR = 2
+BATCH = 64
+N_TENANTS = 4
+REPEATS = 5                  # timing repeats; the median is reported
+ROSTERS = (8, 64)            # dispatch-economics roster sizes
+INSERT_BATCH = 64
+SLOWDOWN_MAX = 2.0
+
+# pass-all but NON-no-op: the time window spans every int32 timestamp
+# except the degenerate empty range, so the filtered plan runs its full
+# predicate per candidate while admitting every row
+PASS_ALL = filters_lib.FilterSpec(t_min=filters_lib.INT32_MIN,
+                                  t_max=filters_lib.INT32_MAX - 1)
+assert not PASS_ALL.is_noop
+
+
+def _attrs_snapshot(r):
+    """The trained snapshot with a synthetic multi-tenant attribute
+    table: tenant round-robin by id, one category bit, timestamp = id."""
+    snap = r.snapshot()
+    bi = np.asarray(snap.buffers["ids"])
+    flat = bi.reshape(-1)
+    tenants = np.where(flat >= 0, flat % N_TENANTS, 0)
+    cats = np.where(flat >= 0, 1 << (flat % 4), 0)
+    ts = np.maximum(flat, 0)
+    attrs = np.stack([tenants, cats, ts], axis=-1).astype(np.int32)
+    buf = dict(snap.buffers)
+    buf["attrs"] = attrs.reshape(bi.shape + (3,))
+    return snap.with_buffers(buf)
+
+
+def _timed_query(eng, snap, tok, msk, loc, *, filters, repeats=REPEATS):
+    outs = None
+    walls = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        outs = eng.query(tok, msk, loc, k=K, cr=CR, batch=BATCH,
+                         snapshot=snap, filters=filters)
+        walls.append(time.perf_counter() - t0)
+    return outs, float(np.median(walls))
+
+
+def _dispatch_economics(r, snap, corpus, te):
+    """Measured dispatch cost per insert batch at two roster sizes."""
+    rng = np.random.default_rng(common.SEED + 83)
+    d = snap.cfg.d_model
+    rows = {}
+    for s_count in ROSTERS:
+        eng = engine_lib.QueryEngine.from_snapshot(snap, backend="dense")
+        server = server_lib.StreamingServer(eng, server_lib.ServerConfig(
+            batch_size=8, k=K, cr=CR, backend="dense"))
+        picks = te[rng.integers(0, len(te), s_count)]
+        tok, msk = corpus.query_tokens(picks)
+        qloc = corpus.q_loc[picks].astype(np.float32)
+        for i in range(s_count):
+            server.subscribe(tok[i], msk[i], qloc[i], threshold=-1e9)
+        emb = rng.normal(size=(INSERT_BATCH, d)).astype(np.float32)
+        oloc = rng.uniform(size=(INSERT_BATCH, 2)).astype(np.float32)
+        ids = np.arange(10 ** 6 + s_count * 10 ** 4,
+                        10 ** 6 + s_count * 10 ** 4 + INSERT_BATCH)
+        attrs = filters_lib.make_attrs(np.arange(INSERT_BATCH) % N_TENANTS,
+                                       1, np.arange(INSERT_BATCH))
+        calls = []
+        orig = engine_lib.score_candidates
+
+        def counted(*a, **kw):
+            calls.append(1)
+            return orig(*a, **kw)
+
+        cont_lib.engine_lib.score_candidates = counted
+        try:
+            t0 = time.perf_counter()
+            server.insert_objects(emb, oloc, ids, attrs)
+            wall = time.perf_counter() - t0
+        finally:
+            cont_lib.engine_lib.score_candidates = orig
+        m = server.subscriptions.metrics()
+        rows[s_count] = {
+            "roster_size": s_count,
+            "scoring_calls": len(calls),
+            "distinct_clusters": m["distinct_clusters"],
+            "notifications": m["notifications"],
+            "dispatch_ms": wall * 1e3,
+        }
+    return rows
+
+
+def run(out_path: str = OUT_PATH):
+    r = common.get_retriever()
+    corpus = common.get_corpus()
+    te, _ = common.test_split_positives(corpus)
+    snap = _attrs_snapshot(r)
+    eng = engine_lib.QueryEngine.from_snapshot(snap, backend="dense")
+
+    tok, msk = corpus.query_tokens(te)
+    loc = corpus.q_loc[te].astype(np.float32)
+
+    # warm both plans (unfiltered + filtered) before timing
+    eng.query(tok[:BATCH], msk[:BATCH], loc[:BATCH], k=K, cr=CR,
+              batch=BATCH, snapshot=snap)
+    eng.query(tok[:BATCH], msk[:BATCH], loc[:BATCH], k=K, cr=CR,
+              batch=BATCH, snapshot=snap, filters=PASS_ALL)
+
+    (ids_u, _), t_unf = _timed_query(eng, snap, tok, msk, loc,
+                                     filters=None)
+    (ids_f, _), t_pass = _timed_query(eng, snap, tok, msk, loc,
+                                      filters=PASS_ALL)
+    ids_equal = bool(np.array_equal(ids_u, ids_f))   # ⇒ recall EQUAL
+    slowdown = t_pass / t_unf
+    # selective tenant slice, reported for color (no recall gate: the
+    # target set itself shrinks to one tenant's rows)
+    tenant_spec = filters_lib.FilterSpec(tenant=1)
+    (ids_t, _), t_tenant = _timed_query(eng, snap, tok, msk, loc,
+                                        filters=tenant_spec)
+    live = ids_t[ids_t >= 0]
+    isolation_ok = bool((live % N_TENANTS == 1).all()) if live.size else True
+
+    econ = _dispatch_economics(r, snap, corpus, te)
+    o_distinct = all(econ[s]["scoring_calls"] == econ[s]["distinct_clusters"]
+                     for s in ROSTERS)
+    roster_free = (econ[ROSTERS[1]]["scoring_calls"]
+                   <= snap.cfg.n_clusters)
+
+    n_queries = len(te)
+    acceptance = {
+        "filtered_slowdown": slowdown,
+        "filtered_slowdown_max": SLOWDOWN_MAX,
+        "ids_identical_at_equal_recall": ids_equal,
+        "tenant_isolation": isolation_ok,
+        "dispatch_calls_equal_distinct_clusters": bool(o_distinct),
+        "dispatch_calls_bounded_by_n_clusters": bool(roster_free),
+    }
+    acceptance["pass"] = bool(
+        slowdown <= SLOWDOWN_MAX and ids_equal and isolation_ok
+        and o_distinct and roster_free)
+
+    section = {
+        "config": {"k": K, "cr": CR, "batch": BATCH,
+                   "n_queries": int(n_queries), "n_tenants": N_TENANTS,
+                   "rosters": list(ROSTERS), "insert_batch": INSERT_BATCH},
+        "unfiltered_qps": n_queries / t_unf,
+        "passall_filtered_qps": n_queries / t_pass,
+        "tenant_filtered_qps": n_queries / t_tenant,
+        "dispatch": econ,
+        "acceptance": acceptance,
+    }
+
+    # append as the `filters` section of the serving perf file
+    report = {}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                report = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            report = {}
+    report.setdefault("bench", "serving")
+    report["filters"] = section
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+
+    return [
+        common.fmt_row("serving(filters)", {
+            "unfiltered_qps": section["unfiltered_qps"],
+            "passall_qps": section["passall_filtered_qps"],
+            "tenant_qps": section["tenant_filtered_qps"],
+            "slowdown": slowdown,
+            "ids_identical": int(ids_equal),
+            "pass": int(acceptance["pass"])}),
+        common.fmt_row("serving(subscriptions)", {
+            f"calls@{ROSTERS[0]}": econ[ROSTERS[0]]["scoring_calls"],
+            f"calls@{ROSTERS[1]}": econ[ROSTERS[1]]["scoring_calls"],
+            "distinct_clusters": econ[ROSTERS[1]]["distinct_clusters"],
+            "dispatch_ms": econ[ROSTERS[1]]["dispatch_ms"],
+            "o_distinct": int(o_distinct)}),
+        common.fmt_row("serving(filters,json)", {"path": out_path}),
+    ]
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI-scale training (same knobs as benchmarks.run)")
+    args = ap.parse_args()
+    if args.fast:
+        common.N_OBJECTS = 1500
+        common.N_QUERIES = 300
+        common.REL_STEPS = 120
+        common.IDX_STEPS = 250
+    print("\n".join(run()))

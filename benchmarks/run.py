@@ -29,6 +29,7 @@ def main(argv=None):
     from benchmarks import (
         bench_ablation_spatial,
         bench_cluster_quality,
+        bench_filters,
         bench_kernels,
         bench_memory,
         bench_neg_start,
@@ -47,6 +48,7 @@ def main(argv=None):
         ("Fig7_scalability", bench_scalability.run),
         ("Kernel_roofline", bench_kernels.run),
         ("Serving_stream", bench_serving.run),
+        ("Filters_continuous", bench_filters.run),
     ]
     only = {s for s in args.only.split(",") if s}
     failures = 0

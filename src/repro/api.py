@@ -59,7 +59,7 @@ def build(cfg, corpus, *, rel_steps: int = 200, idx_steps: int = 400,
           batch: int = 64, rel_lr: float = 1.5e-3, idx_lr: float = 3e-3,
           capacity: Optional[int] = None, spill: int = 3,
           spatial_mode: str = "step", weight_mode: str = "mlp",
-          precision: str = "f32", mesh=None, seed: int = 0,
+          precision: str = "f32", mesh=None, attrs=None, seed: int = 0,
           verbose: bool = False, log_every: Optional[int] = None,
           return_retriever: bool = False):
     """Train LIST end-to-end and return the built :class:`IndexSnapshot`.
@@ -81,6 +81,10 @@ def build(cfg, corpus, *, rel_steps: int = 200, idx_steps: int = 400,
     replicated (DESIGN.md §12). Query results keep bit-identical top-k
     ids vs the single-device build at any shard count.
 
+    ``attrs (n_objects, 3)`` attaches per-object filter attributes
+    (tenant, category bitmask, timestamp — core/filters.py, DESIGN.md
+    §13) so the built index serves filtered queries; None → all-zero.
+
     ``return_retriever=True`` additionally returns the retriever, for
     callers that need training-time state the artifact deliberately
     omits (training histories, object↦cluster assignments for cluster-
@@ -93,7 +97,7 @@ def build(cfg, corpus, *, rel_steps: int = 200, idx_steps: int = 400,
                       verbose=verbose, log_every=log)
     r.train_index(steps=idx_steps, batch=batch, lr=idx_lr, seed=seed,
                   verbose=verbose, log_every=log)
-    r.build(capacity=capacity, spill=spill, precision=precision)
+    r.build(capacity=capacity, spill=spill, precision=precision, attrs=attrs)
     snap = r.snapshot()
     if mesh is not None:
         snap = snap.with_mesh(mesh)
@@ -153,7 +157,8 @@ class Searcher:
         return snapshot
 
     def query(self, tokens, mask, loc, *, k: int = 10, cr: int = 1,
-              batch: int = 256, backend: Optional[str] = None):
+              batch: int = 256, backend: Optional[str] = None,
+              filters=None):
         """Batched spatial-keyword query → (ids (n, k), scores (n, k)).
 
         tokens (n, L) int32 / mask (n, L) bool / loc (n, 2) float32 per
@@ -162,10 +167,13 @@ class Searcher:
         ``engine.BACKENDS`` — ``"pallas-cm"``/``"dense-cm"`` force
         cluster-major batched execution, DESIGN.md §10; an auto searcher
         picks query- vs cluster-major per batch from the measured route
-        dedup factor).
+        dedup factor). ``filters`` — None, one
+        :class:`~repro.core.filters.FilterSpec` for the whole call, or
+        one per row — restricts results to objects passing the predicate
+        (DESIGN.md §13).
         """
         return self.engine.query(tokens, mask, loc, k=k, cr=cr, batch=batch,
-                                 backend=backend)
+                                 backend=backend, filters=filters)
 
     def query_corpus(self, corpus, query_ids, *, k: int = 10, cr: int = 1,
                      batch: int = 256, backend: Optional[str] = None):
@@ -249,10 +257,16 @@ def _roundtrip_selftest(directory: Optional[str] = None) -> int:
     feats = index_lib.build_features(jnp.asarray(obj_emb),
                                      jnp.asarray(obj_loc), norm)
     top = np.asarray(index_lib.assign_clusters(iparams, feats, top=2))
+    from repro.core import filters as filters_lib
+    attrs = filters_lib.make_attrs(np.arange(n) % 3,
+                                   1 << (np.arange(n) % 4),
+                                   np.arange(n))
     buf = index_lib.build_cluster_buffers(top, obj_emb, obj_loc,
-                                          n_clusters=c, capacity=32)
+                                          n_clusters=c, capacity=32,
+                                          attrs=attrs)
     snap = IndexSnapshot.from_parts(cfg, rel, iparams, norm, buf,
                                     dist_max=1.4142)
+    fspec = filters_lib.FilterSpec(tenant=1)
 
     tok = rng.integers(2, cfg.vocab_size, (12, cfg.max_len)).astype(np.int32)
     tok[:, 0] = 1
@@ -276,6 +290,20 @@ def _roundtrip_selftest(directory: Optional[str] = None) -> int:
             ok = (np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1]))
             print(f"snapshot-roundtrip [{backend:9s}|{precision:4s}] "
                   f"{'bit-identical' if ok else 'MISMATCH'}  ({path})")
+            failures += 0 if ok else 1
+            # filtered leg (schema v5, DESIGN.md §13): the attrs buffer
+            # must survive the trip, and filtered results must stay
+            # inside the tenant before and after it
+            fa = Searcher(snap_p, backend=backend).query(
+                tok, msk, loc, k=5, cr=2, batch=4, filters=fspec)
+            fb = Searcher(loaded, backend=backend).query(
+                tok, msk, loc, k=5, cr=2, batch=4, filters=fspec)
+            live = fa[0][fa[0] >= 0]
+            ok = (np.array_equal(fa[0], fb[0])
+                  and np.array_equal(fa[1], fb[1])
+                  and bool(np.all(attrs[live, 0] == 1)))
+            print(f"snapshot-roundtrip [filt {backend:4s}|{precision:4s}] "
+                  f"{'bit-identical' if ok else 'MISMATCH'}")
             failures += 0 if ok else 1
         # delta leg (schema v3): a snapshot with pending mutations must
         # round-trip and serve identically before and after the trip

@@ -40,16 +40,18 @@ _STORE_DTYPE = {"f32": np.float32, "bf16": ml_dtypes.bfloat16,
                 "int8": np.int8}
 
 # chunk / concatenated-array field names, in canonical order
-FIELDS = ("emb", "scale", "loc", "ids", "raw")
+FIELDS = ("emb", "scale", "loc", "ids", "raw", "attrs")
 
 
 def _empty_arrays(d: int, precision: str) -> Dict[str, np.ndarray]:
+    from repro.core.filters import N_ATTRS
     return {
         "emb": np.zeros((0, d), _STORE_DTYPE[precision]),
         "scale": np.zeros((0,), np.float32),
         "loc": np.zeros((0, 2), np.float32),
         "ids": np.zeros((0,), np.int32),
         "raw": np.zeros((0, d), np.float32),
+        "attrs": np.zeros((0, N_ATTRS), np.int32),
     }
 
 
@@ -113,11 +115,14 @@ class DeltaSegment:
 
     # -- mutations ----------------------------------------------------------
 
-    def insert(self, new_emb, new_loc, new_ids) -> "DeltaSegment":
+    def insert(self, new_emb, new_loc, new_ids,
+               new_attrs=None) -> "DeltaSegment":
         """Append a batch of rows. O(batch): prior chunks are shared."""
+        from repro.core.filters import validate_attrs
         raw = np.asarray(new_emb, np.float32).reshape(-1, self.d)
         loc = np.asarray(new_loc, np.float32).reshape(-1, 2)
         ids = np.asarray(new_ids, np.int32).reshape(-1)
+        attrs = validate_attrs(new_attrs, ids.shape[0])
         if not (raw.shape[0] == loc.shape[0] == ids.shape[0]):
             raise ValueError("insert: emb/loc/ids batch sizes disagree")
         if (ids < 0).any():
@@ -129,7 +134,7 @@ class DeltaSegment:
                              f"{sorted(dup) or 'within batch'}")
         stored, scale = quantize_rows(raw, self.precision)
         chunk = {"emb": stored, "scale": scale.astype(np.float32),
-                 "loc": loc, "ids": ids, "raw": raw}
+                 "loc": loc, "ids": ids, "raw": raw, "attrs": attrs}
         return dataclasses.replace(
             self, chunks=self.chunks + (chunk,),
             ids_live=self.ids_live.union(ids.tolist()))
@@ -170,6 +175,7 @@ class DeltaSegment:
     def from_leaves(cls, d: int, precision: str, leaves) -> "DeltaSegment":
         arrs = {f: np.asarray(leaves[f]) for f in FIELDS}
         arrs["emb"] = arrs["emb"].astype(_STORE_DTYPE[precision])
+        arrs["attrs"] = arrs["attrs"].astype(np.int32)
         tomb = frozenset(int(i) for i in np.asarray(leaves["tombstones"]))
         chunks = (arrs,) if arrs["ids"].shape[0] else ()
         return cls(d=int(d), precision=precision, chunks=chunks,

@@ -99,6 +99,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import filters as filters_lib
 from repro.core import index as index_lib
 from repro.core import relevance
 from repro.core import spatial as sp
@@ -218,7 +219,8 @@ def cluster_major_feasible(batch: int, cr: int, n_clusters: int,
 
 
 def score_candidates(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
-                     w_hat, *, dist_max: float, cand_scale=None):
+                     w_hat, *, dist_max: float, cand_scale=None,
+                     cand_attrs=None, fvals=None):
     """Score an explicit candidate set with the paper's serve-form ST.
 
     ST(q, o) = w_t·(q·o) + w_s·ŵ_s[⌊S_in·t⌋] (Eq. 5): textual relevance
@@ -245,6 +247,11 @@ def score_candidates(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
     so dense-vs-pallas parity holds within every precision tier. bf16
     candidates need no scale (the astype below is the whole dequant).
 
+    ``cand_attrs (..., N, 3)`` + ``fvals (..., 4)`` apply the filtered-
+    search predicate (core/filters.py, DESIGN.md §13): rows that fail
+    score NEG_INF, exactly like padding — the same mask the Pallas
+    kernels apply in VMEM. Pass both or neither.
+
     This is the ONE definition of "the score" — if you are scoring
     (query, object) pairs anywhere, call this, don't re-derive it.
     """
@@ -257,17 +264,26 @@ def score_candidates(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
     s_in = 1.0 - jnp.clip(d / dist_max, 0.0, 1.0)
     srel = sp.spatial_relevance_serve(w_hat, s_in)
     st = w_st[..., :1] * trel + w_st[..., 1:2] * srel
-    return jnp.where(cand_ids >= 0, st, NEG_INF)
+    ok = cand_ids >= 0
+    if cand_attrs is not None:
+        ok = ok & filters_lib.predicate_mask(cand_attrs,
+                                             fvals[..., None, :])
+    return jnp.where(ok, st, NEG_INF)
 
 
 def dense_routed_topk(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc, buf_ids,
-                      w_hat, *, k: int, dist_max: float, buf_scale=None):
+                      w_hat, *, k: int, dist_max: float, buf_scale=None,
+                      buf_attrs=None, q_filt=None):
     """Dense reference for the routed query phase: gather + one top-k.
 
     Returns (scores (B, k), ids (B, k) global object ids, -1 past-the-end)
     — the exact contract of kernels/fused_topk_score_routed.
     ``buf_scale (c, cap)`` dequantizes int8 buffers with the same per-row
     scales the kernel applies in VMEM (parity within a precision tier).
+    ``buf_attrs (c, cap, 3)`` + ``q_filt (B, 4)`` apply the filtered-
+    search predicate (DESIGN.md §13) by nulling failing candidates to
+    full padding semantics (id -1, score NEG_INF) — the kernel's rule,
+    so filtered parity holds per backend.
     """
     b = q_emb.shape[0]
     cand_emb = buf_emb[top_c].reshape(b, -1, buf_emb.shape[-1])
@@ -275,6 +291,10 @@ def dense_routed_topk(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc, buf_ids,
     cand_ids = buf_ids[top_c].reshape(b, -1)
     cand_scale = (None if buf_scale is None
                   else buf_scale[top_c].reshape(b, -1))
+    if buf_attrs is not None:
+        cand_attrs = buf_attrs[top_c].reshape(b, -1, buf_attrs.shape[-1])
+        pred = filters_lib.predicate_mask(cand_attrs, q_filt[:, None, :])
+        cand_ids = jnp.where(pred, cand_ids, -1)
     st = score_candidates(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
                           w_hat, dist_max=dist_max, cand_scale=cand_scale)
     scores, pos = jax.lax.top_k(st, k)
@@ -319,6 +339,7 @@ def merge_cluster_major(part_scores, part_ids, roster, *, b: int, cr: int,
 
 def dense_cluster_major(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc, buf_ids,
                         w_hat, *, k: int, dist_max: float, buf_scale=None,
+                        buf_attrs=None, q_filt=None,
                         qcap: Optional[int] = None):
     """Dense mirror of the cluster-major plan — the parity oracle.
 
@@ -341,15 +362,22 @@ def dense_cluster_major(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc, buf_ids,
                                                      qcap=qcap)
     qidx = serving_lib.roster_query_rows(roster, cr=cr, n_total=n)
     cand_scale = buf_scale[u][:, None] if buf_scale is not None else None
+    cand_ids = buf_ids[u][:, None]                        # (u_max, 1, cap)
+    if buf_attrs is not None:
+        # filtered rows take full padding semantics (id -1 → NEG_INF),
+        # exactly the kernel's rule — see dense_routed_topk
+        pred = filters_lib.predicate_mask(
+            buf_attrs[u][:, None], q_filt[qidx][:, :, None, :])
+        cand_ids = jnp.where(pred, cand_ids, -1)   # (u_max, Qcap, cap)
     st = score_candidates(
         q_emb[qidx], q_loc[qidx], w_st[qidx],
-        buf_emb[u][:, None], buf_loc[u][:, None], buf_ids[u][:, None],
+        buf_emb[u][:, None], buf_loc[u][:, None], cand_ids,
         w_hat, dist_max=dist_max, cand_scale=cand_scale)  # (u_max, Qcap, cap)
     st = jnp.where((roster < n)[..., None], st, NEG_INF)  # empty roster slots
     kk = min(k, cap)
     vals, pos = jax.lax.top_k(st, kk)
     ids = jnp.take_along_axis(
-        jnp.broadcast_to(buf_ids[u][:, None], st.shape), pos, axis=-1)
+        jnp.broadcast_to(cand_ids, st.shape), pos, axis=-1)
     ids = jnp.where((roster < n)[..., None], ids, -1)
     if kk < k:                       # k > cap: pad partials like the kernel
         pad = ((0, 0), (0, 0), (0, k - kk))
@@ -365,12 +393,15 @@ def dense_cluster_major(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc, buf_ids,
 
 def _routed_topk(q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids,
                  buf_scale, w_hat, *, k: int, backend: str, interpret: bool,
-                 dist_max: float, block_n: int, precision: str):
+                 dist_max: float, block_n: int, precision: str,
+                 buf_attrs=None, q_filt=None):
     """Backend dispatch for the routed scan: score the ``top_c``-routed
     clusters of an explicit buffer set and keep the top ``k`` — the body
     shared by :func:`make_query_fn` (inline, after encode+route) and
     :func:`make_shard_topk_fn` (per shard, routes pre-localized).
-    ``backend`` must be resolved (never "auto"). Returns (ids, scores).
+    ``backend`` must be resolved (never "auto"). ``buf_attrs``/``q_filt``
+    (pass both or neither) engage the filtered variants (DESIGN.md §13).
+    Returns (ids, scores).
     """
     # f32/bf16 stream no scales: the astype upcast is the whole dequant
     scale = buf_scale if precision == "int8" else None
@@ -379,7 +410,7 @@ def _routed_topk(q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids,
         score, ids = fts.fused_topk_score_routed(
             q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids, w_hat,
             k=k, dist_max=dist_max, block_n=block_n, buf_scale=scale,
-            interpret=interpret)
+            buf_attrs=buf_attrs, q_filt=q_filt, interpret=interpret)
     elif backend == "pallas-cm":
         # cluster-major (DESIGN.md §10): dedupe the routed clusters,
         # stream each distinct one ONCE against its query roster
@@ -391,27 +422,31 @@ def _routed_topk(q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids,
         u, roster, _, _ = serving_lib.cluster_major_plan(
             top_c, n_clusters=buf_emb.shape[0])
         qidx = serving_lib.roster_query_rows(roster, cr=cr, n_total=n)
+        q_filt_r = q_filt[qidx] if q_filt is not None else None
         ps, pi = fts.fused_topk_score_cluster_major(
             q_emb[qidx], q_loc[qidx], w[qidx], u, roster,
             buf_emb, buf_loc, buf_ids, w_hat, k=k, dist_max=dist_max,
             n_total=n, block_n=block_n, buf_scale=scale,
-            interpret=interpret)
+            buf_attrs=buf_attrs, q_filt_r=q_filt_r, interpret=interpret)
         score, ids = merge_cluster_major(ps, pi, roster, b=b, cr=cr, k=k)
     elif backend == "dense-cm":
         score, ids = dense_cluster_major(
             q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids, w_hat,
-            k=k, dist_max=dist_max, buf_scale=scale)
+            k=k, dist_max=dist_max, buf_scale=scale,
+            buf_attrs=buf_attrs, q_filt=q_filt)
     else:
         score, ids = dense_routed_topk(
             q_emb, q_loc, w, top_c, buf_emb, buf_loc, buf_ids, w_hat,
-            k=k, dist_max=dist_max, buf_scale=scale)
+            k=k, dist_max=dist_max, buf_scale=scale,
+            buf_attrs=buf_attrs, q_filt=q_filt)
     return ids, score
 
 
 def make_query_fn(cfg, *, cr: int = 1, k: int = 20, backend: str = "auto",
                   interpret: Optional[bool] = None,
                   dist_max: float = 1.4142, weight_mode: str = "mlp",
-                  block_n: int = 512, precision: str = "f32"):
+                  block_n: int = 512, precision: str = "f32",
+                  filtered: bool = False):
     """Build the jitted query-phase function (paper Algorithm 1).
 
     The returned function runs the whole serve path in one XLA program:
@@ -450,6 +485,12 @@ def make_query_fn(cfg, *, cr: int = 1, k: int = 20, backend: str = "auto",
     (in-kernel on pallas, via the same per-row scales on dense, so
     backend parity holds *within* every tier).
 
+    ``filtered=True`` is the STATIC filtered-search plan dimension
+    (DESIGN.md §13): the signature grows ``buf_attrs (c, cap, 3)`` after
+    ``buf_scale`` and ``q_filt (B, 4)`` after ``q_loc``, and the
+    predicate mask is applied in-scan. ``filtered=False`` builds the
+    exact pre-filter program — zero extra bytes streamed.
+
     The result is a ``jax.jit`` function: every distinct batch shape
     triggers one compile, so serve fixed shapes via :func:`run_batched`
     (or hold a :class:`QueryEngine`, which does both for you).
@@ -459,8 +500,8 @@ def make_query_fn(cfg, *, cr: int = 1, k: int = 20, backend: str = "auto",
         raise ValueError(f"precision must be one of {index_lib.PRECISIONS}, "
                          f"got {precision!r}")
 
-    def query_fn(rel_params, index_params, w_hat, norm, buf_emb, buf_loc,
-                 buf_ids, buf_scale, q_tokens, q_mask, q_loc):
+    def _run(rel_params, index_params, w_hat, norm, buf_emb, buf_loc,
+             buf_ids, buf_scale, q_tokens, q_mask, q_loc, buf_attrs, q_filt):
         q_emb = relevance.encode_queries(rel_params, q_tokens, q_mask, cfg)
         feats = index_lib.build_features(q_emb, q_loc, norm)
         top_c, _ = index_lib.route_queries(index_params, feats, cr=cr)
@@ -469,7 +510,22 @@ def make_query_fn(cfg, *, cr: int = 1, k: int = 20, backend: str = "auto",
         return _routed_topk(q_emb, q_loc, w, top_c, buf_emb, buf_loc,
                             buf_ids, buf_scale, w_hat, k=k, backend=backend,
                             interpret=interpret, dist_max=dist_max,
-                            block_n=block_n, precision=precision)
+                            block_n=block_n, precision=precision,
+                            buf_attrs=buf_attrs, q_filt=q_filt)
+
+    if filtered:
+        def query_fn(rel_params, index_params, w_hat, norm, buf_emb,
+                     buf_loc, buf_ids, buf_scale, buf_attrs, q_tokens,
+                     q_mask, q_loc, q_filt):
+            return _run(rel_params, index_params, w_hat, norm, buf_emb,
+                        buf_loc, buf_ids, buf_scale, q_tokens, q_mask,
+                        q_loc, buf_attrs, q_filt)
+    else:
+        def query_fn(rel_params, index_params, w_hat, norm, buf_emb,
+                     buf_loc, buf_ids, buf_scale, q_tokens, q_mask, q_loc):
+            return _run(rel_params, index_params, w_hat, norm, buf_emb,
+                        buf_loc, buf_ids, buf_scale, q_tokens, q_mask,
+                        q_loc, None, None)
 
     return jax.jit(query_fn)
 
@@ -521,7 +577,7 @@ def make_prefix_fn(cfg, *, cr: int = 1, weight_mode: str = "mlp"):
 def make_shard_topk_fn(*, k: int = 20, backend: str = "dense",
                        interpret: Optional[bool] = None,
                        dist_max: float = 1.4142, block_n: int = 512,
-                       precision: str = "f32"):
+                       precision: str = "f32", filtered: bool = False):
     """Build the jitted PER-SHARD suffix of the sharded query phase:
     score one shard's local cluster buffers against pre-encoded queries
     and pre-localized routes, any backend (DESIGN.md §12).
@@ -542,18 +598,34 @@ def make_shard_topk_fn(*, k: int = 20, backend: str = "dense",
     scan: the same ``cr·cap`` candidate rows (off-shard ones masked),
     the same per-row reductions, so per-shard top-k + the host tree
     merge (:func:`merge_shard_topk`) reproduce the single-device top-k
-    exactly whenever scores at the k boundary are distinct."""
+    exactly whenever scores at the k boundary are distinct.
+
+    ``filtered=True`` grows the signature with ``buf_attrs`` after
+    ``buf_scale`` and ``q_filt (B, 4)`` last, mirroring
+    :func:`make_query_fn` — the predicate is shard-local like every
+    other per-candidate term, so the tree merge composes unchanged."""
     backend, interpret = resolve_backend(backend, interpret)
     if precision not in index_lib.PRECISIONS:
         raise ValueError(f"precision must be one of {index_lib.PRECISIONS}, "
                          f"got {precision!r}")
 
-    def shard_fn(w_hat, buf_emb, buf_loc, buf_ids, buf_scale,
-                 q_emb, q_loc, w, top_c):
-        return _routed_topk(q_emb, q_loc, w, top_c, buf_emb, buf_loc,
-                            buf_ids, buf_scale, w_hat, k=k, backend=backend,
-                            interpret=interpret, dist_max=dist_max,
-                            block_n=block_n, precision=precision)
+    if filtered:
+        def shard_fn(w_hat, buf_emb, buf_loc, buf_ids, buf_scale, buf_attrs,
+                     q_emb, q_loc, w, top_c, q_filt):
+            return _routed_topk(q_emb, q_loc, w, top_c, buf_emb, buf_loc,
+                                buf_ids, buf_scale, w_hat, k=k,
+                                backend=backend, interpret=interpret,
+                                dist_max=dist_max, block_n=block_n,
+                                precision=precision, buf_attrs=buf_attrs,
+                                q_filt=q_filt)
+    else:
+        def shard_fn(w_hat, buf_emb, buf_loc, buf_ids, buf_scale,
+                     q_emb, q_loc, w, top_c):
+            return _routed_topk(q_emb, q_loc, w, top_c, buf_emb, buf_loc,
+                                buf_ids, buf_scale, w_hat, k=k,
+                                backend=backend, interpret=interpret,
+                                dist_max=dist_max, block_n=block_n,
+                                precision=precision)
 
     return jax.jit(shard_fn)
 
@@ -602,7 +674,8 @@ def merge_shard_topk(parts, *, k: Optional[int] = None):
 
 
 def make_delta_scan_fn(cfg, *, k: int = 20, dist_max: float = 1.4142,
-                       weight_mode: str = "mlp", precision: str = "f32"):
+                       weight_mode: str = "mlp", precision: str = "f32",
+                       filtered: bool = False):
     """Build the jitted brute-force scan over a delta segment's rows.
 
     The delta is small by construction (the server compacts it past a
@@ -620,27 +693,52 @@ def make_delta_scan_fn(cfg, *, k: int = 20, dist_max: float = 1.4142,
     precision semantics as the base backends, so a row scores
     bit-identically whether it is delta-resident or compacted (same
     stored quantized values, same dequant, same ST form).
+
+    ``filtered=True`` grows the signature with ``d_attrs (m, 3)`` after
+    ``d_ids`` and ``q_filt (B, 4)`` last: delta rows obey the same
+    predicate as compacted ones (a fresh insert must never leak across
+    a tenant filter while it waits for compaction).
     """
     if precision not in index_lib.PRECISIONS:
         raise ValueError(f"precision must be one of {index_lib.PRECISIONS}, "
                          f"got {precision!r}")
 
-    def scan_fn(rel_params, w_hat, d_emb, d_scale, d_loc, d_ids,
-                q_tokens, q_mask, q_loc):
+    def _scan(rel_params, w_hat, d_emb, d_scale, d_loc, d_ids, d_attrs,
+              q_tokens, q_mask, q_loc, q_filt):
         q_emb = relevance.encode_queries(rel_params, q_tokens, q_mask, cfg)
         w = relevance.st_weights(rel_params, q_emb, weight_mode=weight_mode)
         scale = d_scale[None] if precision == "int8" else None
+        ids_eff = d_ids[None]                               # (1, m)
+        if d_attrs is not None:
+            # failing rows take full padding semantics (id -1), the
+            # shared filtered rule of every scan in this module
+            pred = filters_lib.predicate_mask(d_attrs[None],
+                                              q_filt[:, None, :])
+            ids_eff = jnp.where(pred, ids_eff, -1)          # (B, m)
         st = score_candidates(q_emb, q_loc, w, d_emb[None], d_loc[None],
-                              d_ids[None], w_hat, dist_max=dist_max,
+                              ids_eff, w_hat, dist_max=dist_max,
                               cand_scale=scale)             # (B, m)
         kk = min(k, d_emb.shape[0])
         vals, pos = jax.lax.top_k(st, kk)
-        ids = jnp.take(d_ids, pos).astype(jnp.int32)
+        ids = jnp.take_along_axis(
+            jnp.broadcast_to(ids_eff, st.shape), pos, axis=1
+        ).astype(jnp.int32)
         if kk < k:
             pad = ((0, 0), (0, k - kk))
             vals = jnp.pad(vals, pad, constant_values=NEG_INF)
             ids = jnp.pad(ids, pad, constant_values=-1)
         return ids, vals
+
+    if filtered:
+        def scan_fn(rel_params, w_hat, d_emb, d_scale, d_loc, d_ids,
+                    d_attrs, q_tokens, q_mask, q_loc, q_filt):
+            return _scan(rel_params, w_hat, d_emb, d_scale, d_loc, d_ids,
+                         d_attrs, q_tokens, q_mask, q_loc, q_filt)
+    else:
+        def scan_fn(rel_params, w_hat, d_emb, d_scale, d_loc, d_ids,
+                    q_tokens, q_mask, q_loc):
+            return _scan(rel_params, w_hat, d_emb, d_scale, d_loc, d_ids,
+                         None, q_tokens, q_mask, q_loc, None)
 
     return jax.jit(scan_fn)
 
@@ -889,18 +987,20 @@ class QueryEngine:
 
     def query_fn(self, *, k: int, cr: int, backend: Optional[str] = None,
                  batch: Optional[int] = None,
-                 precision: Optional[str] = None):
-        """The traced plan for ``(batch, k, cr, backend, precision)``.
-        Plans are keyed on the batch shape too so a serving process can
-        see its full plan inventory in ``_plans``; they never rebind
-        snapshot state (everything is passed as jit arguments), so they
-        survive every publish. ``precision`` defaults to the CURRENT
+                 precision: Optional[str] = None, filtered: bool = False):
+        """The traced plan for ``(batch, k, cr, backend, precision,
+        filtered)``. Plans are keyed on the batch shape too so a serving
+        process can see its full plan inventory in ``_plans``; they never
+        rebind snapshot state (everything is passed as jit arguments), so
+        they survive every publish. ``precision`` defaults to the CURRENT
         snapshot's tier — a publish that changes precision simply traces
-        (and caches) new plans under the new key."""
+        (and caches) new plans under the new key. ``filtered`` is the
+        static filtered-search dimension (DESIGN.md §13): filtered and
+        unfiltered traffic never share a program."""
         backend = self.backend if backend is None else backend
         if precision is None:
             precision = self._snapshot.meta.precision
-        key = (batch, k, cr, backend, precision)
+        key = (batch, k, cr, backend, precision, filtered)
         if key not in self._plans:
             # bounded LRU: hot-swaps, precision changes, and backend
             # upgrades retrace freely without growing the cache forever
@@ -909,7 +1009,8 @@ class QueryEngine:
             self._plans[key] = make_query_fn(
                 self.cfg, cr=cr, k=k, backend=backend,
                 interpret=self.interpret, dist_max=self.dist_max,
-                weight_mode=self.weight_mode, precision=precision)
+                weight_mode=self.weight_mode, precision=precision,
+                filtered=filtered)
         self._plans.move_to_end(key)
         return self._plans[key]
 
@@ -977,78 +1078,99 @@ class QueryEngine:
 
     def shard_topk_fn(self, *, k: int, backend: Optional[str] = None,
                       batch: Optional[int] = None,
-                      precision: Optional[str] = None):
+                      precision: Optional[str] = None,
+                      filtered: bool = False):
         """The traced per-shard plan (:func:`make_shard_topk_fn`),
         cached in the same bounded LRU as the query plans under the key
-        ``("shard", batch, k, backend, precision)``. ONE program serves
-        every shard — the local buffer shapes agree across shards by
-        construction (sentinel + remainder padding), and jax compiles
-        one executable per committed device."""
+        ``("shard", batch, k, backend, precision, filtered)``. ONE
+        program serves every shard — the local buffer shapes agree
+        across shards by construction (sentinel + remainder padding),
+        and jax compiles one executable per committed device."""
         backend = self.backend if backend is None else backend
         if precision is None:
             precision = self._snapshot.meta.precision
-        key = ("shard", batch, k, backend, precision)
+        key = ("shard", batch, k, backend, precision, filtered)
         if key not in self._plans:
             while len(self._plans) >= self.max_plans:
                 self._plans.popitem(last=False)
             self._plans[key] = make_shard_topk_fn(
                 k=k, backend=backend, interpret=self.interpret,
-                dist_max=self.dist_max, precision=precision)
+                dist_max=self.dist_max, precision=precision,
+                filtered=filtered)
         self._plans.move_to_end(key)
         return self._plans[key]
 
     def _query_sharded(self, snap, q_tokens, q_mask, q_loc, *, k: int,
-                       cr: int, batch: int, backend: Optional[str]):
+                       cr: int, batch: int, backend: Optional[str],
+                       fvals=None, filtered: bool = False):
         """The mesh-sharded scan (DESIGN.md §12): shared prefix on the
         default device, localized per-shard scans pinned to each
-        shard's device by their committed buffers, host tree merge."""
+        shard's device by their committed buffers, host tree merge.
+        The filtered variant threads each shard's local ``attrs`` part
+        plus the per-query ``fvals`` rows through the same plan."""
         from repro.core import serving as serving_lib
 
         shards = snap.shards
         backend = self.backend if backend is None else backend
         prefix = self.prefix_fn(cr=cr)
         sfn = self.shard_topk_fn(k=k, backend=backend, batch=batch,
-                                 precision=snap.meta.precision)
+                                 precision=snap.meta.precision,
+                                 filtered=filtered)
         # host (uncommitted) copies of everything the per-shard calls
         # consume: a committed default-device operand would clash with
         # buffers committed on shard s (jax refuses mixed commitments)
         w_hat = np.asarray(snap.w_hat)
 
-        def chunk_fn(t, m, l):
+        def chunk_fn(t, m, l, *rest):
             q_emb, w, top_c = prefix(snap.rel_params, snap.index_params,
                                      snap.norm, t, m, l)
             q_emb = np.asarray(q_emb)
             w = np.asarray(w)
             top_c = np.asarray(top_c)
             loc = np.asarray(l)
+            qf = np.asarray(rest[0]) if filtered else None
             partials = []
             for s, part in enumerate(shards.parts):
                 local_c = serving_lib.localize_routes(
                     top_c, shards.shard_of, shards.local_of, s,
                     sentinel=shards.sentinel)
                 # async dispatch: shard s computes while s+1 dispatches
-                partials.append(sfn(w_hat, part["emb"], part["loc"],
-                                    part["ids"], part["scale"],
-                                    q_emb, loc, w, local_c))
+                if filtered:
+                    partials.append(sfn(w_hat, part["emb"], part["loc"],
+                                        part["ids"], part["scale"],
+                                        part["attrs"],
+                                        q_emb, loc, w, local_c, qf))
+                else:
+                    partials.append(sfn(w_hat, part["emb"], part["loc"],
+                                        part["ids"], part["scale"],
+                                        q_emb, loc, w, local_c))
             return merge_shard_topk(
                 [(np.asarray(i), np.asarray(v)) for i, v in partials], k=k)
 
-        return run_batched(chunk_fn, [q_tokens, q_mask, q_loc], batch=batch)
+        arrays = [q_tokens, q_mask, q_loc]
+        if filtered:
+            arrays.append(fvals)
+        return run_batched(chunk_fn, arrays, batch=batch)
 
-    def delta_scan_fn(self, *, k: int, precision: str):
-        """The jitted delta scan plan for ``(k, precision)``. Retraces
-        lazily per padded row-count bucket (:data:`DELTA_PAD_BUCKET`)."""
-        key = (k, precision)
+    def delta_scan_fn(self, *, k: int, precision: str,
+                      filtered: bool = False):
+        """The jitted delta scan plan for ``(k, precision, filtered)``.
+        Retraces lazily per padded row-count bucket
+        (:data:`DELTA_PAD_BUCKET`)."""
+        key = (k, precision, filtered)
         if key not in self._delta_plans:
             self._delta_plans[key] = make_delta_scan_fn(
                 self.cfg, k=k, dist_max=self.dist_max,
-                weight_mode=self.weight_mode, precision=precision)
+                weight_mode=self.weight_mode, precision=precision,
+                filtered=filtered)
         return self._delta_plans[key]
 
     def _scan_delta(self, snap, q_tokens, q_mask, q_loc, *, k: int,
-                    batch: int):
+                    batch: int, fvals=None, filtered: bool = False):
         """Brute-force scan the pinned snapshot's delta rows: every
         query × every delta row, padded to the bucketed static shape."""
+        from repro.core.filters import N_ATTRS
+
         arrs = snap.delta.arrays()
         m = arrs["ids"].shape[0]
         m_pad = -(-m // DELTA_PAD_BUCKET) * DELTA_PAD_BUCKET
@@ -1060,9 +1182,18 @@ class QueryEngine:
         loc[:m] = arrs["loc"]
         ids = np.full((m_pad,), -1, np.int32)
         ids[:m] = arrs["ids"]
-        fn = self.delta_scan_fn(k=k, precision=snap.meta.precision)
+        fn = self.delta_scan_fn(k=k, precision=snap.meta.precision,
+                                filtered=filtered)
         w_hat = snap.w_hat
         de, ds, dl, di = (jnp.asarray(a) for a in (emb, scale, loc, ids))
+        if filtered:
+            attrs = np.zeros((m_pad, N_ATTRS), np.int32)
+            attrs[:m] = arrs["attrs"]
+            da = jnp.asarray(attrs)
+            return run_batched(
+                lambda t, mk, l, f: fn(snap.rel_params, w_hat, de, ds, dl,
+                                       di, da, t, mk, l, f),
+                [q_tokens, q_mask, q_loc, fvals], batch=batch)
         return run_batched(
             lambda t, mk, l: fn(snap.rel_params, w_hat, de, ds, dl, di,
                                 t, mk, l),
@@ -1070,7 +1201,7 @@ class QueryEngine:
 
     def query(self, q_tokens, q_mask, q_loc, *, k: int = 20, cr: int = 1,
               batch: int = 256, backend: Optional[str] = None,
-              snapshot=None):
+              snapshot=None, filters=None):
         """Batched routed query: (ids (n, k), scores (n, k)) numpy.
 
         Reads the snapshot reference exactly once (or serves an explicit
@@ -1079,6 +1210,15 @@ class QueryEngine:
         The plan is selected for the pinned snapshot's precision tier;
         an auto engine additionally picks query- vs cluster-major per
         batch (:meth:`pick_backend`) unless ``backend`` overrides it.
+
+        ``filters`` (core/filters.py, DESIGN.md §13) is ``None``, one
+        :class:`~repro.core.filters.FilterSpec` broadcast over the whole
+        request, or one spec (or None) per query row. Filters compile to
+        per-query ``fvals`` rows riding the batch arrays; all-no-op
+        filters collapse to the unfiltered plan, so pre-filter callers
+        trace and run the byte-identical program. The predicate applies
+        uniformly to base, sharded, and delta scans — a row never leaks
+        across a filter anywhere in its lifecycle.
 
         When the pinned snapshot carries a delta segment (DESIGN.md
         §11), the base results are post-processed on the host: the delta
@@ -1093,6 +1233,8 @@ class QueryEngine:
         path is placement-agnostic and composes unchanged.
         """
         snap = self._snapshot if snapshot is None else snapshot
+        fvals, filtered = filters_lib.compile_filters(
+            filters, np.asarray(q_tokens).shape[0])
         # the per-batch cluster-major pick engages whenever the request
         # is "auto": explicitly (e.g. the serving drivers' resolved CLI
         # default, forwarded through ServerConfig.backend) or implicitly
@@ -1122,21 +1264,34 @@ class QueryEngine:
             # host tree merge, then the same delta merge below
             ids, scores = self._query_sharded(
                 snap, q_tokens, q_mask, q_loc, k=k_fetch, cr=cr,
-                batch=batch, backend=backend)
+                batch=batch, backend=backend, fvals=fvals,
+                filtered=filtered)
         else:
             fn = self.query_fn(k=k_fetch, cr=cr, backend=backend,
-                               batch=batch, precision=snap.meta.precision)
+                               batch=batch, precision=snap.meta.precision,
+                               filtered=filtered)
             w_hat = snap.w_hat          # once per call, not per chunk
-            ids, scores = run_batched(
-                lambda t, m, l: fn(snap.rel_params, snap.index_params,
-                                   w_hat, snap.norm, buf["emb"], buf["loc"],
-                                   buf["ids"], buf["scale"], t, m, l),
-                [q_tokens, q_mask, q_loc], batch=batch)
+            if filtered:
+                ids, scores = run_batched(
+                    lambda t, m, l, f: fn(
+                        snap.rel_params, snap.index_params, w_hat,
+                        snap.norm, buf["emb"], buf["loc"], buf["ids"],
+                        buf["scale"], buf["attrs"], t, m, l, f),
+                    [q_tokens, q_mask, q_loc, fvals], batch=batch)
+            else:
+                ids, scores = run_batched(
+                    lambda t, m, l: fn(snap.rel_params, snap.index_params,
+                                       w_hat, snap.norm, buf["emb"],
+                                       buf["loc"], buf["ids"],
+                                       buf["scale"], t, m, l),
+                    [q_tokens, q_mask, q_loc], batch=batch)
         if not use_delta:
             return ids, scores
         d_ids = d_scores = None
         if delta.n_rows:
             d_ids, d_scores = self._scan_delta(snap, q_tokens, q_mask,
-                                               q_loc, k=k, batch=batch)
+                                               q_loc, k=k, batch=batch,
+                                               fvals=fvals,
+                                               filtered=filtered)
         return merge_delta(ids, scores, d_ids, d_scores,
                            tombstones=delta.tombstone_array(), k=k)

@@ -1,0 +1,205 @@
+"""Filtered search: per-object attribute tables + predicate compilation.
+
+One shared index serves many isolated slices (the workload-partitioning
+concern WISK solves at index-build time, done here at query time): every
+object carries a packed int32 attribute row
+
+    ``attrs = [tenant id, category bitmask, timestamp]``   (:data:`N_ATTRS`)
+
+stored as an extra ``(c, cap, 3)`` buffer family beside ``ids`` — same
+padding convention (all-zero rows on padding slots), same gather layout,
+threaded through build, mutation, delta segments, snapshot schema v5 and
+mesh sharding.
+
+A :class:`FilterSpec` (tenant equality + category bitmask + inclusive
+time range) compiles to a per-query int32 vector
+
+    ``fvals = [tenant, category_mask, t_min, t_max]``      (:data:`N_FVALS`)
+
+whose components use **sentinel no-op values** (tenant ``-1`` = any,
+mask ``0`` = any, time bounds int32 min/max = any) so ONE kernel variant
+serves every filter combination with no static branching per filter
+kind, and a mixed-tenant micro-batch compiles to a single plan. The
+predicate is applied beside the dequant step inside the fused kernels
+(kernels/fused_topk_score.py) and the dense oracles: filtered rows score
+``NEG_INF`` in VMEM, candidates never round-trip to host.
+
+Cache-isolation invariant: :func:`filter_signature` is the hashable
+component the engine plan cache and every server cache / coalescing key
+must include — two tenants can never share a cached result because their
+signatures differ.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import numpy as np
+import jax.numpy as jnp
+
+# packed attribute columns: attrs[..., k]
+N_ATTRS = 3
+ATTR_TENANT, ATTR_CATEGORY, ATTR_TIME = 0, 1, 2
+
+# compiled per-query filter values: fvals[..., k]
+N_FVALS = 4
+
+INT32_MIN = -(2 ** 31)
+INT32_MAX = 2 ** 31 - 1
+
+# sentinel no-op components (see FilterSpec): a query carrying all three
+# sentinels matches every live row and is equivalent to no filter at all
+ANY_TENANT = -1
+ANY_CATEGORY = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterSpec:
+    """One standing predicate over object attributes.
+
+    * ``tenant``        — exact match on ``attrs[0]``; ``ANY_TENANT`` (-1)
+                          accepts every tenant;
+    * ``category_mask`` — bitwise-AND test against ``attrs[1]``
+                          (match ⟺ ``attrs[1] & mask != 0``);
+                          ``ANY_CATEGORY`` (0) accepts every category;
+    * ``t_min``/``t_max`` — inclusive bounds on ``attrs[2]``; the int32
+                          extremes accept every timestamp.
+    """
+
+    tenant: int = ANY_TENANT
+    category_mask: int = ANY_CATEGORY
+    t_min: int = INT32_MIN
+    t_max: int = INT32_MAX
+
+    def __post_init__(self):
+        for name in ("tenant", "category_mask", "t_min", "t_max"):
+            v = getattr(self, name)
+            if not (INT32_MIN <= int(v) <= INT32_MAX):
+                raise ValueError(f"FilterSpec.{name}={v} outside int32")
+
+    @property
+    def is_noop(self) -> bool:
+        return (self.tenant == ANY_TENANT
+                and self.category_mask == ANY_CATEGORY
+                and self.t_min == INT32_MIN and self.t_max == INT32_MAX)
+
+    def signature(self) -> Tuple[int, int, int, int]:
+        """Hashable identity for cache keys (exact component values)."""
+        return (int(self.tenant), int(self.category_mask),
+                int(self.t_min), int(self.t_max))
+
+    def to_fvals(self) -> np.ndarray:
+        return np.array(self.signature(), np.int32)
+
+
+NOOP_FILTER = FilterSpec()
+
+Filters = Union[None, FilterSpec, Sequence[Optional[FilterSpec]]]
+
+
+# ---------------------------------------------------------------------------
+# Attribute-table validation / construction (host side)
+# ---------------------------------------------------------------------------
+
+
+def validate_attrs(attrs, n: int) -> np.ndarray:
+    """Coerce a per-object attribute table to the packed (n, N_ATTRS)
+    int32 layout; ``None`` yields all zeros (tenant 0, no categories,
+    t=0) so unfiltered corpora cost nothing to carry."""
+    if attrs is None:
+        return np.zeros((n, N_ATTRS), np.int32)
+    out = np.asarray(attrs)
+    if out.shape != (n, N_ATTRS):
+        raise ValueError(f"attrs must be ({n}, {N_ATTRS}), got {out.shape}")
+    if not np.issubdtype(out.dtype, np.integer):
+        raise ValueError(f"attrs must be integer, got dtype {out.dtype}")
+    return out.astype(np.int32)
+
+
+def make_attrs(tenant, category_mask=0, timestamp=0) -> np.ndarray:
+    """Pack broadcastable per-object columns into an (n, N_ATTRS) table."""
+    t, c, ts = np.broadcast_arrays(
+        np.asarray(tenant), np.asarray(category_mask), np.asarray(timestamp))
+    return np.stack([t, c, ts], axis=-1).astype(np.int32).reshape(
+        -1, N_ATTRS)
+
+
+# ---------------------------------------------------------------------------
+# Filter compilation: FilterSpec(s) -> per-query fvals rows
+# ---------------------------------------------------------------------------
+
+
+def compile_filters(filters: Filters, batch: int) -> Tuple[np.ndarray, bool]:
+    """Compile to ``(fvals (batch, N_FVALS) int32, filtered: bool)``.
+
+    A single spec broadcasts over the batch; a sequence supplies one spec
+    per query (``None`` entries become the no-op sentinel row). The bool
+    is the STATIC plan dimension: when False (all no-op) callers take the
+    unfiltered fast path and stream zero extra bytes.
+    """
+    if filters is None:
+        specs = [NOOP_FILTER] * batch
+    elif isinstance(filters, FilterSpec):
+        specs = [filters] * batch
+    else:
+        specs = [f if f is not None else NOOP_FILTER for f in filters]
+        if len(specs) != batch:
+            raise ValueError(f"got {len(specs)} filters for batch {batch}")
+        for f in specs:
+            if not isinstance(f, FilterSpec):
+                raise TypeError(f"filters must be FilterSpec, got {type(f)}")
+    fvals = np.stack([f.to_fvals() for f in specs])
+    return fvals, not all(f.is_noop for f in specs)
+
+
+def filter_signature(filters: Filters):
+    """Hashable cache-key component. ``None`` / no-op collapse to ``None``
+    so pre-filter cache entries stay valid for unfiltered queries."""
+    if filters is None:
+        return None
+    if isinstance(filters, FilterSpec):
+        return None if filters.is_noop else filters.signature()
+    sigs = tuple((f.signature() if f is not None else NOOP_FILTER.signature())
+                 for f in filters)
+    if all(s == NOOP_FILTER.signature() for s in sigs):
+        return None
+    return sigs
+
+
+# ---------------------------------------------------------------------------
+# The predicate (jnp; identical math inside kernels and dense oracles)
+# ---------------------------------------------------------------------------
+
+
+def predicate_mask(attrs, fvals):
+    """Vectorized predicate: ``attrs`` int32 ``(..., N_ATTRS)``, ``fvals``
+    int32 ``(..., N_FVALS)`` broadcastable against ``attrs[..., 0]``.
+    Returns bool ``(...)`` — True = row passes. All three clauses are
+    sentinel-aware, so no-op components accept everything.
+    """
+    tenant = attrs[..., ATTR_TENANT]
+    cat = attrs[..., ATTR_CATEGORY]
+    ts = attrs[..., ATTR_TIME]
+    f_tenant = fvals[..., 0]
+    f_mask = fvals[..., 1]
+    t_lo = fvals[..., 2]
+    t_hi = fvals[..., 3]
+    ok_tenant = (f_tenant < 0) | (tenant == f_tenant)
+    ok_cat = (f_mask == 0) | ((cat & f_mask) != 0)
+    ok_time = (ts >= t_lo) & (ts <= t_hi)
+    return ok_tenant & ok_cat & ok_time
+
+
+def predicate_mask_np(attrs, fvals) -> np.ndarray:
+    """Numpy twin of :func:`predicate_mask` for host-side oracles."""
+    return np.asarray(predicate_mask(jnp.asarray(attrs), jnp.asarray(fvals)))
+
+
+__all__ = [
+    "N_ATTRS", "N_FVALS", "ATTR_TENANT", "ATTR_CATEGORY", "ATTR_TIME",
+    "INT32_MIN", "INT32_MAX", "ANY_TENANT", "ANY_CATEGORY",
+    "FilterSpec", "NOOP_FILTER", "Filters",
+    "validate_attrs", "make_attrs",
+    "compile_filters", "filter_signature",
+    "predicate_mask", "predicate_mask_np",
+]

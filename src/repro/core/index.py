@@ -199,18 +199,22 @@ def assign_clusters(params, feats, *, top=1):
 
 def build_cluster_buffers(assign_top, emb, loc, *, n_clusters: int,
                           capacity: Optional[int] = None, spill: int = 3,
-                          precision: str = "f32"):
+                          precision: str = "f32", attrs=None):
     """Pack objects into (c, cap) padded buffers (host-side, numpy).
 
     assign_top: (N, spill) preferred clusters per object, best first.
     Returns dict with emb (c,cap,d) in ``precision``'s storage dtype,
     loc (c,cap,2), ids (c,cap) int32 (-1 = padding), counts (c,),
     scale (c,cap) f32 per-row dequant scales (all ones unless int8),
-    plus the host-side scalars capacity / n_spilled / precision.
+    attrs (c,cap,3) int32 per-object filter attributes (core/filters.py;
+    zeros when ``attrs`` is None), plus the host-side scalars
+    capacity / n_spilled / precision.
     """
+    from repro.core import filters as filters_lib
     assign_top = np.asarray(assign_top)
     emb = np.asarray(emb)
     loc = np.asarray(loc)
+    attrs = filters_lib.validate_attrs(attrs, emb.shape[0])
     n, d = emb.shape
     c = n_clusters
     if capacity is None:
@@ -240,15 +244,17 @@ def build_cluster_buffers(assign_top, emb, loc, *, n_clusters: int,
     gather = np.where(ids >= 0, ids, 0)
     buf_emb = emb[gather]
     buf_loc = loc[gather]
+    buf_attrs = attrs[gather]
     valid = ids >= 0
     # zero out padding so fused scores on pads are harmless (masked anyway)
     buf_emb[~valid] = 0.0
     buf_loc[~valid] = PAD_LOC
+    buf_attrs[~valid] = 0
     buf_emb, buf_scale = quantize_rows(buf_emb, precision)
     return {
         "emb": jnp.asarray(buf_emb), "loc": jnp.asarray(buf_loc),
         "ids": jnp.asarray(ids), "counts": jnp.asarray(counts),
-        "scale": jnp.asarray(buf_scale),
+        "scale": jnp.asarray(buf_scale), "attrs": jnp.asarray(buf_attrs),
         "n_spilled": n_spilled, "capacity": capacity, "precision": precision,
     }
 
@@ -267,7 +273,7 @@ def route_queries(params, q_feats, *, cr: int = 1):
 
 
 def insert_objects(buffers, params, norm, new_emb, new_loc, new_ids, *,
-                   spill: int = 3):
+                   spill: int = 3, new_attrs=None):
     """Route new objects through the trained index into their buffers.
 
     Placement mirrors :func:`build_cluster_buffers` (paper §4.3): each
@@ -284,14 +290,17 @@ def insert_objects(buffers, params, norm, new_emb, new_loc, new_ids, *,
     quantize the new rows with their own per-row scales on the way in,
     so an insert never changes the buffer's storage dtype.
     """
+    from repro.core import filters as filters_lib
     feats = build_features(new_emb, new_loc, norm)
     n_clusters = int(np.asarray(buffers["counts"]).shape[0])
     hops = max(1, min(int(spill), n_clusters))
     cl = np.asarray(assign_clusters(params, feats, top=hops))
     if cl.ndim == 1:
         cl = cl[:, None]
+    new_attrs = filters_lib.validate_attrs(new_attrs,
+                                           np.asarray(new_ids).shape[0])
     emb_np = {k: np.asarray(v).copy() for k, v in buffers.items()
-              if k in ("emb", "loc", "ids", "scale")}
+              if k in ("emb", "loc", "ids", "scale", "attrs")}
     counts = np.asarray(buffers["counts"]).copy()
     cap = buffers["capacity"]
     q_emb, q_scale = quantize_rows(np.asarray(new_emb, np.float32),
@@ -318,6 +327,7 @@ def insert_objects(buffers, params, norm, new_emb, new_loc, new_ids, *,
         emb_np["scale"][ci, slot] = q_scale[j]
         emb_np["loc"][ci, slot] = np.asarray(new_loc[j])
         emb_np["ids"][ci, slot] = int(new_ids[j])
+        emb_np["attrs"][ci, slot] = new_attrs[j]
         counts[ci] += 1
     out = dict(buffers)
     out.update({k: jnp.asarray(v) for k, v in emb_np.items()})
@@ -337,15 +347,18 @@ def delete_objects(buffers, del_ids):
     emb = np.asarray(buffers["emb"]).copy()
     loc = np.asarray(buffers["loc"]).copy()
     scale = np.asarray(buffers["scale"]).copy()
+    attrs = np.asarray(buffers["attrs"]).copy()
     mask = np.isin(ids, np.asarray(del_ids))
     ids[mask] = -1
     emb[mask] = 0.0
     loc[mask] = PAD_LOC
     scale[mask] = 1.0          # padding rows dequantize as exact zeros
+    attrs[mask] = 0
     out = dict(buffers)
     out["ids"] = jnp.asarray(ids)
     out["emb"] = jnp.asarray(emb)
     out["loc"] = jnp.asarray(loc)
     out["scale"] = jnp.asarray(scale)
+    out["attrs"] = jnp.asarray(attrs)
     out["counts"] = jnp.asarray((ids >= 0).sum(-1))
     return out

@@ -269,11 +269,13 @@ class ListRetriever:
     # --- indexing phase -----------------------------------------------------
 
     def build(self, *, capacity=None, spill: int = 3,
-              precision: str = "f32"):
+              precision: str = "f32", attrs=None):
         """Indexing phase: pack the corpus into padded cluster buffers,
         optionally quantized (``precision ∈ index.PRECISIONS``,
         DESIGN.md §9 — int8 cuts the query phase's dominant HBM stream
-        4×; loc/ids stay exact)."""
+        4×; loc/ids stay exact). ``attrs (n_objects, 3)`` attaches
+        per-object filter attributes (core/filters.py, DESIGN.md §13);
+        None → all-zero rows."""
         assert self.index_params is not None, "train_index first"
         if self.obj_emb is None:
             self.obj_emb = embed_objects(self.rel_params, self.corpus, self.cfg)
@@ -287,7 +289,7 @@ class ListRetriever:
         self.buffers = index_lib.build_cluster_buffers(
             np.asarray(top), self.obj_emb, obj_loc,
             n_clusters=self.cfg.n_clusters, capacity=capacity, spill=spill,
-            precision=precision)
+            precision=precision, attrs=attrs)
         self.obj_assign = np.asarray(top[:, 0])
         self._engine = None            # buffers changed: invalidate plans
         return self.buffers

@@ -85,6 +85,7 @@ import numpy as np
 
 from repro.core import delta as delta_lib
 from repro.core import engine as engine_lib
+from repro.core import filters as filters_lib
 from repro.core import index as index_lib
 from repro.core import cluster_metrics as cm
 
@@ -221,18 +222,23 @@ class LRUCache:
 
 
 def exact_key(tokens: np.ndarray, mask: np.ndarray, loc: np.ndarray,
-              k: int, cr: int) -> tuple:
-    """Full-request cache key: every byte of the request participates."""
-    return (k, cr, tokens.tobytes(), mask.tobytes(), loc.tobytes())
+              k: int, cr: int, fsig=None) -> tuple:
+    """Full-request cache key: every byte of the request participates.
+    ``fsig`` (``filters.filter_signature``) is the tenant-isolation
+    component (DESIGN.md §13): two requests differing only in their
+    filter can never share a cached answer."""
+    return (k, cr, fsig, tokens.tobytes(), mask.tobytes(), loc.tobytes())
 
 
 def near_key(tokens: np.ndarray, mask: np.ndarray, loc: np.ndarray,
-             k: int, cr: int, cells: int) -> tuple:
+             k: int, cr: int, cells: int, fsig=None) -> tuple:
     """Near-duplicate key: keyword signature (sorted unique token ids) +
-    spatial cell (loc quantized to a cells×cells grid over the unit box)."""
+    spatial cell (loc quantized to a cells×cells grid over the unit box)
+    + the filter signature (near-duplicates must agree on the predicate
+    exactly — proximity never crosses a tenant boundary)."""
     sig = tuple(sorted(set(tokens[mask].tolist())))
     cell = tuple(np.clip((loc * cells).astype(np.int64), 0, cells - 1).tolist())
-    return (k, cr, sig, cell)
+    return (k, cr, fsig, sig, cell)
 
 
 # ---------------------------------------------------------------------------
@@ -241,10 +247,12 @@ def near_key(tokens: np.ndarray, mask: np.ndarray, loc: np.ndarray,
 
 
 class _Pending:
-    __slots__ = ("tokens", "mask", "loc", "ekey", "ikey", "nkey", "future")
+    __slots__ = ("tokens", "mask", "loc", "filt", "ekey", "ikey", "nkey",
+                 "future")
 
-    def __init__(self, tokens, mask, loc, ekey, ikey, nkey, future):
+    def __init__(self, tokens, mask, loc, filt, ekey, ikey, nkey, future):
         self.tokens, self.mask, self.loc = tokens, mask, loc
+        self.filt = filt
         self.ekey, self.ikey = ekey, ikey
         self.nkey, self.future = nkey, future
 
@@ -277,6 +285,7 @@ class StreamingServer:
         self._timer: Optional[asyncio.TimerHandle] = None
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._compaction_handle: Optional[asyncio.Handle] = None
+        self._subs = None            # SubscriptionRegistry, created lazily
 
     # --- warm-up manager --------------------------------------------------
 
@@ -332,7 +341,7 @@ class StreamingServer:
         return delta_lib.DeltaSegment.empty(
             int(snap.buffers["emb"].shape[-1]), snap.meta.precision)
 
-    def insert_objects(self, new_emb, new_loc, new_ids):
+    def insert_objects(self, new_emb, new_loc, new_ids, new_attrs=None):
         """Accept a batch of new objects and publish the successor
         snapshot. Returns the snapshot being served after the call.
 
@@ -342,6 +351,13 @@ class StreamingServer:
         §4.3 clusters later (:meth:`_maybe_compact`). With
         ``delta_threshold=0`` the fold happens eagerly instead
         (``index.insert_objects`` — O(index), the legacy path).
+        ``new_attrs (n, 3)`` are the rows' filter attributes
+        (core/filters.py; None → all-zero).
+
+        After the publish the batch is dispatched ONCE against the
+        standing-query roster (:meth:`subscribe`, core/continuous.py):
+        matched subscriptions are notified synchronously, tagged with
+        the published version — exactly-once across any later hot-swap.
 
         After a publish the SERVER'S SNAPSHOT is the source of truth for
         the corpus: a ``ListRetriever`` that originally supplied the
@@ -353,11 +369,18 @@ class StreamingServer:
         if self.cfg.delta_threshold <= 0:
             buf = index_lib.insert_objects(
                 snap.buffers, snap.index_params, snap.norm,
-                new_emb, new_loc, new_ids, spill=self.cfg.spill)
-            return self.publish(snap.with_buffers(buf))
-        delta = self._delta_of(snap).insert(new_emb, new_loc, new_ids)
-        self.publish(snap.with_delta(delta))
-        self._maybe_compact()
+                new_emb, new_loc, new_ids, spill=self.cfg.spill,
+                new_attrs=new_attrs)
+            out = self.publish(snap.with_buffers(buf))
+        else:
+            delta = self._delta_of(snap).insert(new_emb, new_loc, new_ids,
+                                                new_attrs)
+            out = self.publish(snap.with_delta(delta))
+        if self._subs is not None and len(self._subs):
+            self._subs.dispatch(new_emb, new_loc, new_ids, new_attrs,
+                                snapshot=out)
+        if self.cfg.delta_threshold > 0:
+            self._maybe_compact()
         return self.engine.snapshot
 
     def delete_objects(self, del_ids):
@@ -437,7 +460,36 @@ class StreamingServer:
         published snapshot."""
         self.engine.publish(snapshot)
         self.invalidate_cache()
+        if self._subs is not None:
+            self._subs.on_publish(snapshot)
         return snapshot
+
+    # --- continuous queries (DESIGN.md §13, core/continuous.py) -----------
+
+    @property
+    def subscriptions(self):
+        """The lazily created standing-query registry."""
+        if self._subs is None:
+            from repro.core import continuous as continuous_lib
+            self._subs = continuous_lib.SubscriptionRegistry(
+                self.engine, cr=self.cfg.cr)
+        return self._subs
+
+    def subscribe(self, tokens, mask, loc, *, filters=None,
+                  threshold: float = 0.0):
+        """Register a standing query → :class:`~repro.core.continuous.
+        Subscription` (an async iterator of notifications). Every
+        subsequent :meth:`insert_objects` batch is matched against it:
+        assigned cluster ∈ its routes, filter predicate, ST ≥
+        ``threshold``. Survives snapshot hot-swaps; :meth:`unsubscribe`
+        (or ``sub.close()``) ends the stream."""
+        return self.subscriptions.register(tokens, mask, loc,
+                                           filters=filters,
+                                           threshold=threshold)
+
+    def unsubscribe(self, sub_id: int):
+        if self._subs is not None:
+            self._subs.unregister(sub_id)
 
     def invalidate_cache(self):
         self._exact.clear()
@@ -469,13 +521,20 @@ class StreamingServer:
             self._inflight.clear()
             self._loop = loop
 
-    async def submit(self, tokens, mask, loc, *, t_arrival=None):
+    async def submit(self, tokens, mask, loc, *, filters=None,
+                     t_arrival=None):
         """Answer one spatial-keyword request: → (ids (k,), scores (k,)).
 
         Cache hits return immediately; misses wait for the size- or
         deadline-triggered flush of the current micro-batch. The
         returned arrays are read-only (shared with the result cache);
         ``.copy()`` before mutating.
+
+        ``filters`` is an optional per-request
+        :class:`~repro.core.filters.FilterSpec` (DESIGN.md §13). Its
+        signature joins every cache and coalescing key, so requests
+        with different predicates — different tenants above all — never
+        share an answer; a no-op spec keys identically to no filter.
 
         ``t_arrival`` (a ``time.perf_counter()`` stamp) backdates the
         latency measurement to the request's intended arrival time —
@@ -485,6 +544,11 @@ class StreamingServer:
         tokens = np.ascontiguousarray(np.asarray(tokens, np.int32))
         mask = np.ascontiguousarray(np.asarray(mask, bool))
         loc = np.ascontiguousarray(np.asarray(loc, np.float32))
+        if filters is not None and not isinstance(filters,
+                                                  filters_lib.FilterSpec):
+            raise TypeError(f"filters must be a FilterSpec or None, "
+                            f"got {type(filters)}")
+        fsig = filters_lib.filter_signature(filters)
         t0 = time.perf_counter() if t_arrival is None else t_arrival
         self._adopt_loop(asyncio.get_running_loop())
         self.stats.n_requests += 1
@@ -494,7 +558,7 @@ class StreamingServer:
         # can only come from an answer computed against this exact index
         # generation (publish also clears, so this is belt and braces)
         ver = self.engine.snapshot.meta.version
-        ekey = exact_key(tokens, mask, loc, k, cr)
+        ekey = exact_key(tokens, mask, loc, k, cr, fsig)
         hit = self._exact.get((ver, ekey))
         if hit is not None:
             self.stats.exact_hits += 1
@@ -502,7 +566,8 @@ class StreamingServer:
             return hit
         nkey = None
         if self.cfg.near_cells > 0:
-            nkey = near_key(tokens, mask, loc, k, cr, self.cfg.near_cells)
+            nkey = near_key(tokens, mask, loc, k, cr, self.cfg.near_cells,
+                            fsig)
             hit = self._near.get((ver, nkey))
             if hit is not None:
                 self.stats.near_hits += 1
@@ -524,8 +589,8 @@ class StreamingServer:
         loop = asyncio.get_running_loop()
         fut: asyncio.Future = loop.create_future()
         self._inflight[ikey] = fut
-        self._pending.append(_Pending(tokens, mask, loc, ekey, ikey, nkey,
-                                      fut))
+        self._pending.append(_Pending(tokens, mask, loc, filters, ekey,
+                                      ikey, nkey, fut))
         if len(self._pending) >= self.cfg.batch_size:
             self._flush("size")
         elif self._timer is None:
@@ -549,6 +614,11 @@ class StreamingServer:
         tok = np.stack([p.tokens for p in pending])
         msk = np.stack([p.mask for p in pending])
         loc = np.stack([p.loc for p in pending])
+        # per-row filters: a mixed-tenant micro-batch compiles to ONE
+        # filtered plan (sentinel no-op rows, core/filters.py); an
+        # all-unfiltered batch collapses to the unfiltered program
+        filts = ([p.filt for p in pending]
+                 if any(p.filt is not None for p in pending) else None)
         # pin the snapshot for the WHOLE flush: every row of this batch
         # scores one consistent index generation even if a publish lands
         # while the engine call is executing, and the results are cached
@@ -559,7 +629,7 @@ class StreamingServer:
             ids, scores = self.engine.query(
                 tok, msk, loc, k=self.cfg.k, cr=self.cfg.cr,
                 batch=self.cfg.batch_size, backend=self.cfg.backend,
-                snapshot=snap)
+                snapshot=snap, filters=filts)
         except Exception as e:                   # noqa: BLE001
             for p in pending:
                 self._inflight.pop(p.ikey, None)
@@ -622,6 +692,11 @@ class StreamingServer:
         filled = s.engine_batches * self.cfg.batch_size
         out = {
             "requests": s.n_requests,
+            # split cache economics (DESIGN.md §7): raw counts beside the
+            # rates, so drivers can report exact-LRU vs near-duplicate
+            # traffic without multiplying rates back up
+            "exact_hits": s.exact_hits,
+            "near_hits": s.near_hits,
             "exact_hit_rate": s.exact_hits / n,
             "near_hit_rate": s.near_hits / n,
             "hit_rate": (s.exact_hits + s.near_hits) / n,
@@ -640,6 +715,11 @@ class StreamingServer:
             "compactions": s.compactions,
             "compaction_triggers": dict(s.compaction_triggers),
         }
+        if self._subs is not None:
+            # standing-query dispatch economics (core/continuous.py):
+            # distinct_clusters_per_dispatch is the O(·) the reversed
+            # cluster-major plan promises per insert batch
+            out["subscriptions"] = self._subs.metrics()
         snap = self.engine.snapshot
         out["n_shards"] = snap.meta.n_shards
         if snap.shards is not None:

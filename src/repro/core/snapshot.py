@@ -74,10 +74,15 @@ from repro.core import spatial as sp
 # back an unsharded snapshot and ``api.load(..., mesh=)`` /
 # ``with_mesh`` re-shard under whatever device count the loading host
 # has — the elastic 8→4→1 reload the parity tests pin.
-SCHEMA_VERSION = 4
+# v5: filtered search (DESIGN.md §13) — ``buffers["attrs"]`` (c, cap, 3)
+# int32 per-object filter attributes joins the leaf arrays, and the
+# delta segment grows a matching ``attrs`` column. A v4 artifact has no
+# attribute table, so loads across the bump fail the schema gate rather
+# than inventing all-zero tenants for rows that may have had real ones.
+SCHEMA_VERSION = 5
 
 # buffer keys that are arrays (saved as leaves) vs host-side ints (meta)
-_BUFFER_ARRAYS = ("emb", "loc", "ids", "counts", "scale")
+_BUFFER_ARRAYS = ("emb", "loc", "ids", "counts", "scale", "attrs")
 _BUFFER_SCALARS = ("capacity", "n_spilled")
 
 
@@ -355,7 +360,8 @@ class IndexSnapshot:
         if arrs["ids"].shape[0]:
             buf = index_lib.insert_objects(
                 buf, self.index_params, self.norm,
-                arrs["raw"], arrs["loc"], arrs["ids"], spill=spill)
+                arrs["raw"], arrs["loc"], arrs["ids"], spill=spill,
+                new_attrs=arrs["attrs"])
         meta = dataclasses.replace(
             self.meta, version=self.meta.version + 1, built_at=time.time(),
             n_objects=int(np.asarray(buf["counts"]).sum()),

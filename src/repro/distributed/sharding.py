@@ -212,6 +212,7 @@ CLUSTER_BUFFER_RULES = (
     (r"loc$", (CLUSTER_AXIS, None, None)),     # (c, cap, 2)
     (r"ids$", (CLUSTER_AXIS, None)),           # (c, cap)
     (r"scale$", (CLUSTER_AXIS, None)),         # (c, cap)
+    (r"attrs$", (CLUSTER_AXIS, None, None)),   # (c, cap, 3)
     (r"counts$", (CLUSTER_AXIS,)),             # (c,)
     (r".*", (None,)),                          # anything else: replicate
 )
@@ -261,7 +262,7 @@ class ClusterShards:
     shard_of   (c_global,) int32 — global cluster id → owning shard
     local_of   (c_global,) int32 — global cluster id → local buffer row
     parts      per-shard dicts of DEVICE-COMMITTED buffer arrays
-               (emb/loc/ids/scale/counts), each shaped like a local
+               (emb/loc/ids/scale/attrs/counts), each shaped like a local
                buffer set of ``c_local + 1`` clusters: row ``c_local``
                is the SENTINEL empty cluster (ids −1 throughout) that
                off-shard routes localize to (serving.localize_routes),
@@ -323,6 +324,8 @@ def shard_cluster_buffers(buffers: dict, mesh, *,
     n_shards = int(mesh.shape[CLUSTER_AXIS])
     host = {k: np.asarray(buffers[k])
             for k in ("emb", "loc", "ids", "scale", "counts")}
+    if "attrs" in buffers:                 # attribute table is optional
+        host["attrs"] = np.asarray(buffers["attrs"])
     c = host["ids"].shape[0]
     if assignment is None:
         per = -(-c // n_shards)
@@ -349,7 +352,7 @@ def shard_cluster_buffers(buffers: dict, mesh, *,
     # (index.build_cluster_buffers / delete_objects), so a sentinel or
     # remainder-padding row scores NEG_INF through the same ids<0 mask
     fills = {"emb": 0, "loc": index_lib.PAD_LOC, "ids": -1, "scale": 1,
-             "counts": 0}
+             "attrs": 0, "counts": 0}
     rows = c_local + 1                     # + the sentinel empty cluster
     stacked = {}
     for key, arr in host.items():

@@ -61,6 +61,18 @@ pad semantics are bit-identical across precision tiers. On a real TPU the
 int8 min tile is (32, 128), so pick ``block_n`` a multiple of 32 and keep
 ``d`` a multiple of 128 for compiled int8 runs (interpret mode doesn't
 care).
+
+Filtered search (DESIGN.md §13): the routed and cluster-major kernels
+grow an in-VMEM **predicate mask** variant for multi-tenant / attribute
+filtering (core/filters.py). When a ``(c, cap, 3)`` int32 attribute
+buffer and per-query compiled filter rows (``q_filt (B, 4)`` /
+roster-gathered ``(u_max, Qcap, 4)``) are passed, each tile's attribute
+strip is DMA'd beside the embeddings and the predicate is evaluated
+right where the dequant happens: rows that fail score ``NEG_INF`` and
+their ids null to ``-1`` — exactly the padding semantics — so filtered
+candidates never round-trip to host and can never surface in a top-k.
+The unfiltered call path is byte-identical to before (no attrs bytes
+stream, same kernel body).
 """
 from __future__ import annotations
 
@@ -80,6 +92,26 @@ def _largest_divisor_tile(size: int, requested: int) -> int:
     if size % tile:
         tile = next(t for t in range(tile, 0, -1) if size % t == 0)
     return tile
+
+
+def _predicate_tile(attrs, fvals):
+    """In-VMEM filter predicate (the kernel twin of
+    ``filters.predicate_mask``): ``attrs`` int32 ``(n, 3)`` candidate
+    attribute rows [tenant, category bitmask, timestamp]; ``fvals`` int32
+    ``(m, 4)`` compiled per-query filters [tenant, mask, t_min, t_max]
+    with sentinel no-ops (tenant<0, mask==0, int32 extremes). Returns
+    bool ``(m, n)`` — True = candidate passes that query's filter."""
+    tenant = attrs[None, :, 0]                       # (1, n)
+    cat = attrs[None, :, 1]
+    ts = attrs[None, :, 2]
+    f_tenant = fvals[:, 0:1]                         # (m, 1)
+    f_mask = fvals[:, 1:2]
+    t_lo = fvals[:, 2:3]
+    t_hi = fvals[:, 3:4]
+    ok_tenant = (f_tenant < 0) | (tenant == f_tenant)
+    ok_cat = (f_mask == 0) | ((cat & f_mask) != 0)
+    ok_time = (ts >= t_lo) & (ts <= t_hi)
+    return ok_tenant & ok_cat & ok_time
 
 
 def _gather_body(q_ref, loc_ref, w_ref, wh_ref, ce, cl_ref, ci_ref,
@@ -199,9 +231,12 @@ def fused_topk_score(q_emb, q_loc, w_st, cand_emb, cand_loc, cand_ids,
 
 
 def _routed_body(q_ref, loc_ref, w_ref, wh_ref, ce, bl_ref, bi_ref,
-                 os_ref, oi_ref, *, k: int, t: int, dist_max: float):
+                 os_ref, oi_ref, *, k: int, t: int, dist_max: float,
+                 pred=None):
     """Score one routed (block_n, d) resident tile (``ce`` already f32,
-    dequantized by the caller) against its query's running top-k."""
+    dequantized by the caller) against its query's running top-k.
+    ``pred`` is the optional (1, block_n) filter mask evaluated by the
+    filtered wrappers — failing rows take the padding semantics."""
     r = pl.program_id(1)
     j = pl.program_id(2)
 
@@ -224,7 +259,11 @@ def _routed_body(q_ref, loc_ref, w_ref, wh_ref, ce, bl_ref, bi_ref,
     w = w_ref[...].astype(jnp.float32)               # (1, 2)
     st = w[:, :1] * trel + w[:, 1:2] * srel
     ids = bi_ref[...]                                # (1, bn) object ids
-    st = jnp.where(ids >= 0, st, NEG_INF)            # mask buffer padding
+    valid = ids >= 0                                 # mask buffer padding
+    if pred is not None:
+        valid = valid & pred                         # ...and filtered rows
+        ids = jnp.where(valid, ids, -1)
+    st = jnp.where(valid, st, NEG_INF)
 
     # merge with the running top-k held in the revisited output block;
     # carrying OBJECT ids (not positions) makes cr-merge order-free
@@ -252,9 +291,30 @@ def _routed_kernel_dequant(tc_ref, q_ref, loc_ref, w_ref, wh_ref,
                  bl_ref, bi_ref, os_ref, oi_ref, **kw)
 
 
+def _routed_kernel_filtered(tc_ref, q_ref, loc_ref, w_ref, wh_ref,
+                            be_ref, bl_ref, bi_ref, ba_ref, qf_ref,
+                            os_ref, oi_ref, **kw):
+    # predicate evaluated in VMEM right beside the upcast: the attribute
+    # strip rode the same DMA wave as the tile it guards
+    pred = _predicate_tile(ba_ref[...][0], qf_ref[...])
+    _routed_body(q_ref, loc_ref, w_ref, wh_ref,
+                 be_ref[...][0].astype(jnp.float32),
+                 bl_ref, bi_ref, os_ref, oi_ref, pred=pred, **kw)
+
+
+def _routed_kernel_dequant_filtered(tc_ref, q_ref, loc_ref, w_ref, wh_ref,
+                                    be_ref, bs_ref, bl_ref, bi_ref, ba_ref,
+                                    qf_ref, os_ref, oi_ref, **kw):
+    pred = _predicate_tile(ba_ref[...][0], qf_ref[...])
+    ce = be_ref[...][0].astype(jnp.float32) * bs_ref[...][0][:, None]
+    _routed_body(q_ref, loc_ref, w_ref, wh_ref, ce,
+                 bl_ref, bi_ref, os_ref, oi_ref, pred=pred, **kw)
+
+
 def fused_topk_score_routed(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc,
                             buf_ids, w_hat, *, k: int, dist_max: float,
                             block_n: int = 512, buf_scale=None,
+                            buf_attrs=None, q_filt=None,
                             interpret: bool = True):
     """Gather-free fused score + top-k over routed cluster buffers.
 
@@ -264,6 +324,12 @@ def fused_topk_score_routed(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc,
     w_hat (t,) f32; buf_scale (c, cap) f32 per-row dequant scales
     (required for int8 buffers, omitted otherwise — when given, each
     resident tile is dequantized in VMEM before scoring).
+
+    Filtered search: pass BOTH ``buf_attrs (c, cap, 3)`` int32 object
+    attributes and ``q_filt (B, 4)`` int32 compiled filter rows
+    (core/filters.py) to mask failing candidates to the padding
+    semantics (NEG_INF score, id -1) in VMEM. Omitting both streams zero
+    extra bytes — the unfiltered plan is unchanged.
 
     Returns (scores (B, k) f32, ids (B, k) i32 **global object ids**,
     -1 where fewer than k valid candidates exist). The ``(B, cr·cap, d)``
@@ -290,6 +356,10 @@ def fused_topk_score_routed(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc,
     grid = (b, cr, cap // block_n)
 
     dequant = buf_scale is not None
+    filtered = buf_attrs is not None
+    if filtered != (q_filt is not None):
+        raise ValueError("fused_topk_score_routed: pass buf_attrs and "
+                         "q_filt together or not at all")
     emb_specs = [pl.BlockSpec((1, block_n, d),
                               lambda b_, r, j, tc: (tc[b_, r], j, 0))]
     emb_args = [buf_emb]
@@ -297,6 +367,14 @@ def fused_topk_score_routed(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc,
         emb_specs.append(pl.BlockSpec((1, block_n),
                                       lambda b_, r, j, tc: (tc[b_, r], j)))
         emb_args.append(buf_scale)
+    filt_specs, filt_args = [], []
+    if filtered:
+        filt_specs = [
+            pl.BlockSpec((1, block_n, 3),
+                         lambda b_, r, j, tc: (tc[b_, r], j, 0)),  # buf_attrs
+            pl.BlockSpec((1, 4), lambda b_, r, j, tc: (b_, 0)),    # q_filt
+        ]
+        filt_args = [buf_attrs.astype(jnp.int32), q_filt.astype(jnp.int32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
@@ -310,15 +388,19 @@ def fused_topk_score_routed(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc,
                          lambda b_, r, j, tc: (tc[b_, r], j, 0)),   # buf_loc
             pl.BlockSpec((1, block_n),
                          lambda b_, r, j, tc: (tc[b_, r], j)),      # buf_ids
+            *filt_specs,                            # [buf_attrs, q_filt]
         ],
         out_specs=[
             pl.BlockSpec((1, k), lambda b_, r, j, tc: (b_, 0)),     # scores
             pl.BlockSpec((1, k), lambda b_, r, j, tc: (b_, 0)),     # ids
         ],
     )
-    kern = functools.partial(
-        _routed_kernel_dequant if dequant else _routed_kernel,
-        k=k, t=t, dist_max=float(dist_max))
+    kerns = {(False, False): _routed_kernel,
+             (True, False): _routed_kernel_dequant,
+             (False, True): _routed_kernel_filtered,
+             (True, True): _routed_kernel_dequant_filtered}
+    kern = functools.partial(kerns[(dequant, filtered)],
+                             k=k, t=t, dist_max=float(dist_max))
     out_shape = [
         jax.ShapeDtypeStruct((b, k), jnp.float32),
         jax.ShapeDtypeStruct((b, k), jnp.int32),
@@ -329,7 +411,7 @@ def fused_topk_score_routed(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc,
         out_shape=out_shape,
         interpret=interpret,
     )(top_c.astype(jnp.int32), q_emb, q_loc, w_st, w_hat,
-      *emb_args, buf_loc, buf_ids)
+      *emb_args, buf_loc, buf_ids, *filt_args)
 
 
 # ---------------------------------------------------------------------------
@@ -339,7 +421,7 @@ def fused_topk_score_routed(q_emb, q_loc, w_st, top_c, buf_emb, buf_loc,
 
 def _cluster_major_body(roster_ref, qe_ref, ql_ref, qw_ref, wh_ref, ce,
                         bl_ref, bi_ref, os_ref, oi_ref, *, k: int, t: int,
-                        dist_max: float, n_total: int):
+                        dist_max: float, n_total: int, pred=None):
     """Score one (block_n, d) resident tile (``ce`` already f32,
     dequantized by the caller) against the WHOLE query roster of the
     distinct cluster owning it, and fold into each roster slot's
@@ -371,6 +453,8 @@ def _cluster_major_body(roster_ref, qe_ref, ql_ref, qw_ref, wh_ref, ce,
     # scatter them anywhere harmlessly
     live = roster_ref[i, :] < n_total                 # (Qcap,)
     valid = live[:, None] & (ids[None, :] >= 0)       # (Qcap, bn)
+    if pred is not None:
+        valid = valid & pred                          # filtered rows too
     st = jnp.where(valid, st, NEG_INF)
     ids2 = jnp.where(valid, jnp.broadcast_to(ids[None, :], st.shape), -1)
 
@@ -400,10 +484,33 @@ def _cluster_major_kernel_dequant(u_ref, roster_ref, qe_ref, ql_ref, qw_ref,
                         bl_ref, bi_ref, os_ref, oi_ref, **kw)
 
 
+def _cluster_major_kernel_filtered(u_ref, roster_ref, qe_ref, ql_ref, qw_ref,
+                                   wh_ref, be_ref, bl_ref, bi_ref, ba_ref,
+                                   qf_ref, os_ref, oi_ref, **kw):
+    # (Qcap, bn) predicate: the tile's attribute strip against the whole
+    # roster's compiled filters — evaluated once per distinct cluster
+    # per batch, right beside the (single) upcast
+    pred = _predicate_tile(ba_ref[...][0], qf_ref[...][0])
+    _cluster_major_body(roster_ref, qe_ref, ql_ref, qw_ref, wh_ref,
+                        be_ref[...][0].astype(jnp.float32),
+                        bl_ref, bi_ref, os_ref, oi_ref, pred=pred, **kw)
+
+
+def _cluster_major_kernel_dequant_filtered(u_ref, roster_ref, qe_ref, ql_ref,
+                                           qw_ref, wh_ref, be_ref, bs_ref,
+                                           bl_ref, bi_ref, ba_ref, qf_ref,
+                                           os_ref, oi_ref, **kw):
+    pred = _predicate_tile(ba_ref[...][0], qf_ref[...][0])
+    ce = be_ref[...][0].astype(jnp.float32) * bs_ref[...][0][:, None]
+    _cluster_major_body(roster_ref, qe_ref, ql_ref, qw_ref, wh_ref, ce,
+                        bl_ref, bi_ref, os_ref, oi_ref, pred=pred, **kw)
+
+
 def fused_topk_score_cluster_major(q_emb_r, q_loc_r, w_st_r, u, roster,
                                    buf_emb, buf_loc, buf_ids, w_hat, *,
                                    k: int, dist_max: float, n_total: int,
                                    block_n: int = 512, buf_scale=None,
+                                   buf_attrs=None, q_filt_r=None,
                                    interpret: bool = True):
     """Cluster-major fused score + top-k over the deduped batch plan.
 
@@ -417,6 +524,11 @@ def fused_topk_score_cluster_major(q_emb_r, q_loc_r, w_st_r, u, roster,
     or int8; buf_loc (c, cap, 2); buf_ids (c, cap) int32 (-1 pad);
     w_hat (t,) f32; buf_scale (c, cap) f32 per-row dequant scales
     (required for int8 buffers, omitted otherwise).
+
+    Filtered search: pass BOTH ``buf_attrs (c, cap, 3)`` int32 object
+    attributes and ``q_filt_r (u_max, Qcap, 4)`` int32 roster-gathered
+    compiled filter rows (blocked like the query payloads) to mask
+    failing candidates to the padding semantics in VMEM.
 
     Returns partial per-roster-slot top-k lists
     (scores (u_max, Qcap, k) f32, ids (u_max, Qcap, k) i32 global object
@@ -451,6 +563,10 @@ def fused_topk_score_cluster_major(q_emb_r, q_loc_r, w_st_r, u, roster,
     grid = (u_max, cap // block_n)
 
     dequant = buf_scale is not None
+    filtered = buf_attrs is not None
+    if filtered != (q_filt_r is not None):
+        raise ValueError("fused_topk_score_cluster_major: pass buf_attrs "
+                         "and q_filt_r together or not at all")
     emb_specs = [pl.BlockSpec((1, block_n, d),
                               lambda i, j, u_, ro: (u_[i], j, 0))]
     emb_args = [buf_emb]
@@ -458,6 +574,16 @@ def fused_topk_score_cluster_major(q_emb_r, q_loc_r, w_st_r, u, roster,
         emb_specs.append(pl.BlockSpec((1, block_n),
                                       lambda i, j, u_, ro: (u_[i], j)))
         emb_args.append(buf_scale)
+    filt_specs, filt_args = [], []
+    if filtered:
+        filt_specs = [
+            pl.BlockSpec((1, block_n, 3),
+                         lambda i, j, u_, ro: (u_[i], j, 0)),      # buf_attrs
+            pl.BlockSpec((1, qcap, 4),
+                         lambda i, j, u_, ro: (i, 0, 0)),          # q_filt_r
+        ]
+        filt_args = [buf_attrs.astype(jnp.int32),
+                     q_filt_r.astype(jnp.int32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
@@ -471,15 +597,20 @@ def fused_topk_score_cluster_major(q_emb_r, q_loc_r, w_st_r, u, roster,
                          lambda i, j, u_, ro: (u_[i], j, 0)),       # buf_loc
             pl.BlockSpec((1, block_n),
                          lambda i, j, u_, ro: (u_[i], j)),          # buf_ids
+            *filt_specs,                          # [buf_attrs, q_filt_r]
         ],
         out_specs=[
             pl.BlockSpec((1, qcap, k), lambda i, j, u_, ro: (i, 0, 0)),
             pl.BlockSpec((1, qcap, k), lambda i, j, u_, ro: (i, 0, 0)),
         ],
     )
-    kern = functools.partial(
-        _cluster_major_kernel_dequant if dequant else _cluster_major_kernel,
-        k=k, t=t, dist_max=float(dist_max), n_total=int(n_total))
+    kerns = {(False, False): _cluster_major_kernel,
+             (True, False): _cluster_major_kernel_dequant,
+             (False, True): _cluster_major_kernel_filtered,
+             (True, True): _cluster_major_kernel_dequant_filtered}
+    kern = functools.partial(kerns[(dequant, filtered)],
+                             k=k, t=t, dist_max=float(dist_max),
+                             n_total=int(n_total))
     out_shape = [
         jax.ShapeDtypeStruct((u_max, qcap, k), jnp.float32),
         jax.ShapeDtypeStruct((u_max, qcap, k), jnp.int32),
@@ -490,4 +621,5 @@ def fused_topk_score_cluster_major(q_emb_r, q_loc_r, w_st_r, u, roster,
         out_shape=out_shape,
         interpret=interpret,
     )(u.astype(jnp.int32), roster.astype(jnp.int32),
-      q_emb_r, q_loc_r, w_st_r, w_hat, *emb_args, buf_loc, buf_ids)
+      q_emb_r, q_loc_r, w_st_r, w_hat, *emb_args, buf_loc, buf_ids,
+      *filt_args)

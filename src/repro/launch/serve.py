@@ -311,6 +311,8 @@ def main(argv=None):
     print(f"cache       : hit_rate={m['hit_rate']:.1%} "
           f"(exact={m['exact_hit_rate']:.1%} near={m['near_hit_rate']:.1%} "
           f"coalesced={m['coalesced']})")
+    print(f"cache hits  : exact={m['exact_hits']} near={m['near_hits']} "
+          f"of {m['requests']} requests")
     print(f"micro-batch : {m['engine_batches']} engine batches, "
           f"fill={m['batch_fill']:.1%}, flushes={m['flushes']}")
     if m["writes"]:

@@ -271,16 +271,16 @@ def _queries(rng, b, L=8, vocab=512):
 
 def test_plan_cache_lru_bound(tiny_snapshot):
     """The compiled-plan cache is LRU-bounded: distinct (batch, k, cr,
-    backend, precision) keys beyond ``max_plans`` evict the least
-    recently used plan, and a re-request retraces it."""
+    backend, precision, filtered) keys beyond ``max_plans`` evict the
+    least recently used plan, and a re-request retraces it."""
     e = engine.QueryEngine(tiny_snapshot, backend="dense", max_plans=2)
     f1 = e.query_fn(k=3, cr=1, batch=4)
     f2 = e.query_fn(k=4, cr=1, batch=4)
     assert e.query_fn(k=3, cr=1, batch=4) is f1      # hit refreshes
     e.query_fn(k=5, cr=1, batch=4)                   # evicts k=4 (LRU)
     assert len(e._plans) == 2
-    assert (4, 4, 1, "dense", "f32") not in e._plans
-    assert (4, 3, 1, "dense", "f32") in e._plans
+    assert (4, 4, 1, "dense", "f32", False) not in e._plans
+    assert (4, 3, 1, "dense", "f32", False) in e._plans
     assert e.query_fn(k=4, cr=1, batch=4) is not f2  # retraced, not stale
     assert len(e._plans) == 2
 

@@ -1,0 +1,352 @@
+"""Continuous-query tier (core/continuous.py, DESIGN.md §13).
+
+Covers the acceptance criteria of the standing-query subscription
+engine:
+
+* every insert-batch dispatch notifies EXACTLY the pairs the match
+  semantics admit — assign(o) ∈ route(q, cr) ∧ predicate ∧
+  ST(q, o) ≥ threshold — checked against an independent numpy oracle;
+* replaying a stream of insert batches with a snapshot hot-swap
+  (compaction) in the middle drops NOTHING and duplicates NOTHING, and
+  matches the per-insert one-shot re-query oracle: with cr spanning all
+  clusters, the notified set per batch equals the new rows a fresh
+  filtered engine.query of the standing query returns above threshold,
+  scores bit-matching the delta scan;
+* registry membership survives hot-swaps; routes/encodings re-derive
+  only when a publish actually changes routing params (n_reroutes
+  stays 0 across compactions, increments on a param swap);
+* subscriptions are async iterators; close/unsubscribe ends iteration;
+* dispatch work scales with DISTINCT routed clusters per batch, not
+  with the roster size (the reversed cluster-major economics).
+"""
+import asyncio
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import continuous as cont_lib
+from repro.core import engine as engine_lib
+from repro.core import filters as filters_lib
+from repro.core import index as il
+from repro.core import relevance
+from repro.core import server as server_lib
+from repro.core.filters import FilterSpec
+
+DIST_MAX = 1.414
+D = 32
+
+
+@pytest.fixture(scope="module")
+def parts():
+    cfg = dataclasses.replace(
+        get_config("list-dual-encoder"),
+        n_layers=2, d_model=D, n_heads=2, d_ff=64, vocab_size=512,
+        max_len=8, spatial_t=50, n_clusters=4, index_mlp_hidden=(16,))
+    rng = np.random.default_rng(19)
+    params = relevance.relevance_init(jax.random.PRNGKey(0), cfg)
+    n, c, cap = 96, cfg.n_clusters, 96           # headroom for inserts
+    obj_emb = rng.normal(size=(n, cfg.d_model)).astype(np.float32)
+    obj_loc = rng.uniform(size=(n, 2)).astype(np.float32)
+    norm = il.loc_normalizer(jnp.asarray(obj_loc))
+    iparams = il.index_init(jax.random.PRNGKey(5), cfg.d_model, c,
+                            hidden=(16,))
+    feats = il.build_features(jnp.asarray(obj_emb), jnp.asarray(obj_loc),
+                              norm)
+    top = np.asarray(il.assign_clusters(iparams, feats, top=2))
+    attrs = filters_lib.make_attrs(np.arange(n) % 3, 1 << (np.arange(n) % 4),
+                                   np.arange(n))
+    buf = il.build_cluster_buffers(top, obj_emb, obj_loc, n_clusters=c,
+                                   capacity=cap, attrs=attrs)
+    return cfg, params, iparams, norm, buf
+
+
+def mk_server(parts, **over):
+    cfg, params, iparams, norm, buf = parts
+    eng = engine_lib.QueryEngine.from_parts(
+        cfg, params, iparams, norm, buf, dist_max=DIST_MAX, backend="dense")
+    kw = dict(batch_size=4, max_delay_ms=30.0, k=8, cr=2, backend="dense")
+    kw.update(over)
+    return server_lib.StreamingServer(eng, server_lib.ServerConfig(**kw))
+
+
+def mk_queries(rng, n, cfg):
+    tok = rng.integers(2, cfg.vocab_size, (n, cfg.max_len)).astype(np.int32)
+    tok[:, 0] = 1
+    msk = np.ones((n, cfg.max_len), bool)
+    loc = rng.uniform(size=(n, 2)).astype(np.float32)
+    return tok, msk, loc
+
+
+def mk_batch(rng, cfg, m, first_id, *, tenant=None, ts=None):
+    emb = rng.normal(size=(m, cfg.d_model)).astype(np.float32)
+    loc = rng.uniform(size=(m, 2)).astype(np.float32)
+    ids = np.arange(first_id, first_id + m, dtype=np.int32)
+    attrs = filters_lib.make_attrs(
+        np.arange(m) % 3 if tenant is None else np.full(m, tenant),
+        np.full(m, 0b1),
+        np.arange(m) if ts is None else np.full(m, ts))
+    return emb, loc, ids, attrs
+
+
+def oracle_matches(server, sub, emb, loc, ids, attrs):
+    """The match semantics computed independently: argmax assignment,
+    numpy predicate, serve-form score of the QUANTIZED rows."""
+    snap = server.engine.snapshot
+    m = len(ids)
+    feats = il.build_features(np.asarray(emb, np.float32),
+                              np.asarray(loc, np.float32), snap.norm)
+    assign = np.asarray(il.assign_clusters(snap.index_params, feats,
+                                           top=1)).reshape(m)
+    stored, scale = il.quantize_rows(np.asarray(emb, np.float32),
+                                     snap.meta.precision)
+    fv = (sub.filters or filters_lib.NOOP_FILTER).to_fvals()
+    pred = filters_lib.predicate_mask_np(attrs, fv[None])
+    sc = np.asarray(engine_lib.score_candidates(
+        sub.q_emb[None], sub.loc[None], sub.w_st[None],
+        stored[None], np.asarray(loc, np.float32)[None],
+        np.asarray(ids, np.int32)[None], np.asarray(snap.w_hat),
+        dist_max=snap.meta.dist_max,
+        cand_scale=None if snap.meta.precision != "int8"
+        else scale[None]))[0]
+    routed = set(int(c) for c in sub.routes)
+    return {int(ids[j]): float(sc[j]) for j in range(m)
+            if int(assign[j]) in routed and pred[j]
+            and sc[j] >= sub.threshold}
+
+
+# ---------------------------------------------------------------------------
+# One dispatch vs the match-semantics oracle
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_matches_semantics_oracle(parts, rng):
+    server = mk_server(parts)
+    cfg = server.engine.cfg
+    tok, msk, qloc = mk_queries(rng, 3, cfg)
+    subs = [
+        server.subscribe(tok[0], msk[0], qloc[0], threshold=-1e9),
+        server.subscribe(tok[1], msk[1], qloc[1],
+                         filters=FilterSpec(tenant=1), threshold=-1e9),
+        server.subscribe(tok[2], msk[2], qloc[2], threshold=0.5),
+    ]
+    emb, loc, ids, attrs = mk_batch(rng, cfg, 12, 1000)
+    server.insert_objects(emb, loc, ids, attrs)
+    version = int(server.engine.snapshot.meta.version)
+    for sub in subs:
+        want = oracle_matches(server, sub, emb, loc, ids, attrs)
+        got = sub.drain()
+        assert {n.object_id for n in got} == set(want)
+        for n in got:
+            assert n.sub_id == sub.sub_id
+            assert n.version == version
+            assert np.isclose(n.score, want[n.object_id],
+                              rtol=1e-6, atol=1e-6)
+    # the unfiltered bottom-threshold sub saw every routed-cluster row
+    assert subs[0].n_notified > 0
+
+
+def test_attrs_default_to_zero(parts, rng):
+    """insert_objects without attrs: rows carry all-zero attributes, so
+    a tenant-0 subscription sees them and a tenant-1 one never does."""
+    server = mk_server(parts)
+    cfg = server.engine.cfg
+    tok, msk, qloc = mk_queries(rng, 2, cfg)
+    s0 = server.subscribe(tok[0], msk[0], qloc[0],
+                          filters=FilterSpec(tenant=0), threshold=-1e9)
+    s1 = server.subscribe(tok[1], msk[1], qloc[1],
+                          filters=FilterSpec(tenant=1), threshold=-1e9)
+    emb, loc, ids, _ = mk_batch(rng, cfg, 8, 2000)
+    server.insert_objects(emb, loc, ids)          # no attrs
+    assert {n.object_id for n in s0.drain()} == set(
+        oracle_matches(server, s0, emb, loc, ids,
+                       np.zeros((8, 3), np.int32)))
+    assert s1.drain() == []
+
+
+# ---------------------------------------------------------------------------
+# Replay parity vs the one-shot re-query oracle, across a hot-swap
+# ---------------------------------------------------------------------------
+
+
+def test_replay_parity_one_shot_oracle_across_hot_swap(parts, rng):
+    """The acceptance replay: stream insert batches; after each, the
+    notified set for every subscription equals what a one-shot filtered
+    re-query of the standing query (cr spanning ALL clusters, so routing
+    admits every row) returns among the new ids above threshold — scores
+    bit-matching the delta scan. A compaction hot-swap mid-replay drops
+    and duplicates nothing."""
+    cfg0 = parts[0]
+    server = mk_server(parts, cr=cfg0.n_clusters, k=256,
+                       delta_threshold=1024)      # compaction manual only
+    cfg = server.engine.cfg
+    tok, msk, qloc = mk_queries(rng, 2, cfg)
+    thr = 0.4
+    subs = [
+        server.subscribe(tok[0], msk[0], qloc[0], threshold=thr),
+        server.subscribe(tok[1], msk[1], qloc[1],
+                         filters=FilterSpec(tenant=2), threshold=thr),
+    ]
+    seen = {s.sub_id: [] for s in subs}           # full replay transcript
+    next_id = 5000
+    for step in range(6):
+        m = 6 + step
+        emb, loc, ids, attrs = mk_batch(rng, cfg, m, next_id)
+        next_id += m
+        server.insert_objects(emb, loc, ids, attrs)
+        # one-shot oracle: re-query each standing query over the post-
+        # insert snapshot, keep the NEW ids above threshold
+        for sub in subs:
+            got = sub.drain()
+            ids_q, sc_q = server.engine.query(
+                sub.tokens[None], sub.mask[None], sub.loc[None],
+                k=256, cr=cfg.n_clusters, batch=1, filters=sub.filters)
+            new_scores = {int(i): float(s)
+                          for i, s in zip(ids_q[0], sc_q[0])
+                          if int(i) in set(ids.tolist())}
+            want = {i: s for i, s in new_scores.items() if s >= thr}
+            assert {n.object_id for n in got} == set(want), (
+                f"step {step} sub {sub.sub_id}")
+            for n in got:
+                assert np.isclose(n.score, want[n.object_id],
+                                  rtol=1e-6, atol=1e-6)
+            seen[sub.sub_id].extend(got)
+        if step == 2:                             # the mid-replay hot-swap
+            v_before = int(server.engine.snapshot.meta.version)
+            server.compact_now()
+            assert int(server.engine.snapshot.meta.version) > v_before
+            assert len(server.subscriptions) == 2  # membership survives
+            # a swap with unchanged routing params re-encodes nothing
+            assert server.subscriptions.n_reroutes == 0
+    # zero duplicates across the whole replay (exactly-once)
+    for s in subs:
+        pairs = [(n.sub_id, n.object_id) for n in seen[s.sub_id]]
+        assert len(pairs) == len(set(pairs))
+        # versions strictly follow the publish order
+        versions = [n.version for n in seen[s.sub_id]]
+        assert versions == sorted(versions)
+
+
+# ---------------------------------------------------------------------------
+# Routing residency: reroutes happen exactly when params change
+# ---------------------------------------------------------------------------
+
+
+def test_reroute_only_on_param_change(parts, rng):
+    cfg, params, iparams, norm, buf = parts
+    server = mk_server(parts)
+    tok, msk, qloc = mk_queries(rng, 1, cfg)
+    sub = server.subscribe(tok[0], msk[0], qloc[0], threshold=-1e9)
+    routes0 = sub.routes.copy()
+    # delta publish + compaction: same param objects, no re-encode
+    emb, loc, ids, attrs = mk_batch(rng, cfg, 4, 3000)
+    server.insert_objects(emb, loc, ids, attrs)
+    server.compact_now()
+    assert server.subscriptions.n_reroutes == 0
+    assert np.array_equal(sub.routes, routes0)
+    # a publish with NEW routing params re-encodes and re-routes
+    iparams2 = il.index_init(jax.random.PRNGKey(99), cfg.d_model,
+                             cfg.n_clusters, hidden=(16,))
+    snap = server.engine.snapshot
+    snap2 = dataclasses.replace(snap, index_params=iparams2)
+    server.publish(snap2)
+    assert server.subscriptions.n_reroutes == 1
+    # the fresh routes equal an independent encoding on the new params
+    reg2 = cont_lib.SubscriptionRegistry(server.engine, cr=server.cfg.cr)
+    fresh = reg2.register(tok[0], msk[0], qloc[0], threshold=-1e9)
+    assert np.array_equal(sub.routes, fresh.routes)
+    np.testing.assert_allclose(sub.q_emb, fresh.q_emb)
+
+
+# ---------------------------------------------------------------------------
+# Async iteration, close, unregister
+# ---------------------------------------------------------------------------
+
+
+def test_async_iteration_and_close(parts, rng):
+    server = mk_server(parts)
+    cfg = server.engine.cfg
+    tok, msk, qloc = mk_queries(rng, 1, cfg)
+
+    async def go():
+        sub = server.subscribe(tok[0], msk[0], qloc[0], threshold=-1e9)
+        emb, loc, ids, attrs = mk_batch(rng, cfg, 6, 4000)
+        server.insert_objects(emb, loc, ids, attrs)
+        server.unsubscribe(sub.sub_id)            # closes the stream
+        return sub, [n async for n in sub]
+
+    sub, notes = asyncio.run(go())
+    assert len(notes) == sub.n_notified > 0
+    assert all(isinstance(n, cont_lib.Notification) for n in notes)
+    # closed stream stays ended (the sentinel re-posts)
+    assert sub.drain() == []
+
+
+def test_unregister_stops_delivery(parts, rng):
+    server = mk_server(parts)
+    cfg = server.engine.cfg
+    tok, msk, qloc = mk_queries(rng, 2, cfg)
+    keep = server.subscribe(tok[0], msk[0], qloc[0], threshold=-1e9)
+    gone = server.subscribe(tok[1], msk[1], qloc[1], threshold=-1e9)
+    server.unsubscribe(gone.sub_id)
+    assert len(server.subscriptions) == 1
+    emb, loc, ids, attrs = mk_batch(rng, cfg, 8, 4500)
+    server.insert_objects(emb, loc, ids, attrs)
+    assert gone.n_notified == 0
+    assert keep.n_notified > 0
+
+
+def test_register_validates_filters(parts, rng):
+    server = mk_server(parts)
+    tok, msk, qloc = mk_queries(rng, 1, server.engine.cfg)
+    with pytest.raises(TypeError):
+        server.subscribe(tok[0], msk[0], qloc[0], filters={"tenant": 1})
+
+
+# ---------------------------------------------------------------------------
+# Dispatch economics and metrics
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_cost_scales_with_distinct_clusters(parts, rng):
+    """Roster size does not multiply dispatch work: a batch landing in
+    d distinct clusters costs d scoring calls no matter how many
+    subscriptions are registered (the metric the bench gates on)."""
+    server = mk_server(parts)
+    cfg = server.engine.cfg
+    tok, msk, qloc = mk_queries(rng, 12, cfg)
+    for i in range(12):                           # a 12-strong roster
+        server.subscribe(tok[i], msk[i], qloc[i], threshold=-1e9)
+    calls = []
+    orig = engine_lib.score_candidates
+
+    def counted(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    cont_lib.engine_lib.score_candidates = counted
+    try:
+        emb, loc, ids, attrs = mk_batch(rng, cfg, 16, 6000)
+        server.insert_objects(emb, loc, ids, attrs)
+    finally:
+        cont_lib.engine_lib.score_candidates = orig
+    reg = server.subscriptions
+    assert reg.n_dispatches == 1
+    assert len(calls) == reg.n_distinct_clusters <= cfg.n_clusters
+    m = server.metrics()["subscriptions"]
+    assert m["subscriptions"] == 12
+    assert m["objects_seen"] == 16
+    assert m["distinct_clusters_per_dispatch"] == reg.n_distinct_clusters
+    assert m["notifications"] == reg.n_notifications > 0
+
+
+def test_metrics_without_registry(parts):
+    """A server that never subscribed reports no subscription block and
+    exposes the satellite raw cache counters."""
+    server = mk_server(parts)
+    m = server.metrics()
+    assert "subscriptions" not in m
+    assert m["exact_hits"] == 0 and m["near_hits"] == 0

@@ -403,3 +403,83 @@ def test_open_loop_swap_resharded_zero_failed_or_torn(snap8, rng):
     m = server.metrics()
     assert m["n_shards"] == s2.meta.n_shards
     assert len(m["shard_bytes_per_device"]) == s2.meta.n_shards
+
+
+# ---------------------------------------------------------------------------
+# Route localization: shards that hold ONLY padding clusters
+# ---------------------------------------------------------------------------
+
+
+def test_localize_routes_all_off_shard():
+    """A shard owning none of the routed clusters localizes EVERY route
+    to its sentinel row — never clamps into a real local cluster."""
+    from repro.core import serving
+    # 6 global clusters on 3 shards: shard_of [0,0,1,1,2,2]
+    shard_of = np.array([0, 0, 1, 1, 2, 2], np.int32)
+    local_of = np.array([0, 1, 0, 1, 0, 1], np.int32)
+    top_c = np.array([[0, 1], [0, 5], [4, 5]], np.int32)
+    sentinel = 2
+    # shard 1 owns clusters {2, 3}; no query routes there
+    out = serving.localize_routes(top_c, shard_of, local_of, 1,
+                                  sentinel=sentinel)
+    assert out.shape == top_c.shape and out.dtype == np.int32
+    assert (out == sentinel).all()
+    # shards 0 and 2 see their own rows, sentinel elsewhere
+    out0 = serving.localize_routes(top_c, shard_of, local_of, 0,
+                                   sentinel=sentinel)
+    assert out0.tolist() == [[0, 1], [0, sentinel],
+                             [sentinel, sentinel]]
+    out2 = serving.localize_routes(top_c, shard_of, local_of, 2,
+                                   sentinel=sentinel)
+    assert out2.tolist() == [[sentinel, sentinel], [sentinel, 1], [0, 1]]
+
+
+def test_shard_holding_only_padding_clusters(rng):
+    """A shard whose assigned clusters are ALL empty (every id -1)
+    contributes only sentinel rows: the sharded answer still equals the
+    unsharded oracle, and localization on that shard is all-sentinel."""
+    _need(2)
+    cfg = dataclasses.replace(
+        get_config("list-dual-encoder"),
+        n_layers=2, d_model=32, n_heads=2, d_ff=64, vocab_size=512,
+        max_len=8, spatial_t=50, n_clusters=4, index_mlp_hidden=(16,))
+    rng_o = np.random.default_rng(41)
+    rel = relevance.relevance_init(jax.random.PRNGKey(0), cfg)
+    n = 64
+    obj_emb = rng_o.normal(size=(n, cfg.d_model)).astype(np.float32)
+    obj_loc = rng_o.uniform(size=(n, 2)).astype(np.float32)
+    norm = il.loc_normalizer(jnp.asarray(obj_loc))
+    iparams = il.index_init(jax.random.PRNGKey(1), cfg.d_model, 4,
+                            hidden=(16,))
+    feats = il.build_features(jnp.asarray(obj_emb), jnp.asarray(obj_loc),
+                              norm)
+    top = np.asarray(il.assign_clusters(iparams, feats, top=2))
+    top = np.clip(top, 0, 1)           # clusters 2 and 3 stay EMPTY
+    buf = il.build_cluster_buffers(top, obj_emb, obj_loc, n_clusters=4,
+                                   capacity=48)
+    snap = IndexSnapshot.from_parts(cfg, rel, iparams, norm, buf,
+                                    dist_max=DIST_MAX)
+    bi = np.asarray(snap.buffers["ids"])
+    assert (bi[2:] == -1).all()        # the premise: all-padding clusters
+    # assignment pins the two empty clusters alone on shard 1
+    s = snap.with_mesh(2, assignment=np.array([0, 0, 1, 1], np.int32))
+    from repro.core import serving
+    sh = s.shards
+    tok, msk, loc = _make_queries(cfg, n=8, seed=3)
+    eng = engine_lib.QueryEngine.from_snapshot(snap, backend="dense")
+    want = eng.query(tok, msk, loc, k=5, cr=2, batch=4, snapshot=snap)
+    got = eng.query(tok, msk, loc, k=5, cr=2, batch=4, snapshot=s)
+    assert np.array_equal(got[0], want[0])
+    np.testing.assert_allclose(got[1], want[1], rtol=2e-5, atol=1e-6)
+    # any routing (even straight into the empty clusters) localizes on
+    # shard 1 to the sentinel, and its answers are pure padding
+    top_c = np.array([[2, 3], [0, 1]], np.int32)
+    local = serving.localize_routes(top_c, sh.shard_of, sh.local_of, 1,
+                                    sentinel=sh.sentinel)
+    # shard 1's REAL rows are its two empty clusters; routing into them
+    # is indistinguishable from the sentinel: ids are -1 either way
+    part_ids = np.asarray(sh.parts[1]["ids"])
+    assert (part_ids[local] == -1).all()
+    local0 = serving.localize_routes(top_c, sh.shard_of, sh.local_of, 0,
+                                     sentinel=sh.sentinel)
+    assert local0.tolist() == [[sh.sentinel, sh.sentinel], [0, 1]]

@@ -174,6 +174,27 @@ def test_cached_repeat_skips_engine(engine_parts, rng):
     assert np.array_equal(ids1, ids2) and np.array_equal(sc1, sc2)
 
 
+def test_metrics_expose_raw_hit_counts(engine_parts, rng):
+    """metrics() reports the RAW exact-LRU and near-duplicate hit
+    counters beside the rates, consistent with each other — the numbers
+    drivers print without multiplying rates back up."""
+    server = make_server(engine_parts, batch_size=1, near_cells=16)
+    tok, msk, loc = make_requests(rng, 1, server.engine.cfg)
+    loc[0] = [0.403, 0.519]
+    server.serve_all(tok, msk, loc)                   # miss
+    server.serve_all(tok, msk, loc)                   # exact hit
+    near = loc.copy()
+    near[0] += 0.002                                  # same 1/16 cell
+    server.serve_all(tok, msk, near)                  # near hit
+    m = server.metrics()
+    assert m["exact_hits"] == 1 and m["near_hits"] == 1
+    assert m["requests"] == 3
+    assert m["exact_hit_rate"] == pytest.approx(m["exact_hits"] / 3)
+    assert m["near_hit_rate"] == pytest.approx(m["near_hits"] / 3)
+    assert m["hit_rate"] == pytest.approx(
+        (m["exact_hits"] + m["near_hits"]) / 3)
+
+
 def test_inflight_duplicates_coalesce(engine_parts, rng):
     """An identical request submitted before the first copy flushed shares
     its future instead of occupying a second batch slot."""
@@ -472,8 +493,8 @@ def test_warmup_pretraces_the_flush_plan(engine_parts, rng):
     assert compiles == {"dense@4": pytest.approx(compiles["dense@4"])}
     assert compiles["dense@4"] > 0
     plans_after_warmup = set(server.engine._plans)
-    # key = (batch, k, cr, backend, precision)
-    assert (4, 5, 2, "dense", "f32") in plans_after_warmup
+    # key = (batch, k, cr, backend, precision, filtered)
+    assert (4, 5, 2, "dense", "f32", False) in plans_after_warmup
     tok, msk, loc = make_requests(rng, 4, server.engine.cfg)
     server.serve_all(tok, msk, loc)
     # serving created no new plan: the warm-up traced the real flush path

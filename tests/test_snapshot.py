@@ -163,13 +163,13 @@ def test_publish_refuses_cfg_digest_mismatch(snap, rng):
 
 
 def test_plans_survive_publish(snap, rng):
-    """Same buffer shapes ⇒ the traced (batch, k, cr, backend, precision)
-    plans are reused across a publish — no rebind, no plan-cache reset."""
+    """Same buffer shapes ⇒ the traced (batch, k, cr, backend, precision,
+    filtered) plans are reused across a publish — no rebind, no plan-cache reset."""
     eng = engine_lib.QueryEngine.from_snapshot(snap, backend="dense")
     tok, msk, loc = make_requests(rng, 4, snap.cfg)
     eng.query(tok, msk, loc, k=5, cr=2, batch=4)
     plans = dict(eng._plans)
-    assert set(plans) == {(4, 5, 2, "dense", "f32")}
+    assert set(plans) == {(4, 5, 2, "dense", "f32", False)}
     eng.publish(grown(snap, rng))
     ids, _ = eng.query(tok, msk, loc, k=5, cr=2, batch=4)
     assert eng._plans == plans                      # same plan objects
