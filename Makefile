@@ -18,6 +18,12 @@
 #   make test-filters       - the filtered/continuous parity tier
 #                             (4 backends x 3 precision tiers + the
 #                             standing-query replay oracle)
+#   make test-resilience    - the chaos tier (DESIGN.md §14): fault
+#                             injection across WAL/checkpoint/flush,
+#                             crash-recovery parity, shedding + breaker
+#   make bench-resilience   - overload-shedding + crash-recovery
+#                             acceptance -> `resilience` section of
+#                             BENCH_serving.json
 #   make bench-kernels      - kernel roofline (backend x precision)
 #                             -> BENCH_kernels.json
 #   make bench-scalability  - Fig7 corpus scaling + mesh-sharded scale-out
@@ -29,9 +35,9 @@ PYPATH  := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}
 # first initialises its backends (conftest also force-sets it for pytest)
 MESHENV := XLA_FLAGS="--xla_force_host_platform_device_count=8"
 
-.PHONY: test test-slow test-mesh test-filters snapshot-roundtrip \
-        bench-smoke bench-serving bench-filters bench-kernels \
-        bench-scalability
+.PHONY: test test-slow test-mesh test-filters test-resilience \
+        snapshot-roundtrip bench-smoke bench-serving bench-filters \
+        bench-kernels bench-resilience bench-scalability
 
 test:
 	$(PYPATH) $(PY) -m pytest -x -q -m "not slow"
@@ -50,6 +56,10 @@ test-filters:
 	$(MESHENV) $(PYPATH) $(PY) -m pytest -x -q \
 		tests/test_filters.py tests/test_continuous.py
 
+test-resilience:
+	$(PYPATH) $(PY) -m pytest -x -q \
+		tests/test_resilience_serving.py tests/test_server.py
+
 # no --only: the smoke covers EVERY registered benchmark suite
 bench-smoke:
 	$(MESHENV) $(PYPATH) $(PY) -m benchmarks.run --fast
@@ -62,6 +72,9 @@ bench-filters:
 
 bench-kernels:
 	$(PYPATH) $(PY) -m benchmarks.bench_kernels
+
+bench-resilience:
+	$(PYPATH) $(PY) -m benchmarks.bench_resilience
 
 bench-scalability:
 	$(MESHENV) $(PYPATH) $(PY) -m benchmarks.bench_scalability

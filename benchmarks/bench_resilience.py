@@ -1,0 +1,275 @@
+"""Serving-resilience benchmark (DESIGN.md §14): overload shedding and
+crash recovery, merged as the ``resilience`` section of
+``BENCH_serving.json`` (same merge pattern as bench_filters.py).
+
+Two legs:
+
+* **Overload** — with result caches OFF (every request is real engine
+  work), take the unloaded baseline from a fixed-concurrency closed
+  loop (full batches, at most one batch queued — the server's best
+  sustainable shape), bound capacity by the engine's own blocking
+  service time (the event loop stalls for the whole batch, so the
+  server can never exceed ``BATCH / service_time``), then drive an
+  open-loop workload at **2× that bound** with a per-request deadline
+  and a bounded admission queue. The designed behavior under overload
+  is to shed the excess and keep the admitted requests fast; the
+  acceptance block gates ``p99(admitted) <= 2 × p99(unloaded)``, a
+  non-trivial shed fraction (counted in server metrics), and request
+  conservation (served + shed == offered — nothing hangs, every
+  arrival is accounted for).
+
+* **Recovery** — run acknowledged write batches through a WAL-enabled
+  server, "crash" it (drop it without checkpointing, exactly what a
+  process death leaves on disk), then ``api.recover`` from the saved
+  snapshot + WAL and gate ``recovered_writes == acked_writes`` plus
+  bit-identical full-fanout query results vs the never-crashed server.
+
+    PYTHONPATH=src python -m benchmarks.bench_resilience [--fast]
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro import api
+from repro.core import server as server_lib
+
+OUT_PATH = "BENCH_serving.json"
+
+BATCH = 32
+MAX_DELAY_MS = 2.0
+K = 10
+CR = 1
+CAPACITY_REQUESTS = 384     # closed-loop probe sizing the engine's rate
+LOAD_REQUESTS = 512         # per open-loop leg
+OVERLOAD_FACTOR = 2.0
+WRITE_BATCHES = 6           # acked write batches the recovery leg replays
+WRITE_ROWS = 8
+
+
+def _requests(corpus, te, n, *, seed):
+    """n all-distinct requests (cache/coalesce can never collapse two):
+    test-split queries with a per-request location nudge."""
+    rng = np.random.default_rng(seed)
+    picks = te[rng.integers(0, len(te), size=n)]
+    tok, msk = corpus.query_tokens(picks)
+    loc = corpus.q_loc[picks].astype(np.float32)
+    loc = np.clip(loc + rng.uniform(1e-6, 1e-4, size=loc.shape)
+                  * np.arange(1, n + 1, dtype=np.float32)[:, None], 0, 1)
+    return [(tok[i], msk[i], loc[i]) for i in range(n)]
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _mk_server(engine, **over):
+    cfg = server_lib.ServerConfig(
+        batch_size=BATCH, max_delay_ms=MAX_DELAY_MS, k=K, cr=CR,
+        cache_size=0, near_cells=0, **over)
+    return server_lib.StreamingServer(engine, cfg)
+
+
+def _overload(engine, corpus, te):
+    server = _mk_server(engine)
+    server.warmup()
+
+    # unloaded baseline: fixed-concurrency closed loop = full batches
+    # with at most one batch queued — the best shape the micro-batcher
+    # can sustain (an open loop BELOW capacity would flush ragged
+    # deadline batches and pay the static-shape padding for a handful
+    # of rows, which is slower than the loaded server — not a baseline)
+    reqs = _requests(corpus, te, CAPACITY_REQUESTS, seed=common.SEED + 3)
+    asyncio.run(server_lib.closed_loop(server, reqs, concurrency=BATCH))
+    p99_unloaded = server.metrics()["latency_ms"]["p99"]
+
+    # capacity bound: the engine call blocks the event loop for a whole
+    # batch, so the server can never exceed BATCH / service_time; the
+    # best-of-N direct timing is the TIGHTEST such bound, making the 2×
+    # leg overload by construction
+    probe = _requests(corpus, te, BATCH, seed=common.SEED + 5)
+    tok = np.stack([p[0] for p in probe])
+    msk = np.stack([p[1] for p in probe])
+    loc = np.stack([p[2] for p in probe])
+    service_s = min(
+        _timed(lambda: engine.query(tok, msk, loc, k=K, cr=CR,
+                                    batch=BATCH))
+        for _ in range(3))
+    capacity_qps = BATCH / service_s
+
+    # overload: 2× capacity against a deadline + bounded queue. An
+    # admitted request pays at most its queue wait (<= deadline at the
+    # flush-time check), the in-flight flush blocking the event loop,
+    # and its own batch service — so budgeting
+    # ``deadline = 2*p99_unloaded - 2*service`` (with slack for timer
+    # jitter) keeps admitted p99 inside the 2× gate by construction,
+    # PROVIDED shedding actually enforces the deadline.
+    service_ms = service_s * 1e3
+    timeout_ms = max(2.0 * p99_unloaded - 2.2 * service_ms, 1.0)
+    over = _mk_server(engine, request_timeout_ms=timeout_ms,
+                      max_queue=4 * BATCH)
+    reqs = _requests(corpus, te, LOAD_REQUESTS, seed=common.SEED + 7)
+    results = asyncio.run(server_lib.open_loop(
+        over, reqs, qps=OVERLOAD_FACTOR * capacity_qps, shed_ok=True))
+    m = over.metrics()
+    served = sum(1 for r in results if r is not None)
+    shed = sum(m["shed"].values())
+    p99_admitted = m["latency_ms"]["p99"]
+
+    return {
+        "capacity_qps": capacity_qps,
+        "overload_qps": OVERLOAD_FACTOR * capacity_qps,
+        "request_timeout_ms": timeout_ms,
+        "max_queue": 4 * BATCH,
+        "offered": len(reqs),
+        "served": served,
+        "shed": dict(m["shed"]),
+        "p99_unloaded_ms": p99_unloaded,
+        "p99_admitted_ms": p99_admitted,
+    }
+
+
+def _recovery(snap0, corpus, te):
+    """Acked writes → crash (no checkpoint) → api.recover → parity."""
+    root = tempfile.mkdtemp(prefix="bench_resilience_")
+    snap_dir = os.path.join(root, "snap")
+    wal_dir = os.path.join(root, "wal")
+    cfg = server_lib.ServerConfig(
+        batch_size=BATCH, max_delay_ms=MAX_DELAY_MS, k=K, cr=CR,
+        cache_size=0, near_cells=0, wal_dir=wal_dir,
+        delta_threshold=WRITE_BATCHES * WRITE_ROWS * 4)
+    try:
+        api.save(snap0, snap_dir)
+        victim = api.Searcher(snap0).serve(cfg)
+        rng = np.random.default_rng(common.SEED + 11)
+        d = int(np.asarray(snap0.buffers["emb"]).shape[-1])
+        next_id = 20_000_000
+        acked = 0
+        t_wal = []
+        for _ in range(WRITE_BATCHES):
+            emb = rng.normal(size=(WRITE_ROWS, d)).astype(np.float32)
+            loc = rng.uniform(size=(WRITE_ROWS, 2)).astype(np.float32)
+            ids = np.arange(next_id, next_id + WRITE_ROWS)
+            next_id += WRITE_ROWS
+            t0 = time.perf_counter()
+            victim.insert_objects(emb, loc, ids)
+            t_wal.append((time.perf_counter() - t0) * 1e3)
+            acked += 1
+        # "crash": the process dies here — no checkpoint, no compaction;
+        # everything acked above lives only in the delta segment + WAL
+        victim.close()
+
+        t0 = time.perf_counter()
+        recovered = api.recover(snap_dir, wal_dir, config=cfg)
+        recover_ms = (time.perf_counter() - t0) * 1e3
+
+        # parity probe at full fanout: the recovered index must answer
+        # exactly like the never-crashed one
+        probe = te[:min(len(te), 64)]
+        tok, msk = corpus.query_tokens(probe)
+        loc = corpus.q_loc[probe].astype(np.float32)
+        c = int(np.asarray(snap0.buffers["emb"]).shape[0])
+        a = victim.engine.query(tok, msk, loc, k=K, cr=c, batch=BATCH)
+        b = recovered.engine.query(tok, msk, loc, k=K, cr=c, batch=BATCH)
+        identical = bool(np.array_equal(a[0], b[0])
+                         and np.array_equal(a[1], b[1]))
+        out = {
+            "acked_writes": acked,
+            "recovered_writes": recovered.stats.recovered_writes,
+            "wal_append_ms_median": float(np.median(t_wal)),
+            "recover_ms": recover_ms,
+            "query_parity": identical,
+        }
+        recovered.close()
+        return out
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def run(out_path: str = OUT_PATH):
+    r = common.get_retriever()
+    corpus = common.get_corpus()
+    te, _ = common.test_split_positives(corpus)
+    engine = r.engine()
+
+    overload = _overload(engine, corpus, te)
+    recovery = _recovery(engine.snapshot, corpus, te)
+
+    shed_total = sum(overload["shed"].values())
+    acceptance = {
+        "p99_ratio": overload["p99_admitted_ms"]
+        / max(overload["p99_unloaded_ms"], 1e-9),
+        "p99_ratio_max": 2.0,
+        "shed_fraction": shed_total / overload["offered"],
+        "shed_fraction_min": 0.05,
+        "conservation_ok": overload["served"] + shed_total
+        == overload["offered"],
+        "recovered_writes": recovery["recovered_writes"],
+        "acked_writes": recovery["acked_writes"],
+        "recovery_ok": recovery["recovered_writes"]
+        == recovery["acked_writes"] and recovery["query_parity"],
+    }
+    acceptance["pass"] = bool(
+        acceptance["p99_ratio"] <= acceptance["p99_ratio_max"]
+        and acceptance["shed_fraction"] >= acceptance["shed_fraction_min"]
+        and acceptance["conservation_ok"]
+        and acceptance["recovery_ok"])
+
+    section = {
+        "overload": overload,
+        "recovery": recovery,
+        "acceptance": acceptance,
+    }
+    report = {}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                report = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            report = {}
+    report.setdefault("bench", "serving")
+    report["resilience"] = section
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+
+    return [
+        common.fmt_row("serving(overload)", {
+            "capacity_qps": overload["capacity_qps"],
+            "p99_unloaded_ms": overload["p99_unloaded_ms"],
+            "p99_admitted_ms": overload["p99_admitted_ms"],
+            "p99_ratio": acceptance["p99_ratio"],
+            "shed_fraction": acceptance["shed_fraction"],
+            "served": overload["served"]}),
+        common.fmt_row("serving(recovery)", {
+            "acked": recovery["acked_writes"],
+            "recovered": recovery["recovered_writes"],
+            "parity": int(recovery["query_parity"]),
+            "recover_ms": recovery["recover_ms"],
+            "wal_append_ms": recovery["wal_append_ms_median"]}),
+        common.fmt_row("serving(resilience)", {
+            "pass": int(acceptance["pass"]), "path": out_path}),
+    ]
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI-scale training (same knobs as benchmarks.run)")
+    args = ap.parse_args()
+    if args.fast:
+        common.N_OBJECTS = 1500
+        common.N_QUERIES = 300
+        common.REL_STEPS = 120
+        common.IDX_STEPS = 250
+    print("\n".join(run()))

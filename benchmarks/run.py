@@ -34,6 +34,7 @@ def main(argv=None):
         bench_memory,
         bench_neg_start,
         bench_relevance,
+        bench_resilience,
         bench_scalability,
         bench_serving,
         bench_tradeoff,
@@ -49,6 +50,7 @@ def main(argv=None):
         ("Kernel_roofline", bench_kernels.run),
         ("Serving_stream", bench_serving.run),
         ("Filters_continuous", bench_filters.run),
+        ("Serving_resilience", bench_resilience.run),
     ]
     only = {s for s in args.only.split(",") if s}
     failures = 0

@@ -46,7 +46,7 @@ from repro.core import server as server_lib
 from repro.core import snapshot as snapshot_lib
 from repro.core.snapshot import IndexSnapshot
 
-__all__ = ["build", "save", "load", "Searcher", "brute_force",
+__all__ = ["build", "save", "load", "recover", "Searcher", "brute_force",
            "IndexSnapshot"]
 
 
@@ -124,6 +124,42 @@ def load(directory: str, *, step: Optional[int] = None,
     if mesh is not None:
         snap = snap.with_mesh(mesh)
     return snap
+
+
+def recover(snapshot_dir: str, wal_dir: Optional[str] = None, *,
+            config: Optional["server_lib.ServerConfig"] = None,
+            backend: str = "auto"):
+    """Crash recovery in one call (DESIGN.md §14): rebuild a serving
+    stack whose index is bit-identical to one that never crashed.
+
+        server = api.recover("artifacts/index", "artifacts/wal")
+
+    Walks ``snapshot_dir`` for the newest snapshot that actually
+    restores (corrupted steps — truncated manifest, checksum-failed
+    leaf — are skipped, not fatal), builds a :class:`Searcher` +
+    streaming server over it, and replays the write-ahead log's intact
+    records (torn tail dropped by checksum): every record whose version
+    the loaded snapshot predates re-runs through the normal write path,
+    so acknowledged inserts/deletes that only lived in the delta
+    segment at crash time are restored, and compaction re-triggers
+    deterministically.
+
+    ``config`` must carry the same write-path knobs
+    (``delta_threshold``, ``spill``) the crashed server ran with for
+    bit-identical replay; its ``wal_dir`` defaults to ``wal_dir``.
+    Returns the :class:`~repro.core.server.StreamingServer` (its
+    ``stats.recovered_writes`` says how many records were applied;
+    ``server.checkpoint(snapshot_dir)`` re-durabilizes and empties the
+    log)."""
+    import dataclasses as _dc
+
+    snap = snapshot_lib.load_latest_good(snapshot_dir)
+    cfg = config or server_lib.ServerConfig()
+    if wal_dir is not None and cfg.wal_dir != wal_dir:
+        cfg = _dc.replace(cfg, wal_dir=wal_dir)
+    server = Searcher(snap, backend=backend).serve(cfg)
+    server.replay_wal()
+    return server
 
 
 # ---------------------------------------------------------------------------

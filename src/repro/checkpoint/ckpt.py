@@ -37,17 +37,27 @@ import json
 import os
 import re
 import shutil
-import tempfile
+import zlib
 from typing import Any, Callable, Optional
 
 import jax
 import ml_dtypes  # noqa: F401  (registers bfloat16 with np.dtype)
 import numpy as np
 
+from repro.core import faults as faults_lib
+
 _STEP_RE = re.compile(r"^step_(\d{9})$")
 
 # extension dtypes .npy cannot round-trip → same-width storage view
 _VIEW_DTYPES = {"bfloat16": np.uint16}
+
+
+class SnapshotCorrupt(ValueError):
+    """A committed checkpoint that cannot be trusted: truncated or
+    garbage manifest, a leaf file whose checksum doesn't match the
+    manifest, or a leaf file missing outright. Distinct from "no
+    checkpoint here" (``FileNotFoundError``) so recovery code can walk
+    back to an older step instead of treating corruption as absence."""
 
 
 def _step_dir(directory: str, step: int, tmp=False) -> str:
@@ -60,12 +70,41 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def _crc_file(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(1 << 20)
+            if not chunk:
+                return crc
+            crc = zlib.crc32(chunk, crc)
+
+
+def _fsync_dir(path: str):
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save(directory: str, step: int, tree: Any, *, meta: Optional[dict] = None,
          keep: int = 3) -> str:
-    """Save a pytree of arrays. Returns the committed path."""
+    """Save a pytree of arrays. Returns the committed path.
+
+    Commit sequence (crash anywhere leaves a loadable state):
+    leaves + manifest land in ``<step>.tmp`` and are fsync'd, then the
+    tmp dir renames into place. When a committed dir for the same step
+    already exists it is first renamed aside to ``<step>.old`` (an
+    atomic rename, unlike rmtree-then-rename which has a window with NO
+    committed artifact) and deleted only after the new commit.
+    Per-leaf crc32s in the manifest let ``restore`` detect bit-rot or a
+    post-commit partial overwrite as :class:`SnapshotCorrupt`.
+    """
     os.makedirs(directory, exist_ok=True)
     tmp = _step_dir(directory, step, tmp=True)
     final = _step_dir(directory, step)
+    old = final + ".old"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
@@ -84,19 +123,31 @@ def save(directory: str, step: int, tree: Any, *, meta: Optional[dict] = None,
         stored = arr
         if str(arr.dtype) in _VIEW_DTYPES:
             stored = arr.view(_VIEW_DTYPES[str(arr.dtype)])
-        np.save(os.path.join(tmp, fn), stored)
+        leaf_path = os.path.join(tmp, fn)
+        with open(leaf_path, "wb") as f:
+            np.save(f, stored)
+            f.flush()
+            os.fsync(f.fileno())
         # manifest records the TRUE dtype; restore views back when the
         # stored file's dtype differs
         manifest["leaves"].append(
-            {"file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+            {"file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+             "crc32": _crc_file(leaf_path)})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
+    _fsync_dir(tmp)
+    faults_lib.fire("ckpt.mid_save", tmp=tmp, final=final)
     if os.path.exists(final):
-        shutil.rmtree(final)
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.rename(final, old)
     os.rename(tmp, final)          # atomic commit
+    _fsync_dir(directory)
+    shutil.rmtree(old, ignore_errors=True)
     _gc(directory, keep)
+    faults_lib.fire("ckpt.post_commit", path=final)
     return final
 
 
@@ -104,9 +155,9 @@ def _gc(directory: str, keep: int):
     steps = all_steps(directory)
     for s in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(_step_dir(directory, s), ignore_errors=True)
-    # orphaned tmp dirs from crashed writers
+    # orphaned tmp/old dirs from crashed writers
     for name in os.listdir(directory):
-        if name.endswith(".tmp"):
+        if name.endswith(".tmp") or name.endswith(".old"):
             shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
 
 
@@ -127,17 +178,40 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def _read_manifest(path: str) -> dict:
+    """Parse ``<step dir>/manifest.json``, folding every way a truncated
+    or garbage file can fail (empty file, cut-off JSON, binary noise,
+    JSON of the wrong shape) into one :class:`SnapshotCorrupt`."""
+    mf = os.path.join(path, "manifest.json")
+    try:
+        with open(mf, "rb") as f:
+            manifest = json.loads(f.read().decode("utf-8"))
+    except FileNotFoundError:
+        raise
+    except (json.JSONDecodeError, UnicodeDecodeError, ValueError) as e:
+        raise SnapshotCorrupt(
+            f"{mf}: manifest is truncated or garbage ({e}); the commit "
+            f"was damaged after the fact — fall back to an older step "
+            f"or re-build the artifact") from e
+    if not isinstance(manifest, dict) or "meta" not in manifest \
+            or "leaves" not in manifest:
+        raise SnapshotCorrupt(
+            f"{mf}: manifest parses as JSON but is not a checkpoint "
+            f"manifest (missing meta/leaves blocks)")
+    return manifest
+
+
 def read_meta(directory: str, *, step: Optional[int] = None):
     """Read a committed checkpoint's ``meta`` block without touching the
     array files. Returns ``(meta, step)``. Lets artifact readers (e.g.
     core/snapshot.py) validate schema/config identity and rebuild the
-    tree structure BEFORE deciding to load gigabytes of leaves."""
+    tree structure BEFORE deciding to load gigabytes of leaves.
+    Raises :class:`SnapshotCorrupt` on a truncated/garbage manifest."""
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {directory}")
-    with open(os.path.join(_step_dir(directory, step), "manifest.json")) as f:
-        return json.load(f)["meta"], step
+    return _read_manifest(_step_dir(directory, step))["meta"], step
 
 
 def restore(directory: str, tree_like: Any, *, step: Optional[int] = None,
@@ -154,8 +228,7 @@ def restore(directory: str, tree_like: Any, *, step: Optional[int] = None,
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {directory}")
     path = _step_dir(directory, step)
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = _read_manifest(path)
     leaves_ref, treedef = _flatten(tree_like)
     if len(leaves_ref) != manifest["n_leaves"]:
         raise ValueError(
@@ -163,7 +236,24 @@ def restore(directory: str, tree_like: Any, *, step: Optional[int] = None,
             f"{len(leaves_ref)} — structure mismatch")
     leaves = []
     for i, (info, ref) in enumerate(zip(manifest["leaves"], leaves_ref)):
-        arr = np.load(os.path.join(path, info["file"]))
+        leaf_path = os.path.join(path, info["file"])
+        want_crc = info.get("crc32")
+        try:
+            if want_crc is not None and _crc_file(leaf_path) != want_crc:
+                raise SnapshotCorrupt(
+                    f"leaf {i} ({leaf_path}): checksum mismatch vs "
+                    f"manifest — the committed file was damaged")
+            arr = np.load(leaf_path)
+        except SnapshotCorrupt:
+            raise
+        except FileNotFoundError as e:
+            raise SnapshotCorrupt(
+                f"leaf {i} ({leaf_path}): missing from a committed "
+                f"checkpoint") from e
+        except ValueError as e:
+            raise SnapshotCorrupt(
+                f"leaf {i} ({leaf_path}): not a readable .npy "
+                f"({e})") from e
         want = info.get("dtype")
         if want and str(arr.dtype) != want:
             # leaf was stored under a view dtype (e.g. bf16 → uint16):

@@ -475,7 +475,7 @@ class IndexSnapshot:
                 f"the index at a supported tier")
         cfg = _cfg_from_dict(meta["cfg"])
         if cfg_digest(cfg) != meta["cfg_digest"]:
-            raise ValueError(
+            raise ckpt.SnapshotCorrupt(
                 f"snapshot cfg_digest mismatch in {directory}: manifest "
                 f"says {meta['cfg_digest']} but the stored config hashes "
                 f"to {cfg_digest(cfg)}; artifact is corrupt")
@@ -514,3 +514,27 @@ class IndexSnapshot:
 def load(directory: str, step: Optional[int] = None) -> IndexSnapshot:
     """Module-level alias of :meth:`IndexSnapshot.load`."""
     return IndexSnapshot.load(directory, step=step)
+
+
+def load_latest_good(directory: str) -> IndexSnapshot:
+    """Load the newest committed snapshot that actually restores.
+
+    Recovery entry point (DESIGN.md §14): walks the directory's
+    committed steps newest-first, skipping any that raise
+    :class:`~repro.checkpoint.ckpt.SnapshotCorrupt` (damaged manifest,
+    checksum-failed or missing leaf, digest mismatch). Schema/precision
+    mismatches are NOT skipped — those are plain ``ValueError``s and
+    mean the wrong build, not a damaged artifact. Raises
+    ``FileNotFoundError`` when no step loads."""
+    steps = ckpt.all_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no committed snapshots in {directory}")
+    corrupt = []
+    for step in reversed(steps):
+        try:
+            return IndexSnapshot.load(directory, step=step)
+        except ckpt.SnapshotCorrupt as e:
+            corrupt.append((step, str(e)))
+    raise FileNotFoundError(
+        f"no loadable snapshot in {directory}: every committed step is "
+        f"corrupt — {corrupt}")

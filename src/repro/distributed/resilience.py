@@ -36,6 +36,24 @@ class StragglerMonitor:
     def record(self, host: str, step_seconds: float):
         self.latencies[host].append(step_seconds)
 
+    def slow(self, host: str) -> bool:
+        """Single-stream anomaly test: is ``host``'s LAST sample slow
+        against its OWN recent window (median + k·MAD of the window)?
+
+        :meth:`flagged` compares hosts against each other, which needs a
+        fleet (≥ 2 streams). This variant serves the one-stream case —
+        e.g. per-flush wall times in the streaming server, where "slow"
+        means "slow relative to this process's own recent flushes". The
+        MAD floor (5% of median) keeps a perfectly steady stream from
+        flagging noise-level jitter. Needs half a window of history."""
+        lat = self.latencies.get(host)
+        if not lat or len(lat) < max(4, self.window // 2):
+            return False
+        hist = sorted(list(lat)[:-1])
+        med = hist[len(hist) // 2]
+        mad = sorted(abs(x - med) for x in hist)[len(hist) // 2]
+        return lat[-1] > med + self.mad_k * max(mad, 0.05 * med, 1e-4)
+
     def _threshold(self) -> Optional[float]:
         last = [d[-1] for d in self.latencies.values() if d]
         if len(last) < 2:

@@ -137,6 +137,21 @@ def main(argv=None):
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip pre-tracing (the first query run — here the "
                          "quality snapshot — then pays the compile)")
+    # --- resilience knobs (DESIGN.md §14) ---
+    ap.add_argument("--wal-dir", default=None,
+                    help="write-ahead log directory: every insert/delete "
+                         "batch is durably logged before its publish; on "
+                         "startup intact records newer than the loaded "
+                         "snapshot are replayed (crash recovery). Pair "
+                         "with --snapshot-dir")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="admission bound: shed (Overloaded) submits "
+                         "arriving with this many already queued; 0 = "
+                         "unbounded")
+    ap.add_argument("--timeout-ms", type=float, default=0.0,
+                    help="per-request deadline: requests still queued past "
+                         "it are shed (DeadlineExceeded) instead of riding "
+                         "a late batch; 0 = no deadlines")
     # --- load generation ---
     ap.add_argument("--mode", default="closed", choices=["open", "closed"])
     ap.add_argument("--requests", type=int, default=1200,
@@ -222,7 +237,17 @@ def main(argv=None):
         k=args.k, cr=args.cr, backend=backend,
         cache_size=args.cache_size, near_cells=args.near_cells,
         delta_threshold=args.delta_threshold,
-        max_imbalance=args.max_imbalance, spill=args.spill))
+        max_imbalance=args.max_imbalance, spill=args.spill,
+        wal_dir=args.wal_dir, max_queue=args.max_queue,
+        request_timeout_ms=args.timeout_ms))
+    if args.wal_dir and server.wal.n_records:
+        # crash recovery (DESIGN.md §14): the log outlived a previous
+        # process — re-apply every intact record the loaded snapshot
+        # doesn't already contain, before serving a single request
+        applied = server.replay_wal()
+        print(f"== recovery: replayed {applied} WAL record(s) "
+              f"(torn tail dropped: {server.wal.dropped_tail}) -> "
+              f"serving v{server.engine.snapshot.meta.version} ==")
     if not args.no_warmup:
         compiles = server.warmup()
         print("== warm-up: pre-traced "
@@ -289,10 +314,12 @@ def main(argv=None):
     print(f"== streaming {args.requests} requests "
           f"({len(set(picks.tolist()))} unique, zipf a={args.skew}) "
           f"mode={args.mode} ==")
+    shedding = args.max_queue > 0 or args.timeout_ms > 0
     t0 = time.perf_counter()
     if args.mode == "open":
         results = asyncio.run(
-            server_lib.open_loop(server, requests, qps=args.qps))
+            server_lib.open_loop(server, requests, qps=args.qps,
+                                 shed_ok=shedding))
     else:
         results = asyncio.run(
             server_lib.closed_loop(server, requests,
@@ -301,10 +328,12 @@ def main(argv=None):
 
     m = server.metrics(wall_seconds=wall)
     lat = m["latency_ms"]
-    served_ids = np.stack([res[0] for res in results])
+    served = [(res, q) for res, q in zip(results, picks) if res is not None]
+    served_ids = (np.stack([res[0] for res, _ in served])
+                  if served else np.zeros((0, args.k), np.int64))
     served_pos = [np.asarray([p for p in corpus.positives[q]
                               if int(p) not in deleted])
-                  for q in picks]
+                  for _, q in served]
     print(f"served QPS  : {m['qps']:.1f} ({wall:.2f}s wall)")
     print(f"latency ms  : p50={lat['p50']:.2f} p95={lat['p95']:.2f} "
           f"p99={lat['p99']:.2f} mean={lat['mean']:.2f}")
@@ -324,8 +353,29 @@ def main(argv=None):
     if m.get("dedup_factor"):
         print(f"route dedup : {m['dedup_factor']:.1f}x "
               f"(B*cr / distinct clusters — the cluster-major win)")
-    print(f"recall@{args.k} under serving: "
-          f"{cm.recall_at_k(served_ids, served_pos, args.k):.4f}")
+    # resilience summary (DESIGN.md §14)
+    shed_total = sum(m["shed"].values())
+    if shed_total or shedding:
+        print(f"shed        : {shed_total} of {len(requests)} offered "
+              f"({m['shed']}) — served {len(served)}")
+    if m["flush_retries"] or m["poisoned_requests"]:
+        print(f"degradation : flush_retries={m['flush_retries']} "
+              f"poisoned_requests={m['poisoned_requests']}")
+    if m["breaker"]["trips"]:
+        print(f"breaker     : trips={m['breaker']['trips']} "
+              f"fallback_flushes={m['breaker']['fallback_flushes']} "
+              f"open={m['breaker']['open']}")
+    if m["slow_flushes"]:
+        print(f"slow flushes: {m['slow_flushes']} "
+              f"(last at {m['last_slow_flush_at']:.0f} unix s)")
+    if m["wal"]["enabled"]:
+        print(f"wal         : {m['wal']['records']} record(s), "
+              f"{m['wal']['bytes'] / 1e3:.1f} kB "
+              f"(appends={m['wal']['appends']} "
+              f"recovered={m['recovered_writes']})")
+    if len(served):
+        print(f"recall@{args.k} under serving: "
+              f"{cm.recall_at_k(served_ids, served_pos, args.k):.4f}")
     return 0
 
 

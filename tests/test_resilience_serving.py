@@ -1,0 +1,572 @@
+"""Chaos tier for the serving stack (DESIGN.md §14).
+
+Core invariant, exercised through real fault injection (core/faults.py —
+no monkeypatched doubles): **zero lost acknowledged writes and zero torn
+reads**. A write that returned before the crash must be present after
+``api.recover``; the recovered index must answer full-fanout queries
+bit-identically to a server that never crashed; a write that crashed
+mid-flight may be present (at-least-once) but must never be torn.
+
+Also covered here: the WAL's torn-tail handling, checkpoint atomicity
+and corruption detection (``SnapshotCorrupt``), fallback to an older
+snapshot step, the circuit breaker, deadline/admission shedding, and
+slow-flush anomaly detection.
+
+Run via ``make test-resilience``.
+"""
+import asyncio
+import dataclasses
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import api
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.core import engine as engine_lib
+from repro.core import faults
+from repro.core import index as il
+from repro.core import relevance
+from repro.core import server as server_lib
+from repro.core import snapshot as snapshot_lib
+from repro.core import wal as wal_lib
+from repro.distributed import resilience as resilience_lib
+
+DIST_MAX = 1.414
+
+
+@pytest.fixture(autouse=True)
+def _disarm_faults():
+    """The registry is process-global: every test starts and ends clean,
+    even when an injected Crash propagated out of the body."""
+    faults.clear()
+    yield
+    faults.clear()
+
+
+# ---------------------------------------------------------------------------
+# Fixture: the same tiny bound engine as tests/test_server.py
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def engine_parts():
+    cfg = dataclasses.replace(
+        get_config("list-dual-encoder"),
+        n_layers=2, d_model=32, n_heads=2, d_ff=64, vocab_size=512,
+        max_len=8, spatial_t=50, n_clusters=4, index_mlp_hidden=(16,))
+    rng = np.random.default_rng(11)
+    params = relevance.relevance_init(jax.random.PRNGKey(0), cfg)
+    n, c, cap = 96, cfg.n_clusters, 64       # headroom for inserts
+    obj_emb = rng.normal(size=(n, cfg.d_model)).astype(np.float32)
+    obj_loc = rng.uniform(size=(n, 2)).astype(np.float32)
+    norm = il.loc_normalizer(jnp.asarray(obj_loc))
+    iparams = il.index_init(jax.random.PRNGKey(5), cfg.d_model, c,
+                            hidden=(16,))
+    feats = il.build_features(jnp.asarray(obj_emb), jnp.asarray(obj_loc),
+                              norm)
+    top = np.asarray(il.assign_clusters(iparams, feats, top=2))
+    buf = il.build_cluster_buffers(top, obj_emb, obj_loc, n_clusters=c,
+                                   capacity=cap)
+    return cfg, params, iparams, norm, buf
+
+
+def make_engine(engine_parts):
+    cfg, params, iparams, norm, buf = engine_parts
+    return engine_lib.QueryEngine.from_parts(
+        cfg, params, iparams, norm, buf, dist_max=DIST_MAX, backend="dense")
+
+
+def make_server(engine_parts, **over):
+    eng = make_engine(engine_parts)
+    kw = dict(batch_size=4, max_delay_ms=30.0, k=5, cr=2, backend="dense")
+    kw.update(over)
+    return server_lib.StreamingServer(eng, server_lib.ServerConfig(**kw))
+
+
+def make_requests(rng, n, cfg):
+    tok = rng.integers(2, cfg.vocab_size, (n, cfg.max_len)).astype(np.int32)
+    tok[:, 0] = 1
+    msk = np.ones((n, cfg.max_len), bool)
+    loc = rng.uniform(size=(n, 2)).astype(np.float32)
+    return tok, msk, loc
+
+
+def insert_batch(server, rng, *, rows=6, base_id=10_000_000):
+    """One acked insert batch; returns (emb, loc, ids) for the oracle."""
+    d = int(np.asarray(server.engine.snapshot.buffers["emb"]).shape[-1])
+    emb = rng.normal(size=(rows, d)).astype(np.float32)
+    loc = rng.uniform(size=(rows, 2)).astype(np.float32)
+    ids = np.arange(base_id, base_id + rows)
+    server.insert_objects(emb, loc, ids)
+    return emb, loc, ids
+
+
+def full_fanout(server, tok, msk, loc, *, k=5):
+    """Full-fanout dense query through the server's engine — the parity
+    probe for torn-read / lost-write checks (every cluster scanned, so a
+    missing or extra row can never hide behind routing)."""
+    c = int(np.asarray(server.engine.snapshot.buffers["emb"]).shape[0])
+    return server.engine.query(tok, msk, loc, k=k, cr=c,
+                               batch=len(tok), backend="dense")
+
+
+# ---------------------------------------------------------------------------
+# Fault registry
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_point_rejected():
+    with pytest.raises(ValueError, match="unknown fault point"):
+        faults.inject("flush.typo", error=RuntimeError("x"))
+
+
+def test_error_and_callback_exclusive():
+    with pytest.raises(ValueError, match="not both"):
+        faults.inject("flush.engine", error=RuntimeError("x"),
+                      callback=lambda: None)
+
+
+def test_times_semantics():
+    faults.inject("flush.engine", error=RuntimeError("boom"), times=2)
+    for _ in range(2):
+        with pytest.raises(RuntimeError, match="boom"):
+            faults.fire("flush.engine")
+    assert faults.fire("flush.engine") is None      # disarmed after 2
+    assert faults.fired("flush.engine") == 2
+    assert not faults.active("flush.engine")
+
+
+def test_injected_clears_even_on_crash():
+    with pytest.raises(faults.Crash):
+        with faults.injected("write.pre_publish",
+                             error=faults.Crash("died")):
+            faults.fire("write.pre_publish")
+    assert not faults.active("write.pre_publish")
+
+
+def test_crash_tears_through_except_exception():
+    """The serving stack catches Exception to keep serving; a simulated
+    process death must never be swallowed by that."""
+    with pytest.raises(faults.Crash):
+        try:
+            raise faults.Crash("simulated SIGKILL")
+        except Exception:                            # noqa: BLE001
+            pytest.fail("Crash was caught by an `except Exception`")
+
+
+# ---------------------------------------------------------------------------
+# Write-ahead log
+# ---------------------------------------------------------------------------
+
+
+def test_wal_roundtrip(tmp_path):
+    path = str(tmp_path / "serving.wal")
+    with wal_lib.WriteAheadLog(path) as wal:
+        wal.append("insert", version=1,
+                   emb=np.arange(6, dtype=np.float32).reshape(2, 3),
+                   ids=np.array([7, 8]))
+        wal.append("delete", version=2, ids=np.array([7]))
+        assert wal.n_records == 2 and wal.last_version == 2
+        recs = wal.records()
+    assert [r["kind"] for r in recs] == ["insert", "delete"]
+    assert [r["version"] for r in recs] == [1, 2]
+    np.testing.assert_array_equal(
+        recs[0]["emb"], np.arange(6, dtype=np.float32).reshape(2, 3))
+    # reopen: counters rebuilt from disk, nothing dropped
+    with wal_lib.WriteAheadLog(path) as wal:
+        assert wal.n_records == 2 and not wal.dropped_tail
+    # read-only replay sees the same records
+    assert [r["version"] for r in wal_lib.replay(path)] == [1, 2]
+
+
+def test_wal_torn_tail_dropped_on_reopen(tmp_path):
+    path = str(tmp_path / "serving.wal")
+    wal = wal_lib.WriteAheadLog(path)
+    wal.append("insert", version=1, ids=np.array([1]))
+    good_end = wal.nbytes()
+    # crash mid-append: only half the second record reaches the disk
+    faults.inject("wal.torn_tail", callback=lambda nbytes, path: nbytes // 2)
+    with pytest.raises(faults.Crash):
+        wal.append("insert", version=2, ids=np.array([2]))
+    wal.close()
+    assert os.path.getsize(path) > good_end          # torn bytes exist
+    wal2 = wal_lib.WriteAheadLog(path)               # reopen post-crash
+    assert wal2.dropped_tail
+    assert wal2.n_records == 1                       # good prefix only
+    assert wal2.nbytes() == good_end                 # tail truncated
+    wal2.append("insert", version=3, ids=np.array([3]))
+    assert [r["version"] for r in wal2.records()] == [1, 3]
+    wal2.close()
+
+
+def test_wal_truncate(tmp_path):
+    path = str(tmp_path / "serving.wal")
+    with wal_lib.WriteAheadLog(path) as wal:
+        wal.append("insert", version=1, ids=np.array([1]))
+        wal.truncate()
+        assert wal.n_records == 0 and wal.last_version == 0
+        assert wal.records() == []
+        wal.append("delete", version=5, ids=np.array([9]))
+        assert [r["version"] for r in wal.records()] == [5]
+
+
+def test_wal_bad_magic(tmp_path):
+    path = str(tmp_path / "serving.wal")
+    with open(path, "wb") as f:
+        f.write(b"NOTALIST" + b"\x00" * 32)
+    with pytest.raises(wal_lib.WalCorrupt):
+        wal_lib.WriteAheadLog(path)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint atomicity + corruption detection
+# ---------------------------------------------------------------------------
+
+
+def _tree(seed):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(4, 3)).astype(np.float32),
+            "b": rng.normal(size=(3,)).astype(np.float32)}
+
+
+def test_ckpt_crash_mid_save_keeps_prior_step(tmp_path):
+    d = str(tmp_path)
+    t0 = _tree(0)
+    ckpt.save(d, 0, t0)
+    faults.inject("ckpt.mid_save", error=faults.Crash("died mid-save"))
+    with pytest.raises(faults.Crash):
+        ckpt.save(d, 1, _tree(1))
+    # the half-written step never became visible; step 0 still restores
+    assert ckpt.all_steps(d) == [0]
+    got, step, _ = ckpt.restore(d, t0)
+    assert step == 0
+    np.testing.assert_array_equal(got["w"], t0["w"])
+    # the next successful save commits and GCs the crashed .tmp
+    ckpt.save(d, 1, _tree(1))
+    assert ckpt.all_steps(d) == [0, 1]
+    assert not any(n.endswith(".tmp") for n in os.listdir(d))
+
+
+def test_ckpt_leaf_corruption_raises_snapshot_corrupt(tmp_path):
+    d = str(tmp_path)
+    t0 = _tree(0)
+    path = ckpt.save(d, 0, t0)
+    leaf = next(p for p in sorted(os.listdir(path)) if p.endswith(".npy"))
+    with open(os.path.join(path, leaf), "r+b") as f:
+        f.seek(0)
+        f.write(b"\xff" * 16)                        # bit-rot the header
+    with pytest.raises(ckpt.SnapshotCorrupt):
+        ckpt.restore(d, t0)
+
+
+def test_ckpt_missing_leaf_raises_snapshot_corrupt(tmp_path):
+    d = str(tmp_path)
+    t0 = _tree(0)
+    path = ckpt.save(d, 0, t0)
+    leaf = next(p for p in sorted(os.listdir(path)) if p.endswith(".npy"))
+    os.remove(os.path.join(path, leaf))
+    with pytest.raises(ckpt.SnapshotCorrupt, match="committed checkpoint"):
+        ckpt.restore(d, t0)
+
+
+def test_ckpt_garbage_manifest_raises_snapshot_corrupt(tmp_path):
+    d = str(tmp_path)
+    path = ckpt.save(d, 0, _tree(0))
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        f.write('{"meta": {"truncated mid-wri')
+    with pytest.raises(ckpt.SnapshotCorrupt):
+        ckpt.read_meta(d)
+
+
+def test_load_latest_good_skips_corrupt_newest(engine_parts, tmp_path):
+    d = str(tmp_path)
+    snap0 = make_engine(engine_parts).snapshot
+    snap0.save(d)
+    snap1 = snap0.with_buffers(dict(snap0.buffers))  # version + 1
+    path1 = snap1.save(d)
+    # bit-rot the newest step's manifest → recovery must fall back
+    with open(os.path.join(path1, "manifest.json"), "w") as f:
+        f.write("not json at all")
+    loaded = snapshot_lib.load_latest_good(d)
+    assert loaded.meta.version == snap0.meta.version
+    # with every step corrupt, recovery reports which steps it tried
+    path0 = os.path.join(
+        d, f"step_{snap0.meta.version:09d}")
+    with open(os.path.join(path0, "manifest.json"), "w") as f:
+        f.write("also garbage")
+    with pytest.raises(FileNotFoundError, match="corrupt"):
+        snapshot_lib.load_latest_good(d)
+
+
+# ---------------------------------------------------------------------------
+# The core invariant: zero lost acked writes, zero torn reads
+# ---------------------------------------------------------------------------
+
+
+def _serve_cfg(**over):
+    kw = dict(batch_size=4, max_delay_ms=30.0, k=5, cr=2, backend="dense",
+              delta_threshold=1024)
+    kw.update(over)
+    return server_lib.ServerConfig(**kw)
+
+
+@pytest.mark.parametrize("crash_point", [
+    "write.pre_publish",        # WAL has the record, publish never ran
+    "write.post_publish",       # published + logged, ack lost in flight
+    "wal.torn_tail",            # died mid-append: record torn, dropped
+])
+def test_recover_loses_no_acked_write(engine_parts, tmp_path, rng,
+                                      crash_point):
+    snap_dir = str(tmp_path / "snap")
+    wal_dir = str(tmp_path / "wal")
+    cfg = _serve_cfg(wal_dir=wal_dir)
+    snap0 = make_engine(engine_parts).snapshot
+    api.save(snap0, snap_dir)
+
+    victim = api.Searcher(snap0, backend="dense").serve(cfg)
+    acked = [insert_batch(victim, rng, base_id=10_000_000 + 100 * i)
+             for i in range(2)]                      # both batches acked
+
+    # the third batch crashes at the injected point
+    if crash_point == "wal.torn_tail":
+        faults.inject(crash_point,
+                      callback=lambda nbytes, path: nbytes // 3)
+    else:
+        faults.inject(crash_point, error=faults.Crash("process died"))
+    with pytest.raises(faults.Crash):
+        insert_batch(victim, rng, base_id=10_000_500)
+    victim.close()                                   # what a crash leaves
+
+    recovered = api.recover(snap_dir, wal_dir, config=cfg, backend="dense")
+
+    # at-least-once: an acked write is always recovered; an un-acked one
+    # is recovered iff its WAL record survived intact (pre/post_publish
+    # crashed AFTER the durable append; torn_tail crashed during it)
+    expect = len(acked) + (0 if crash_point == "wal.torn_tail" else 1)
+    assert recovered.stats.recovered_writes == expect
+    assert recovered.wal.dropped_tail == (crash_point == "wal.torn_tail")
+
+    # zero torn reads: the recovered index answers bit-identically to a
+    # never-crashed server that applied exactly the surviving batches
+    oracle = api.Searcher(snap0, backend="dense").serve(
+        _serve_cfg())                                # same knobs, no WAL
+    for rec in recovered.wal.records():
+        oracle.insert_objects(rec["emb"], rec["loc"], rec["ids"])
+    tok, msk, loc = make_requests(rng, 8, make_engine(engine_parts).cfg)
+    ids_r, sc_r = full_fanout(recovered, tok, msk, loc)
+    ids_o, sc_o = full_fanout(oracle, tok, msk, loc)
+    np.testing.assert_array_equal(ids_r, ids_o)
+    np.testing.assert_array_equal(sc_r, sc_o)
+    # each acked batch is durably witnessed, not merely counted
+    logged = [set(np.asarray(r["ids"]).tolist())
+              for r in recovered.wal.records()]
+    for _, _, batch_ids in acked:
+        assert any(int(batch_ids[0]) in s for s in logged)
+    recovered.close()
+
+
+def test_checkpoint_truncates_wal_and_recovers_clean(engine_parts,
+                                                     tmp_path, rng):
+    snap_dir = str(tmp_path / "snap")
+    wal_dir = str(tmp_path / "wal")
+    cfg = _serve_cfg(wal_dir=wal_dir)
+    snap0 = make_engine(engine_parts).snapshot
+    server = api.Searcher(snap0, backend="dense").serve(cfg)
+    for i in range(2):
+        insert_batch(server, rng, base_id=11_000_000 + 100 * i)
+    assert server.wal.n_records == 2
+    server.checkpoint(snap_dir)
+    assert server.wal.n_records == 0                 # log now redundant
+
+    recovered = api.recover(snap_dir, wal_dir, config=cfg, backend="dense")
+    assert recovered.stats.recovered_writes == 0     # all in the snapshot
+    tok, msk, loc = make_requests(rng, 8, make_engine(engine_parts).cfg)
+    ids_a, sc_a = full_fanout(server, tok, msk, loc)
+    ids_b, sc_b = full_fanout(recovered, tok, msk, loc)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    np.testing.assert_array_equal(sc_a, sc_b)
+    server.close()
+    recovered.close()
+
+
+def test_replay_skips_records_already_in_snapshot(engine_parts, tmp_path,
+                                                  rng):
+    """Crash between snapshot.save and wal.truncate: the WAL still holds
+    every record, but their versions are at-or-below the saved snapshot's
+    — replay must double-apply nothing."""
+    snap_dir = str(tmp_path / "snap")
+    wal_dir = str(tmp_path / "wal")
+    cfg = _serve_cfg(wal_dir=wal_dir)
+    snap0 = make_engine(engine_parts).snapshot
+    server = api.Searcher(snap0, backend="dense").serve(cfg)
+    insert_batch(server, rng, base_id=12_000_000)
+    # the checkpoint sequence, dying right after the save
+    snap = server.compact_now()
+    api.save(snap, snap_dir)
+    server.close()                                   # truncate never ran
+    assert wal_lib.WriteAheadLog(wal_lib.wal_path(wal_dir)).n_records == 1
+
+    recovered = api.recover(snap_dir, wal_dir, config=cfg, backend="dense")
+    assert recovered.stats.recovered_writes == 0     # skipped by version
+    tok, msk, loc = make_requests(rng, 8, make_engine(engine_parts).cfg)
+    ids_a, _ = full_fanout(server, tok, msk, loc)
+    ids_b, _ = full_fanout(recovered, tok, msk, loc)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    recovered.close()
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation: breaker, shedding, slow-flush detection
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_trips_to_fallback_then_probes(engine_parts, rng):
+    # "auto" resolves to dense on this engine, so both the primary and
+    # the fallback are cheap — but their names differ, which is what
+    # arms the breaker (a "dense" server has nothing to degrade to)
+    server = make_server(engine_parts, backend="auto", batch_size=1,
+                         breaker_threshold=2, breaker_probe_every=2,
+                         retry_backoff_ms=0.0)
+    tok, msk, loc = make_requests(rng, 6, server.engine.cfg)
+    faults.inject("flush.engine", error=RuntimeError("XLA OOM"), times=2)
+
+    async def go():
+        outs = []
+        for i in range(6):
+            try:
+                outs.append(await server.submit(tok[i], msk[i], loc[i]))
+            except RuntimeError:
+                outs.append(None)
+        return outs
+
+    outs = asyncio.run(go())
+    assert outs[0] is None and outs[1] is None       # the two failures
+    assert server.stats.breaker_trips == 1           # tripped on the 2nd
+    # requests 3-4 ran on the fallback; after probe_every=2 successes
+    # the breaker half-opened and 5-6 ran (and stayed) on the primary
+    assert server.stats.breaker_fallback_flushes == 2
+    assert not server.metrics()["breaker"]["open"]
+    eng = make_engine(engine_parts)
+    ids_d, sc_d = eng.query(tok[2:], msk[2:], loc[2:], k=5, cr=2, batch=1,
+                            backend="dense")
+    for i, out in enumerate(outs[2:]):
+        assert out is not None
+        np.testing.assert_array_equal(out[0], ids_d[i])
+
+
+def test_breaker_disabled_without_fallback(engine_parts, rng):
+    server = make_server(engine_parts, batch_size=1, breaker_threshold=1,
+                         retry_backoff_ms=0.0)       # backend="dense"
+    assert server._fallback_backend() is None
+    tok, msk, loc = make_requests(rng, 2, server.engine.cfg)
+    faults.inject("flush.engine", error=RuntimeError("boom"), times=1)
+
+    async def go():
+        with pytest.raises(RuntimeError, match="boom"):
+            await server.submit(tok[0], msk[0], loc[0])
+        return await server.submit(tok[1], msk[1], loc[1])
+
+    out = asyncio.run(go())
+    assert out is not None
+    assert server.stats.breaker_trips == 0           # nothing to trip to
+
+
+def test_deadline_shed_at_flush(engine_parts, rng):
+    server = make_server(engine_parts, batch_size=8, max_delay_ms=30.0,
+                         request_timeout_ms=1.0)
+    tok, msk, loc = make_requests(rng, 3, server.engine.cfg)
+
+    async def go():
+        tasks = [asyncio.ensure_future(server.submit(tok[i], msk[i],
+                                                     loc[i]))
+                 for i in range(3)]
+        return await asyncio.gather(*tasks, return_exceptions=True)
+
+    out = asyncio.run(go())
+    # the deadline flush fires at 30ms — every 1ms deadline has passed
+    assert all(isinstance(o, server_lib.DeadlineExceeded) for o in out)
+    assert server.stats.shed["expired"] == 3
+    assert server.stats.engine_batches == 0          # nothing was scored
+
+
+def test_deadline_shed_before_enqueue(engine_parts, rng):
+    server = make_server(engine_parts, request_timeout_ms=5.0)
+    tok, msk, loc = make_requests(rng, 1, server.engine.cfg)
+
+    async def go():
+        # open-loop backlog: the intended arrival is long past due
+        with pytest.raises(server_lib.DeadlineExceeded):
+            await server.submit(tok[0], msk[0], loc[0],
+                                t_arrival=time.perf_counter() - 1.0)
+
+    asyncio.run(go())
+    assert server.stats.shed["expired"] == 1
+
+
+def test_admission_shed_on_full_queue(engine_parts, rng):
+    server = make_server(engine_parts, batch_size=8, max_delay_ms=60_000.0,
+                         max_queue=2)
+    tok, msk, loc = make_requests(rng, 3, server.engine.cfg)
+
+    async def go():
+        tasks = [asyncio.ensure_future(server.submit(tok[i], msk[i],
+                                                     loc[i]))
+                 for i in range(2)]
+        await asyncio.sleep(0)                       # both now pending
+        with pytest.raises(server_lib.Overloaded):
+            await server.submit(tok[2], msk[2], loc[2])
+        server.flush_now()                           # admitted ones finish
+        return await asyncio.gather(*tasks)
+
+    out = asyncio.run(go())
+    assert len(out) == 2 and all(o is not None for o in out)
+    assert server.stats.shed["queue_full"] == 1
+
+
+def test_open_loop_shed_ok_accounts_for_every_arrival(engine_parts, rng):
+    server = make_server(engine_parts, batch_size=2, max_queue=2,
+                         request_timeout_ms=20.0, cache_size=0)
+    n = 24
+    tok, msk, loc = make_requests(rng, n, server.engine.cfg)
+    reqs = [(tok[i], msk[i], loc[i]) for i in range(n)]
+    results = asyncio.run(server_lib.open_loop(server, reqs, qps=5_000.0,
+                                               shed_ok=True))
+    served = sum(1 for r in results if r is not None)
+    shed = sum(server.stats.shed.values())
+    assert served + shed == n                        # conservation
+    assert served > 0                                # it kept serving
+
+
+def test_straggler_monitor_slow_unit():
+    m = resilience_lib.StragglerMonitor(window=8)
+    for _ in range(3):
+        m.record("flush", 1.0)
+    assert not m.slow("flush")                       # not enough history
+    for _ in range(5):
+        m.record("flush", 1.0)
+    assert not m.slow("flush")                       # steady stream
+    m.record("flush", 10.0)
+    assert m.slow("flush")                           # 10× the window
+    m.record("flush", 1.0)
+    assert not m.slow("flush")                       # back to normal
+
+
+def test_slow_flush_counted_in_metrics(engine_parts, rng):
+    server = make_server(engine_parts, batch_size=1)
+    for _ in range(20):                              # a steady history
+        server._flush_monitor.record("flush", 1e-3)
+    faults.inject("flush.slow", callback=lambda: time.sleep(0.2))
+    tok, msk, loc = make_requests(rng, 1, server.engine.cfg)
+
+    async def go():
+        return await server.submit(tok[0], msk[0], loc[0])
+
+    out = asyncio.run(go())
+    assert out is not None                           # slow, not failed
+    assert server.stats.slow_flushes == 1
+    assert server.metrics()["last_slow_flush_at"] is not None

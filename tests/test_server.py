@@ -483,6 +483,104 @@ def test_cli_backend_alias():
 
 
 # ---------------------------------------------------------------------------
+# Failure isolation + drain (DESIGN.md §14; chaos tier in
+# tests/test_resilience_serving.py)
+# ---------------------------------------------------------------------------
+
+
+def test_poisoned_request_fails_alone(engine_parts, rng):
+    """Regression for the batch-poisoning bug: one request whose scoring
+    raises must NOT fail its co-batched neighbors. The flush bisects —
+    healthy requests get their (bit-identical) answers, the poisoned one
+    alone sees the exception, and the server keeps serving afterwards."""
+    server = make_server(engine_parts, retry_backoff_ms=0.0)
+    tok, msk, loc = make_requests(rng, 4, server.engine.cfg)
+    poison = tok[1]
+    orig = server.engine.query
+
+    def flaky(t, m, l, **kw):
+        if (np.asarray(t) == poison).all(axis=1).any():
+            raise RuntimeError("poisoned row")
+        return orig(t, m, l, **kw)
+
+    server.engine.query = flaky
+
+    async def go():
+        tasks = [asyncio.ensure_future(server.submit(tok[i], msk[i],
+                                                     loc[i]))
+                 for i in range(4)]
+        return await asyncio.gather(*tasks, return_exceptions=True)
+
+    out = asyncio.run(go())
+    assert isinstance(out[1], RuntimeError)           # the poison, alone
+    server.engine.query = orig
+    ids_d, sc_d = direct(make_engine(engine_parts), tok, msk, loc)
+    for i in (0, 2, 3):                               # healthy neighbors
+        assert np.array_equal(out[i][0], ids_d[i])
+        assert np.array_equal(out[i][1], sc_d[i])
+    assert server.stats.poisoned_requests == 1
+    assert server.stats.flush_retries >= 1            # bisection ran
+    # the server is healthy afterwards: a fresh batch serves normally
+    ids_s, sc_s = server.serve_all(tok, msk, loc)
+    assert np.array_equal(ids_s, ids_d) and np.array_equal(sc_s, sc_d)
+
+
+def test_drain_under_load_with_pending_compaction(engine_parts, rng):
+    """Shutdown/drain while a deadline timer is armed AND a compaction
+    callback is queued: no deadlock, no dropped request — every queued
+    submit resolves and the compaction still runs on its loop tick."""
+    cfg = engine_parts[0]
+    server = make_server(engine_parts, max_delay_ms=60_000.0,
+                         delta_threshold=4, request_timeout_ms=10_000.0)
+    tok, msk, loc = make_requests(rng, 6, cfg)
+
+    async def go():
+        tasks = [asyncio.ensure_future(server.submit(tok[i], msk[i],
+                                                     loc[i]))
+                 for i in range(6)]
+        await asyncio.sleep(0)       # size flush of 4; 2 queued on timer
+        emb = rng.normal(size=(4, cfg.d_model)).astype(np.float32)
+        pts = rng.uniform(size=(4, 2)).astype(np.float32)
+        server.insert_objects(emb, pts, np.arange(4000, 4004))
+        assert server._compaction_handle is not None  # queued, not run
+        return await server._drain(tasks)
+
+    out = asyncio.run(go())
+    assert len(out) == 6 and all(o is not None for o in out)
+    assert server.n_pending == 0
+    assert server.stats.shed == {"expired": 0, "queue_full": 0,
+                                 "cancelled": 0}
+    assert server.stats.compactions == 1
+    assert server.engine.snapshot.delta is None
+
+
+def test_cancelled_request_frees_its_slot(engine_parts, rng):
+    """A submit whose awaiter was cancelled must not hold a batch seat:
+    the flush drops it (counted as shed) and scores the live requests."""
+    server = make_server(engine_parts, batch_size=8, max_delay_ms=60_000.0)
+    tok, msk, loc = make_requests(rng, 3, server.engine.cfg)
+
+    async def go():
+        tasks = [asyncio.ensure_future(server.submit(tok[i], msk[i],
+                                                     loc[i]))
+                 for i in range(3)]
+        await asyncio.sleep(0)
+        tasks[1].cancel()
+        await asyncio.sleep(0)
+        server.flush_now()
+        return await asyncio.gather(*tasks, return_exceptions=True)
+
+    out = asyncio.run(go())
+    assert isinstance(out[1], asyncio.CancelledError)
+    assert server.stats.shed["cancelled"] == 1
+    assert server.stats.engine_queries == 2           # live rows only
+    ids_d, sc_d = direct(make_engine(engine_parts), tok, msk, loc, batch=8)
+    for i in (0, 2):
+        assert np.array_equal(out[i][0], ids_d[i])
+        assert np.array_equal(out[i][1], sc_d[i])
+
+
+# ---------------------------------------------------------------------------
 # Warm-up manager
 # ---------------------------------------------------------------------------
 
