@@ -23,7 +23,11 @@
 #                             crash-recovery parity, shedding + breaker
 #   make bench-resilience   - overload-shedding + crash-recovery
 #                             acceptance -> `resilience` section of
-#                             BENCH_serving.json
+#                             BENCH_serving.json (+ the `mesh_chaos`
+#                             section when >= 2 devices are visible)
+#   make test-mesh-chaos    - shard fault-tolerance tier (DESIGN.md §15)
+#                             on 8 forced CPU devices: health tracking,
+#                             hedged scans, degraded coverage, recovery
 #   make bench-kernels      - kernel roofline (backend x precision)
 #                             -> BENCH_kernels.json
 #   make bench-scalability  - Fig7 corpus scaling + mesh-sharded scale-out
@@ -36,8 +40,8 @@ PYPATH  := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}
 MESHENV := XLA_FLAGS="--xla_force_host_platform_device_count=8"
 
 .PHONY: test test-slow test-mesh test-filters test-resilience \
-        snapshot-roundtrip bench-smoke bench-serving bench-filters \
-        bench-kernels bench-resilience bench-scalability
+        test-mesh-chaos snapshot-roundtrip bench-smoke bench-serving \
+        bench-filters bench-kernels bench-resilience bench-scalability
 
 test:
 	$(PYPATH) $(PY) -m pytest -x -q -m "not slow"
@@ -59,6 +63,10 @@ test-filters:
 test-resilience:
 	$(PYPATH) $(PY) -m pytest -x -q \
 		tests/test_resilience_serving.py tests/test_server.py
+
+test-mesh-chaos:
+	$(MESHENV) $(PYPATH) $(PY) -m pytest -x -q \
+		tests/test_shard_faults.py
 
 # no --only: the smoke covers EVERY registered benchmark suite
 bench-smoke:

@@ -24,6 +24,19 @@ Two legs:
   snapshot + WAL and gate ``recovered_writes == acked_writes`` plus
   bit-identical full-fanout query results vs the never-crashed server.
 
+A third leg, **mesh-chaos** (DESIGN.md §15), runs only when ≥ 2 local
+devices are visible (the CI ``mesh-chaos`` job exports
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; elsewhere it
+records a skip without touching the ``resilience`` gate). It shards the
+index across S devices, kills one shard with a persistent
+``shard.scan_error``, and gates: zero failed requests while degraded,
+minimum coverage exactly ``(S-1)/S`` (full-fanout routing makes the
+fraction exact), degraded recall@10 within ``2.5/S`` of healthy,
+surviving-shard ids bit-identical to a single-device oracle whose view
+of the dead shard's clusters is empty, and — after an online
+``recover_shard`` — results bit-identical to the healthy pass. Written
+as its own ``mesh_chaos`` section of ``BENCH_serving.json``.
+
     PYTHONPATH=src python -m benchmarks.bench_resilience [--fast]
 """
 from __future__ import annotations
@@ -53,6 +66,9 @@ LOAD_REQUESTS = 512         # per open-loop leg
 OVERLOAD_FACTOR = 2.0
 WRITE_BATCHES = 6           # acked write batches the recovery leg replays
 WRITE_ROWS = 8
+CHAOS_REQUESTS = 64         # per mesh-chaos pass (healthy/degraded/recovered)
+CHAOS_VICTIM = 3            # shard killed by the injected fault
+RECALL_DROP_BOUND = 2.5     # max recall@10 drop while degraded, × 1/S
 
 
 def _requests(corpus, te, n, *, seed):
@@ -74,10 +90,10 @@ def _timed(fn):
 
 
 def _mk_server(engine, **over):
-    cfg = server_lib.ServerConfig(
-        batch_size=BATCH, max_delay_ms=MAX_DELAY_MS, k=K, cr=CR,
-        cache_size=0, near_cells=0, **over)
-    return server_lib.StreamingServer(engine, cfg)
+    kw = dict(batch_size=BATCH, max_delay_ms=MAX_DELAY_MS, k=K, cr=CR,
+              cache_size=0, near_cells=0)
+    kw.update(over)
+    return server_lib.StreamingServer(engine, server_lib.ServerConfig(**kw))
 
 
 def _overload(engine, corpus, te):
@@ -196,14 +212,135 @@ def _recovery(snap0, corpus, te):
         shutil.rmtree(root, ignore_errors=True)
 
 
+def _mesh_chaos(snap0, corpus, te, positives):
+    """Shard-kill leg (DESIGN.md §15): degrade, don't die — then recover
+    online and prove bit-parity with the healthy pass."""
+    import dataclasses as _dc
+
+    import jax
+
+    from repro.core import faults
+    from repro.core import index as il
+
+    n_dev = jax.device_count()
+    c = int(np.asarray(snap0.buffers["emb"]).shape[0])
+    S = min(8, n_dev)
+    while S > 1 and c % S != 0:
+        S -= 1
+    if S < 2:
+        return {"skipped": f"needs >= 2 local devices whose count divides "
+                           f"c={c} clusters (have {n_dev}); run with "
+                           "XLA_FLAGS=--xla_force_host_platform_device_"
+                           "count=8"}
+    victim = min(CHAOS_VICTIM, S - 1)
+
+    n = min(CHAOS_REQUESTS, len(te))
+    probe = te[:n]
+    tok, msk = corpus.query_tokens(probe)
+    loc = corpus.q_loc[probe].astype(np.float32)
+    pos = positives[:n]
+
+    def serve_pass(server):
+        """Per-request submits (gathered): a shard fault must surface as
+        degraded coverage on EVERY request, never as a failed one."""
+        async def go():
+            return await asyncio.gather(
+                *(server.submit(tok[i], msk[i], loc[i]) for i in range(n)),
+                return_exceptions=True)
+        t0 = time.perf_counter()
+        outs = asyncio.run(go())
+        dt = time.perf_counter() - t0
+        failures = sum(1 for o in outs if isinstance(o, BaseException))
+        ids = (np.stack([o[0] for o in outs]) if failures == 0 else None)
+        return ids, failures, dt
+
+    searcher = api.Searcher(snap0.with_mesh(S), backend="dense")
+    server = _mk_server(searcher.engine, cr=c)     # full fanout: exact
+    server.warmup()                                # coverage fractions
+    try:
+        ids_h, fail_h, t_h = serve_pass(server)
+        recall_h = common.eval_ranking(ids_h, pos)["recall@10"]
+
+        # kill one shard: persistent scan_error fails the device scan AND
+        # every host-replica retry, so health drives it UP→SUSPECT→DOWN
+        def _boom(shard):
+            if shard == victim:
+                raise RuntimeError(f"injected: shard {shard} unscannable")
+        faults.inject("shard.scan_error", callback=_boom, times=None)
+        ids_d, fail_d, t_d = serve_pass(server)
+        m = server.metrics()
+        cov_min = m["coverage"]["min"]
+        recall_d = (common.eval_ranking(ids_d, pos)["recall@10"]
+                    if ids_d is not None else 0.0)
+
+        # surviving shards stayed bit-exact: compare against a
+        # single-device oracle whose view of the victim's clusters is
+        # empty (same fills as shard_cluster_buffers padding)
+        g = np.flatnonzero(
+            np.asarray(searcher.snapshot.shards.shard_of) == victim)
+        buf = {key: np.array(v) for key, v in snap0.buffers.items()
+               if key != "capacity"}
+        buf["ids"][g] = -1
+        buf["emb"][g] = 0
+        buf["loc"][g] = il.PAD_LOC
+        buf["scale"][g] = 1
+        if "counts" in buf:
+            buf["counts"][g] = 0
+        buf["capacity"] = snap0.buffers["capacity"]
+        oracle = api.Searcher(_dc.replace(snap0, buffers=buf),
+                              backend="dense")
+        o_ids, _ = oracle.query(tok, msk, loc, k=K, cr=c, batch=BATCH)
+        survivor_parity = bool(ids_d is not None
+                               and np.array_equal(ids_d, o_ids))
+
+        # online recovery under the same server, then replay parity
+        faults.clear()
+        server.recover_shard(victim)
+        ids_r, fail_r, t_r = serve_pass(server)
+        m = server.metrics()
+        recovery_parity = bool(ids_r is not None
+                               and np.array_equal(ids_r, ids_h))
+
+        acceptance = {
+            "failed_requests": fail_h + fail_d + fail_r,
+            "coverage_min": cov_min,
+            "coverage_floor": (S - 1) / S,
+            "recall10_healthy": recall_h,
+            "recall10_degraded": recall_d,
+            "recall_drop_max": RECALL_DROP_BOUND / S,
+            "survivor_parity": survivor_parity,
+            "recovery_parity": recovery_parity,
+        }
+        acceptance["pass"] = bool(
+            acceptance["failed_requests"] == 0
+            and cov_min >= acceptance["coverage_floor"] - 1e-9
+            and recall_h - recall_d <= acceptance["recall_drop_max"]
+            and survivor_parity and recovery_parity)
+        return {
+            "n_shards": S,
+            "n_clusters": c,
+            "victim_shard": victim,
+            "requests_per_pass": n,
+            "serve_s": {"healthy": t_h, "degraded": t_d, "recovered": t_r},
+            "coverage": dict(m["coverage"]),
+            "shard_health": m["shard_health"],
+            "shard_stats": dict(m["shard_stats"]),
+            "acceptance": acceptance,
+        }
+    finally:
+        faults.clear()
+        server.close()
+
+
 def run(out_path: str = OUT_PATH):
     r = common.get_retriever()
     corpus = common.get_corpus()
-    te, _ = common.test_split_positives(corpus)
+    te, positives = common.test_split_positives(corpus)
     engine = r.engine()
 
     overload = _overload(engine, corpus, te)
     recovery = _recovery(engine.snapshot, corpus, te)
+    mesh_chaos = _mesh_chaos(engine.snapshot, corpus, te, positives)
 
     shed_total = sum(overload["shed"].values())
     acceptance = {
@@ -239,8 +376,25 @@ def run(out_path: str = OUT_PATH):
             report = {}
     report.setdefault("bench", "serving")
     report["resilience"] = section
+    report["mesh_chaos"] = mesh_chaos
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
+
+    if "skipped" in mesh_chaos:
+        chaos_row = common.fmt_row(
+            "serving(mesh-chaos)", {"skipped": 1},
+            extra=mesh_chaos["skipped"])
+    else:
+        acc = mesh_chaos["acceptance"]
+        chaos_row = common.fmt_row("serving(mesh-chaos)", {
+            "shards": mesh_chaos["n_shards"],
+            "failed_requests": acc["failed_requests"],
+            "coverage_min": acc["coverage_min"],
+            "recall10_healthy": acc["recall10_healthy"],
+            "recall10_degraded": acc["recall10_degraded"],
+            "survivor_parity": int(acc["survivor_parity"]),
+            "recovery_parity": int(acc["recovery_parity"]),
+            "pass": int(acc["pass"])})
 
     return [
         common.fmt_row("serving(overload)", {
@@ -256,6 +410,7 @@ def run(out_path: str = OUT_PATH):
             "parity": int(recovery["query_parity"]),
             "recover_ms": recovery["recover_ms"],
             "wal_append_ms": recovery["wal_append_ms_median"]}),
+        chaos_row,
         common.fmt_row("serving(resilience)", {
             "pass": int(acceptance["pass"]), "path": out_path}),
     ]

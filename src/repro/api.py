@@ -46,8 +46,19 @@ from repro.core import server as server_lib
 from repro.core import snapshot as snapshot_lib
 from repro.core.snapshot import IndexSnapshot
 
+# the operational exception surface: callers handle these without
+# importing core.server / checkpoint.ckpt / distributed.resilience
+# internals — Overloaded + DeadlineExceeded are the shedding responses
+# (DESIGN.md §14), SnapshotCorrupt is recovery's checksum verdict, and
+# ShardUnavailable is total shard loss on the mesh path (DESIGN.md §15;
+# a SINGLE lost shard degrades coverage instead of raising)
+from repro.checkpoint.ckpt import SnapshotCorrupt
+from repro.core.server import DeadlineExceeded, Overloaded
+from repro.distributed.resilience import ShardUnavailable
+
 __all__ = ["build", "save", "load", "recover", "Searcher", "brute_force",
-           "IndexSnapshot"]
+           "IndexSnapshot", "Overloaded", "DeadlineExceeded",
+           "SnapshotCorrupt", "ShardUnavailable"]
 
 
 # ---------------------------------------------------------------------------
@@ -184,6 +195,13 @@ class Searcher:
     @property
     def snapshot(self) -> IndexSnapshot:
         return self.engine.snapshot
+
+    @property
+    def last_coverage(self) -> float:
+        """Coverage fraction (routed clusters scanned / routed) of the
+        most recent :meth:`query` — 1.0 unless a mesh shard was DOWN
+        and the answer merged the surviving partials (DESIGN.md §15)."""
+        return self.engine.last_coverage
 
     def publish(self, snapshot: IndexSnapshot) -> IndexSnapshot:
         """Atomically swap the served snapshot (cfg-digest checked).

@@ -93,6 +93,8 @@ enforced by tests/test_query_engine_parity.py.
 from __future__ import annotations
 
 import collections
+import dataclasses
+import time
 from typing import Callable, Optional, Sequence, Tuple
 
 import numpy as np
@@ -117,6 +119,14 @@ CLUSTER_MAJOR_DEDUP_THRESHOLD = 2.0
 
 # traced plans an engine keeps before evicting least-recently-used ones
 DEFAULT_PLAN_CACHE_SIZE = 32
+
+# shard fault tolerance (DESIGN.md §15): per-shard scan retry/backoff
+# and the health state machine driving degraded partial-result serving
+SHARD_SCAN_RETRIES = 2             # extra attempts per shard per chunk
+SHARD_RETRY_BACKOFF_MS = 1.0       # first retry delay; doubles, capped
+SHARD_RETRY_BACKOFF_MAX_MS = 20.0
+SHARD_DOWN_AFTER = 3               # consecutive scan failures → DOWN
+SHARD_HEDGE_PROBE_EVERY = 8        # hedged scans between device probes
 
 # delta-segment scans pad the row count up to a multiple of this, so a
 # growing delta retraces the scan once per bucket, not once per insert
@@ -898,6 +908,22 @@ class QueryEngine:
         self._route_plans = {}          # keyed cr: tiny, never evicted
         self._delta_plans = {}          # keyed (k, precision): tiny too
         self._prefix_plans = {}         # keyed cr: the sharded-path prefix
+        # shard fault tolerance (DESIGN.md §15): health + hedging state
+        # for the mesh-sharded scan, plus the last query's coverage
+        self.last_coverage: float = 1.0
+        self.last_down_shards: Tuple[int, ...] = ()
+        self.shard_stats = {"hedged_scans": 0, "scan_retries": 0,
+                            "down_skips": 0, "host_scans": 0,
+                            "recoveries": 0}
+        self.shard_retries = SHARD_SCAN_RETRIES
+        self.shard_backoff_ms = SHARD_RETRY_BACKOFF_MS
+        self.shard_backoff_max_ms = SHARD_RETRY_BACKOFF_MAX_MS
+        self.shard_down_after = SHARD_DOWN_AFTER
+        self.hedge_probe_every = SHARD_HEDGE_PROBE_EVERY
+        self._shard_health = None       # lazy: sized on first sharded query
+        self._shard_monitor = None      # StragglerMonitor over device scans
+        self._hedged = {}               # shard → hedged-scan count
+        self._host_parts = {}           # host replicas, keyed by placement
 
     # --- construction -----------------------------------------------------
 
@@ -1100,6 +1126,94 @@ class QueryEngine:
         self._plans.move_to_end(key)
         return self._plans[key]
 
+    def _shard_state(self, n_shards: int):
+        """Lazy per-mesh health state: a :class:`ShardHealth` +
+        :class:`StragglerMonitor` pair sized to the current shard count
+        (re-created when a publish changes the mesh width)."""
+        from repro.distributed import resilience as resilience_lib
+
+        if (self._shard_health is None
+                or self._shard_health.n_shards != n_shards):
+            self._shard_health = resilience_lib.ShardHealth(
+                n_shards, down_after=self.shard_down_after)
+            self._shard_monitor = resilience_lib.StragglerMonitor()
+            self._hedged = {}
+        return self._shard_health
+
+    def _host_shard_part(self, snap, shards, s: int):
+        """Host-side replica of shard ``s``'s local buffers, rebuilt
+        from the snapshot's retained GLOBAL arrays (``with_mesh`` keeps
+        them host-side for save — DESIGN.md §12) with the exact
+        layout/fill convention of ``sharding.shard_cluster_buffers``:
+        rows ``[0, len(group))`` hold the shard's clusters in ascending
+        global order, everything above (including the sentinel row) is
+        empty padding. The SAME jitted shard plan runs on it with
+        all-host operands (default device), so a hedged or recovered
+        scan is bit-identical to the device scan. Cached per placement
+        object (a publish or recovery invalidates by identity)."""
+        cache = self._host_parts
+        if cache.get("key") != id(shards):
+            self._host_parts = cache = {"key": id(shards)}
+        part = cache.get(s)
+        if part is None:
+            g = np.flatnonzero(np.asarray(shards.shard_of) == s)
+            rows = shards.c_local + 1        # + sentinel empty cluster
+            fills = {"emb": 0, "loc": index_lib.PAD_LOC, "ids": -1,
+                     "scale": 1, "attrs": 0, "counts": 0}
+            part = {}
+            for key, fill in fills.items():
+                if key not in snap.buffers:
+                    continue
+                arr = np.asarray(snap.buffers[key])
+                if key == "counts":
+                    arr = arr.astype(np.int32)
+                out = np.full((rows,) + arr.shape[1:], fill,
+                              dtype=arr.dtype)
+                out[:len(g)] = arr[g]
+                part[key] = out
+            cache[s] = part
+        return part
+
+    def down_signature(self) -> Tuple[int, ...]:
+        """The currently-DOWN shard set — the cache-key component that
+        keeps degraded results from ever serving as full-coverage ones
+        (DESIGN.md §15)."""
+        health = self._shard_health
+        return () if health is None else health.down_shards()
+
+    def recover_shard(self, s: int):
+        """Online shard recovery (DESIGN.md §15): re-materialize shard
+        ``s``'s device part from the snapshot's global host buffers
+        (same placement/fill convention as ``shard_cluster_buffers``),
+        atomically publish the patched placement, and flip the shard
+        back UP. Placement-only — no version bump, no content change,
+        and no ``SubscriptionRegistry`` dispatch (notifications flow
+        only from insert publishes, so exactly-once delivery is
+        untouched). Returns the snapshot now being served."""
+        snap = self._snapshot
+        shards = getattr(snap, "shards", None)
+        if shards is None:
+            raise ValueError("recover_shard: snapshot is not mesh-sharded")
+        if not 0 <= s < shards.n_shards:
+            raise ValueError(f"recover_shard: shard {s} out of range "
+                             f"0..{shards.n_shards - 1}")
+        host = self._host_shard_part(snap, shards, s)
+        device = shards.devices[s]
+        new_part = {key: jax.device_put(arr, device)
+                    for key, arr in host.items()}
+        parts = list(shards.parts)
+        parts[s] = new_part
+        new_shards = dataclasses.replace(shards, parts=tuple(parts))
+        # single reference assignment, like publish(): a concurrent
+        # query sees the old placement or the new one, never a mix
+        self._snapshot = dataclasses.replace(snap, shards=new_shards)
+        self._host_parts = {}           # placement identity changed
+        if self._shard_health is not None:
+            self._shard_health.mark_up(s)
+        self._hedged.pop(s, None)
+        self.shard_stats["recoveries"] += 1
+        return self._snapshot
+
     def _query_sharded(self, snap, q_tokens, q_mask, q_loc, *, k: int,
                        cr: int, batch: int, backend: Optional[str],
                        fvals=None, filtered: bool = False):
@@ -1107,8 +1221,21 @@ class QueryEngine:
         default device, localized per-shard scans pinned to each
         shard's device by their committed buffers, host tree merge.
         The filtered variant threads each shard's local ``attrs`` part
-        plus the per-query ``fvals`` rows through the same plan."""
+        plus the per-query ``fvals`` rows through the same plan.
+
+        Fault tolerance (DESIGN.md §15): every shard scan is timed into
+        :class:`ShardHealth`; failures retry against a host-side replica
+        of the shard's clusters with doubling-capped backoff; a shard
+        flagged slow by the :class:`StragglerMonitor` is hedged — its
+        scans pre-emptively run on the replica (with periodic device
+        probes to detect recovery); a DOWN shard is skipped and the
+        surviving partials merge into a degraded result whose coverage
+        fraction (routed clusters scanned / routed) lands in
+        ``last_coverage``. Raises :class:`ShardUnavailable` only when
+        NO shard can serve."""
+        from repro.core import faults as faults_lib
         from repro.core import serving as serving_lib
+        from repro.distributed import resilience as resilience_lib
 
         shards = snap.shards
         backend = self.backend if backend is None else backend
@@ -1120,6 +1247,86 @@ class QueryEngine:
         # consume: a committed default-device operand would clash with
         # buffers committed on shard s (jax refuses mixed commitments)
         w_hat = np.asarray(snap.w_hat)
+        health = self._shard_state(shards.n_shards)
+        monitor = self._shard_monitor
+        shard_of = np.asarray(shards.shard_of)
+        coverage = [0, 0]               # routed clusters scanned / routed
+        down_seen = set()
+
+        def run_scan(s, part, q_emb, loc, w, local_c, qf, *, on_device):
+            # scan_error fires on BOTH device and host-replica attempts
+            # (the shard's DATA is unscannable, not just its device);
+            # scan_slow only models a slow device — the replica is fine
+            if on_device:
+                faults_lib.fire("shard.scan_slow", shard=s)
+            faults_lib.fire("shard.scan_error", shard=s)
+            if filtered:
+                out = sfn(w_hat, part["emb"], part["loc"], part["ids"],
+                          part["scale"], part["attrs"],
+                          q_emb, loc, w, local_c, qf)
+            else:
+                out = sfn(w_hat, part["emb"], part["loc"], part["ids"],
+                          part["scale"], q_emb, loc, w, local_c)
+            # sync here so the wall time fed to ShardHealth measures
+            # THIS shard's scan, not whatever dispatch queued behind it
+            return np.asarray(out[0]), np.asarray(out[1])
+
+        def scan_shard(s, part, q_emb, loc, w, local_c, qf):
+            """One shard's partial ``(ids, scores)``, or ``None`` when
+            the shard could not be scanned this chunk."""
+            try:
+                faults_lib.fire("shard.device_lost", shard=s)
+            except Exception:
+                health.mark_down(s)
+                return None
+            hedge = s in self._hedged
+            probe = False
+            if hedge:
+                # hedged shard: serve from the replica, but probe the
+                # device every Nth scan so a recovered device is noticed
+                self._hedged[s] += 1
+                probe = self._hedged[s] % self.hedge_probe_every == 0
+            delay_ms = self.shard_backoff_ms
+            for attempt in range(1 + self.shard_retries):
+                if attempt > 0:
+                    self.shard_stats["scan_retries"] += 1
+                    if delay_ms > 0:
+                        time.sleep(min(delay_ms,
+                                       self.shard_backoff_max_ms) / 1e3)
+                    delay_ms = min(delay_ms * 2, self.shard_backoff_max_ms)
+                # retries go straight to the host replica: the device
+                # already failed once this chunk
+                on_host = (hedge and not probe) or attempt > 0
+                try:
+                    t0 = time.perf_counter()
+                    if on_host:
+                        out = run_scan(
+                            s, self._host_shard_part(snap, shards, s),
+                            q_emb, loc, w, local_c, qf, on_device=False)
+                        self.shard_stats["host_scans"] += 1
+                        if hedge and not probe:
+                            self.shard_stats["hedged_scans"] += 1
+                    else:
+                        out = run_scan(s, part, q_emb, loc, w, local_c,
+                                       qf, on_device=True)
+                    dt = time.perf_counter() - t0
+                    health.record_success(s, dt)
+                    if not on_host:
+                        # only device timings feed the straggler stream:
+                        # a hedged replica scan must not mask the slow
+                        # device we are hedging against
+                        monitor.record(f"shard{s}", dt)
+                        if monitor.slow(f"shard{s}"):
+                            self._hedged.setdefault(s, 0)
+                        elif hedge:
+                            self._hedged.pop(s, None)    # probe came
+                            # back fast — device recovered, stop hedging
+                    return out
+                except Exception:
+                    health.record_failure(s)
+                    if health.is_down(s):
+                        return None
+            return None                  # retries exhausted, not DOWN yet
 
         def chunk_fn(t, m, l, *rest):
             q_emb, w, top_c = prefix(snap.rel_params, snap.index_params,
@@ -1129,28 +1336,39 @@ class QueryEngine:
             top_c = np.asarray(top_c)
             loc = np.asarray(l)
             qf = np.asarray(rest[0]) if filtered else None
+            routes_per = np.bincount(shard_of[top_c].ravel(),
+                                     minlength=shards.n_shards)
+            coverage[1] += int(top_c.size)
             partials = []
             for s, part in enumerate(shards.parts):
+                if health.is_down(s):
+                    self.shard_stats["down_skips"] += 1
+                    down_seen.add(s)
+                    continue
                 local_c = serving_lib.localize_routes(
                     top_c, shards.shard_of, shards.local_of, s,
                     sentinel=shards.sentinel)
-                # async dispatch: shard s computes while s+1 dispatches
-                if filtered:
-                    partials.append(sfn(w_hat, part["emb"], part["loc"],
-                                        part["ids"], part["scale"],
-                                        part["attrs"],
-                                        q_emb, loc, w, local_c, qf))
-                else:
-                    partials.append(sfn(w_hat, part["emb"], part["loc"],
-                                        part["ids"], part["scale"],
-                                        q_emb, loc, w, local_c))
-            return merge_shard_topk(
-                [(np.asarray(i), np.asarray(v)) for i, v in partials], k=k)
+                out = scan_shard(s, part, q_emb, loc, w, local_c, qf)
+                if out is None:
+                    if health.is_down(s):
+                        down_seen.add(s)
+                    continue
+                coverage[0] += int(routes_per[s])
+                partials.append(out)
+            if not partials:
+                raise resilience_lib.ShardUnavailable(
+                    f"all {shards.n_shards} shards down/unscannable — "
+                    f"no partial top-k lists to merge")
+            return merge_shard_topk(partials, k=k)
 
         arrays = [q_tokens, q_mask, q_loc]
         if filtered:
             arrays.append(fvals)
-        return run_batched(chunk_fn, arrays, batch=batch)
+        out = run_batched(chunk_fn, arrays, batch=batch)
+        self.last_coverage = (coverage[0] / coverage[1]
+                              if coverage[1] else 1.0)
+        self.last_down_shards = tuple(sorted(down_seen))
+        return out
 
     def delta_scan_fn(self, *, k: int, precision: str,
                       filtered: bool = False):
@@ -1233,6 +1451,10 @@ class QueryEngine:
         path is placement-agnostic and composes unchanged.
         """
         snap = self._snapshot if snapshot is None else snapshot
+        # coverage annotation (DESIGN.md §15): 1.0 unless the sharded
+        # path below loses a shard; read by Searcher/server after the call
+        self.last_coverage = 1.0
+        self.last_down_shards = ()
         fvals, filtered = filters_lib.compile_filters(
             filters, np.asarray(q_tokens).shape[0])
         # the per-batch cluster-major pick engages whenever the request

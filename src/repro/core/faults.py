@@ -55,6 +55,14 @@ POINTS = frozenset({
     "ckpt.mid_save",         # between leaf writes and the atomic commit
     "ckpt.post_commit",      # after commit (callback gets path=, e.g. to
                              # corrupt a committed file on purpose)
+    # core/engine.py (_query_sharded — callback gets shard=)
+    "shard.scan_error",      # raised in place of a shard scan, device AND
+                             # host-replica attempts (the shard's data is
+                             # unscannable, not just its device)
+    "shard.scan_slow",       # fired before a DEVICE scan (callback sleeps
+                             # — a slow device; the host replica is fine)
+    "shard.device_lost",     # fired once per shard per chunk before any
+                             # attempt; raising = device gone → instant DOWN
 })
 
 

@@ -166,6 +166,19 @@ class ServerConfig:
                     failed multi-request flush (doubles per bisection
                     level, capped at retry_backoff_max_ms)
     retry_backoff_max_ms  backoff cap for the bisection retry path
+    retry_jitter    full-jitter fraction on the bisection backoff: each
+                    sleep is scaled by a factor drawn uniformly from
+                    ``[1 - retry_jitter, 1]`` so co-failing flushes
+                    don't retry in lockstep. 0 disables (pure doubling)
+    retry_seed      seed of the jitter stream — the backoff sequence is
+                    deterministic per server instance (pinnable in tests)
+    wal_max_bytes   WAL growth bound (DESIGN.md §15): once the log file
+                    exceeds this many bytes after a write, the server
+                    schedules :meth:`checkpoint` (compact + save +
+                    truncate) into ``snapshot_dir`` off the write path.
+                    0 (default) disables; > 0 requires both ``wal_dir``
+                    and ``snapshot_dir``
+    snapshot_dir    where the auto-checkpoint commits snapshots
     """
     batch_size: int = 64
     max_delay_ms: float = 2.0
@@ -186,6 +199,10 @@ class ServerConfig:
     breaker_probe_every: int = 8
     retry_backoff_ms: float = 1.0
     retry_backoff_max_ms: float = 50.0
+    retry_jitter: float = 0.25
+    retry_seed: int = 0
+    wal_max_bytes: int = 0
+    snapshot_dir: Optional[str] = None
 
 
 LATENCY_WINDOW = 65536       # sliding window of most-recent request latencies
@@ -227,6 +244,12 @@ class ServerStats:
     last_slow_flush_at: Optional[float] = None   # unix seconds
     wal_appends: int = 0
     recovered_writes: int = 0          # WAL records applied by replay_wal
+    wal_checkpoints: int = 0           # auto-checkpoints (wal_max_bytes)
+    # shard fault tolerance (DESIGN.md §15)
+    degraded_flushes: int = 0          # flushes served at coverage < 1.0
+    last_coverage: float = 1.0         # of the most recent flush
+    min_coverage: Optional[float] = None
+    shard_recoveries: int = 0
 
 
 def latency_percentiles(latencies_s: Sequence[float]) -> Dict[str, float]:
@@ -348,7 +371,17 @@ class StreamingServer:
         self._timer: Optional[asyncio.TimerHandle] = None
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._compaction_handle: Optional[asyncio.Handle] = None
+        self._checkpoint_handle: Optional[asyncio.Handle] = None
         self._subs = None            # SubscriptionRegistry, created lazily
+        if self.cfg.wal_max_bytes > 0 and not (self.cfg.wal_dir
+                                               and self.cfg.snapshot_dir):
+            raise ValueError(
+                "ServerConfig.wal_max_bytes requires wal_dir AND "
+                "snapshot_dir (the auto-checkpoint must know where to "
+                "commit the snapshot before truncating the log)")
+        # seeded jitter stream for the bisection-retry backoff: a fixed
+        # retry_seed makes the sleep sequence reproducible under test
+        self._backoff_rng = np.random.default_rng(self.cfg.retry_seed)
         # durability (DESIGN.md §14): WAL opened eagerly so a torn tail
         # from a previous crash is truncated before the first append
         self.wal: Optional[wal_lib.WriteAheadLog] = None
@@ -475,6 +508,7 @@ class StreamingServer:
                                 snapshot=out)
         if self.cfg.delta_threshold > 0:
             self._maybe_compact()
+        self._maybe_checkpoint()
         return self.engine.snapshot
 
     def delete_objects(self, del_ids):
@@ -495,11 +529,13 @@ class StreamingServer:
             buf = index_lib.delete_objects(snap.buffers, del_ids)
             out = self.publish(snap.with_buffers(buf))
             faults_lib.fire("write.post_publish", kind="delete")
+            self._maybe_checkpoint()
             return out
         delta = self._delta_of(snap).delete(del_ids)
         self.publish(snap.with_delta(delta))
         faults_lib.fire("write.post_publish", kind="delete")
         self._maybe_compact()
+        self._maybe_checkpoint()
         return self.engine.snapshot
 
     def _wal_append(self, kind: str, snap, **arrays):
@@ -528,6 +564,38 @@ class StreamingServer:
         if self.wal is not None:
             self.wal.truncate()
         return path
+
+    def _maybe_checkpoint(self):
+        """WAL growth bound (``ServerConfig.wal_max_bytes``): once the
+        log exceeds the threshold after a write, run :meth:`checkpoint`
+        into ``snapshot_dir`` — scheduled on the next loop tick (like
+        compaction) so the save never sits inside a write call's
+        latency; inline when no loop is running. Never during
+        :meth:`replay_wal`: truncating mid-replay with re-append
+        suppressed would drop the records not yet applied."""
+        if (self.wal is None or self.cfg.wal_max_bytes <= 0
+                or self._replaying
+                or self.wal.nbytes() <= self.cfg.wal_max_bytes):
+            return
+        try:
+            loop = asyncio.get_running_loop()
+        except RuntimeError:
+            loop = None
+        if loop is None:
+            self._auto_checkpoint()
+        elif self._checkpoint_handle is None:
+            self._checkpoint_handle = loop.call_soon(self._checkpoint_cb)
+
+    def _checkpoint_cb(self):
+        self._checkpoint_handle = None
+        self._auto_checkpoint()
+
+    def _auto_checkpoint(self):
+        if (self.wal is None
+                or self.wal.nbytes() <= self.cfg.wal_max_bytes):
+            return               # a queued trigger may already be stale
+        self.checkpoint(self.cfg.snapshot_dir)
+        self.stats.wal_checkpoints += 1
 
     def replay_wal(self) -> int:
         """Re-apply logged writes missing from the current snapshot:
@@ -677,6 +745,9 @@ class StreamingServer:
             if self._compaction_handle is not None:
                 self._compaction_handle.cancel()
                 self._compaction_handle = None
+            if self._checkpoint_handle is not None:
+                self._checkpoint_handle.cancel()
+                self._checkpoint_handle = None
             self._pending.clear()
             self._inflight.clear()
             self._loop = loop
@@ -716,10 +787,15 @@ class StreamingServer:
 
         # cache lookups are keyed on the CURRENT snapshot version: a hit
         # can only come from an answer computed against this exact index
-        # generation (publish also clears, so this is belt and braces)
+        # generation (publish also clears, so this is belt and braces).
+        # The down-shard signature (DESIGN.md §15) joins every key: a
+        # degraded answer is cached under the shard set it was computed
+        # WITHOUT, so it can never serve a full-coverage request (or a
+        # differently-degraded one) — and recovery needs no invalidation
         ver = self.engine.snapshot.meta.version
+        dsig = self.engine.down_signature()
         ekey = exact_key(tokens, mask, loc, k, cr, fsig)
-        hit = self._exact.get((ver, ekey))
+        hit = self._exact.get((ver, dsig, ekey))
         if hit is not None:
             self.stats.exact_hits += 1
             self.stats.latencies_s.append(time.perf_counter() - t0)
@@ -728,17 +804,17 @@ class StreamingServer:
         if self.cfg.near_cells > 0:
             nkey = near_key(tokens, mask, loc, k, cr, self.cfg.near_cells,
                             fsig)
-            hit = self._near.get((ver, nkey))
+            hit = self._near.get((ver, dsig, nkey))
             if hit is not None:
                 self.stats.near_hits += 1
                 self.stats.latencies_s.append(time.perf_counter() - t0)
                 return hit
 
-        # the in-flight key embeds the snapshot version, like the result
-        # caches: a request arriving just after a publish must NOT
-        # coalesce onto a pre-publish flush's future — that future
-        # resolves against the OLD index generation
-        ikey = (ver, ekey)
+        # the in-flight key embeds the snapshot version + down-shard
+        # signature, like the result caches: a request arriving just
+        # after a publish (or a shard state change) must NOT coalesce
+        # onto a stale flush's future
+        ikey = (ver, dsig, ekey)
         inflight = self._inflight.get(ikey)
         if inflight is not None:                 # identical request queued:
             self.stats.coalesced += 1            # share its future, don't
@@ -853,8 +929,7 @@ class StreamingServer:
             # the loop far longer, and backoff must also apply to the
             # sync serve_all path.
             self.stats.flush_retries += 1
-            backoff = min(self.cfg.retry_backoff_ms * (2 ** depth),
-                          self.cfg.retry_backoff_max_ms)
+            backoff = self._backoff_ms(depth)
             if backoff > 0:
                 time.sleep(backoff / 1e3)
             mid = len(pending) // 2
@@ -866,16 +941,59 @@ class StreamingServer:
         self.stats.engine_batches += 1
         self.stats.engine_queries += len(pending)
         ver = snap.meta.version
+        # coverage annotation (DESIGN.md §15): results computed while a
+        # shard was DOWN are cached under the shard set actually MISSING
+        # from the answer — not the one seen at submit time — so a
+        # degraded result can only ever be re-served to requests
+        # degraded the same way
+        coverage = self.engine.last_coverage
+        dsig_served = self.engine.last_down_shards
+        self.stats.last_coverage = coverage
+        if (self.stats.min_coverage is None
+                or coverage < self.stats.min_coverage):
+            self.stats.min_coverage = coverage
+        if coverage < 1.0:
+            self.stats.degraded_flushes += 1
         for i, p in enumerate(pending):
             res = (ids[i].copy(), scores[i].copy())
             for arr in res:              # shared with the cache + every
                 arr.setflags(write=False)  # waiter: freeze, don't trust
-            self._exact.put((ver, p.ekey), res)
+            self._exact.put((ver, dsig_served, p.ekey), res)
             if p.nkey is not None:
-                self._near.put((ver, p.nkey), res)
+                self._near.put((ver, dsig_served, p.nkey), res)
             self._inflight.pop(p.ikey, None)
             if not p.future.done():
                 p.future.set_result(res)
+
+    def _backoff_ms(self, depth: int) -> float:
+        """One bisection-retry sleep: doubling in ``depth``, capped at
+        ``retry_backoff_max_ms``, scaled by a seeded full-jitter factor
+        in ``[1 - retry_jitter, 1]`` so co-failing flush groups spread
+        out instead of retrying in lockstep (deterministic for a fixed
+        ``retry_seed`` — tests pin the exact sequence)."""
+        base = min(self.cfg.retry_backoff_ms * (2 ** depth),
+                   self.cfg.retry_backoff_max_ms)
+        jitter = self.cfg.retry_jitter
+        if base <= 0 or jitter <= 0:
+            return base
+        return base * (1.0 - jitter * float(self._backoff_rng.random()))
+
+    # --- shard fault tolerance (DESIGN.md §15) ----------------------------
+
+    def recover_shard(self, s: int):
+        """Online shard recovery: re-materialize a DOWN shard's device
+        part from the snapshot's global host buffers and flip it back UP
+        (:meth:`QueryEngine.recover_shard`) — under live traffic, no
+        version bump, no drained queue. Cached results need no
+        invalidation: degraded answers are keyed by their down-shard
+        signature, so post-recovery full-coverage requests can never hit
+        them. The ``SubscriptionRegistry`` dispatch path is untouched
+        (recovery publishes no content change → no notifications), so
+        exactly-once delivery holds across a fail/recover cycle. Returns
+        the snapshot being served after the call."""
+        snap = self.engine.recover_shard(s)
+        self.stats.shard_recoveries += 1
+        return snap
 
     # --- degraded execution: breaker + anomaly detection ------------------
 
@@ -1006,8 +1124,14 @@ class StreamingServer:
             "wal": {"enabled": self.wal is not None,
                     "appends": s.wal_appends,
                     "records": self.wal.n_records if self.wal else 0,
-                    "bytes": self.wal.nbytes() if self.wal else 0},
+                    "bytes": self.wal.nbytes() if self.wal else 0,
+                    "max_bytes": self.cfg.wal_max_bytes,
+                    "auto_checkpoints": s.wal_checkpoints},
             "recovered_writes": s.recovered_writes,
+            # degraded partial-result serving (DESIGN.md §15)
+            "coverage": {"last": s.last_coverage,
+                         "min": s.min_coverage,
+                         "degraded_flushes": s.degraded_flushes},
         }
         if self._subs is not None:
             # standing-query dispatch economics (core/continuous.py):
@@ -1021,6 +1145,13 @@ class StreamingServer:
             # device — the number that should shrink ~linearly with the
             # shard count at unchanged recall (bench_scalability.py)
             out["shard_bytes_per_device"] = snap.shards.nbytes_per_device()
+            # shard fault tolerance (DESIGN.md §15): the health state
+            # machine + hedge/retry/recovery counters
+            health = self.engine._shard_health
+            out["shard_health"] = (health.snapshot()
+                                   if health is not None else None)
+            out["shard_stats"] = dict(self.engine.shard_stats)
+            out["shard_recoveries"] = s.shard_recoveries
         if wall_seconds is not None and wall_seconds > 0:
             out["qps"] = s.n_requests / wall_seconds
         return out

@@ -12,6 +12,11 @@ On a real fleet these hooks sit in the trainer loop:
   hung collective surfaces as a timeout instead of a silent stall (on TPU
   fleets a hung NCCL/ICI collective is the classic failure mode).
 
+The SERVING side reuses the same module (DESIGN.md §15): the streaming
+server feeds :class:`StragglerMonitor` with per-flush wall times, and the
+mesh-sharded query engine feeds :class:`ShardHealth` with per-shard scan
+timings so a failing shard degrades coverage instead of killing queries.
+
 All host-side logic (pure Python) — unit-testable without devices.
 """
 from __future__ import annotations
@@ -77,6 +82,98 @@ class StragglerMonitor:
             if self.strikes[host] >= self.patience:
                 out.append(host)
         return sorted(out)
+
+
+class ShardUnavailable(RuntimeError):
+    """No shard could serve the scan — every shard is DOWN/unscannable.
+
+    A SINGLE lost shard never raises this: the engine serves the
+    surviving partial top-k lists with a reduced coverage fraction
+    (DESIGN.md §15). Only the total-loss case — zero partials to merge —
+    surfaces as an error, because an empty result would be
+    indistinguishable from "nothing matched"."""
+
+
+class ShardHealth:
+    """Per-shard serving health (DESIGN.md §15).
+
+    Tracks, for each shard of the mesh-sharded index: an EWMA of scan
+    wall-time (fed by timing every ``make_shard_topk_fn`` invocation), a
+    consecutive-failure count, and an UP → SUSPECT → DOWN state machine:
+
+    * UP → SUSPECT on the first scan failure;
+    * SUSPECT → UP when a scan (device or host-replica) succeeds;
+    * SUSPECT → DOWN after ``down_after`` consecutive failures, or
+      immediately via :meth:`mark_down` (device lost);
+    * DOWN is sticky: queries skip the shard (degraded coverage) until
+      :meth:`mark_up` — only ``recover_shard`` flips it, after
+      re-materializing the device part from the snapshot's global
+      buffers. A lucky success must not mask a dead device.
+    """
+
+    UP, SUSPECT, DOWN = "up", "suspect", "down"
+
+    def __init__(self, n_shards: int, *, alpha: float = 0.2,
+                 down_after: int = 3):
+        if n_shards < 1:
+            raise ValueError(f"ShardHealth: n_shards={n_shards} < 1")
+        if down_after < 1:
+            raise ValueError(f"ShardHealth: down_after={down_after} < 1")
+        self.n_shards = int(n_shards)
+        self.alpha = float(alpha)
+        self.down_after = int(down_after)
+        self._ewma: List[Optional[float]] = [None] * self.n_shards
+        self._failures: List[int] = [0] * self.n_shards
+        self._states: List[str] = [self.UP] * self.n_shards
+
+    def record_success(self, shard: int, seconds: float) -> None:
+        prev = self._ewma[shard]
+        self._ewma[shard] = (seconds if prev is None else
+                             self.alpha * seconds
+                             + (1.0 - self.alpha) * prev)
+        self._failures[shard] = 0
+        if self._states[shard] == self.SUSPECT:
+            self._states[shard] = self.UP
+
+    def record_failure(self, shard: int) -> str:
+        """Count one failed scan; returns the new state."""
+        self._failures[shard] += 1
+        if self._states[shard] != self.DOWN:
+            self._states[shard] = (
+                self.DOWN if self._failures[shard] >= self.down_after
+                else self.SUSPECT)
+        return self._states[shard]
+
+    def mark_down(self, shard: int) -> None:
+        self._states[shard] = self.DOWN
+
+    def mark_up(self, shard: int) -> None:
+        """Recovery: reset the shard to a clean UP slate."""
+        self._states[shard] = self.UP
+        self._failures[shard] = 0
+        self._ewma[shard] = None
+
+    def state(self, shard: int) -> str:
+        return self._states[shard]
+
+    def is_down(self, shard: int) -> bool:
+        return self._states[shard] == self.DOWN
+
+    def ewma(self, shard: int) -> Optional[float]:
+        return self._ewma[shard]
+
+    def down_shards(self) -> Tuple[int, ...]:
+        """Sorted DOWN set — the cache-key signature for degraded results."""
+        return tuple(s for s in range(self.n_shards) if self.is_down(s))
+
+    def snapshot(self) -> dict:
+        """Metrics view (server.metrics() embeds it verbatim)."""
+        return {
+            "states": list(self._states),
+            "ewma_s": list(self._ewma),
+            "failures": list(self._failures),
+            "down": list(self.down_shards()),
+        }
 
 
 @dataclass

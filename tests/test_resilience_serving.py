@@ -570,3 +570,157 @@ def test_slow_flush_counted_in_metrics(engine_parts, rng):
     assert out is not None                           # slow, not failed
     assert server.stats.slow_flushes == 1
     assert server.metrics()["last_slow_flush_at"] is not None
+
+
+# ---------------------------------------------------------------------------
+# WAL growth bound: auto-checkpoint off the write path
+# ---------------------------------------------------------------------------
+
+
+def test_wal_max_bytes_requires_both_dirs(engine_parts, tmp_path):
+    with pytest.raises(ValueError, match="wal_max_bytes"):
+        make_server(engine_parts, wal_max_bytes=1024,
+                    wal_dir=str(tmp_path / "wal"))
+    with pytest.raises(ValueError, match="wal_max_bytes"):
+        make_server(engine_parts, wal_max_bytes=1024,
+                    snapshot_dir=str(tmp_path / "snap"))
+    # both present → fine
+    make_server(engine_parts, wal_max_bytes=1024,
+                wal_dir=str(tmp_path / "wal"),
+                snapshot_dir=str(tmp_path / "snap")).close()
+
+
+def test_wal_max_bytes_auto_checkpoints_and_truncates(engine_parts,
+                                                      tmp_path, rng):
+    """Regression for unbounded WAL growth: crossing ``wal_max_bytes``
+    checkpoints into ``snapshot_dir`` and truncates the log, so replay
+    work stays bounded no matter how long the server runs."""
+    snap_dir = str(tmp_path / "snap")
+    wal_dir = str(tmp_path / "wal")
+    cfg = _serve_cfg(wal_dir=wal_dir, snapshot_dir=snap_dir,
+                     wal_max_bytes=1)         # any append crosses it
+    snap0 = make_engine(engine_parts).snapshot
+    server = api.Searcher(snap0, backend="dense").serve(cfg)
+
+    insert_batch(server, rng, base_id=14_000_000)
+    assert server.stats.wal_checkpoints == 1
+    assert server.wal.n_records == 0          # log truncated by the ckpt
+    m = server.metrics()
+    assert m["wal"]["max_bytes"] == 1
+    assert m["wal"]["auto_checkpoints"] == 1
+
+    insert_batch(server, rng, base_id=14_000_100)
+    assert server.stats.wal_checkpoints == 2
+
+    # the auto-committed snapshot alone recovers both batches
+    recovered = api.recover(snap_dir, wal_dir, config=cfg, backend="dense")
+    assert recovered.stats.recovered_writes == 0     # all in the snapshot
+    tok, msk, loc = make_requests(rng, 8, server.engine.cfg)
+    ids_a, sc_a = full_fanout(server, tok, msk, loc)
+    ids_b, sc_b = full_fanout(recovered, tok, msk, loc)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    np.testing.assert_array_equal(sc_a, sc_b)
+    server.close()
+    recovered.close()
+
+
+def test_wal_below_threshold_never_checkpoints(engine_parts, tmp_path, rng):
+    cfg = _serve_cfg(wal_dir=str(tmp_path / "wal"),
+                     snapshot_dir=str(tmp_path / "snap"),
+                     wal_max_bytes=1 << 30)
+    server = api.Searcher(make_engine(engine_parts).snapshot,
+                          backend="dense").serve(cfg)
+    insert_batch(server, rng, base_id=15_000_000)
+    assert server.stats.wal_checkpoints == 0
+    assert server.wal.n_records == 1
+    server.close()
+
+
+# ---------------------------------------------------------------------------
+# Seeded retry-backoff jitter
+# ---------------------------------------------------------------------------
+
+
+def test_backoff_jitter_sequence_is_seeded(engine_parts):
+    server = make_server(engine_parts, retry_backoff_ms=2.0,
+                         retry_backoff_max_ms=20.0, retry_jitter=0.25,
+                         retry_seed=123)
+    got = [server._backoff_ms(d) for d in range(6)]
+    # pin the exact sequence by replaying the same seeded stream
+    ref_rng = np.random.default_rng(123)
+    want = []
+    for d in range(6):
+        base = min(2.0 * 2 ** d, 20.0)
+        want.append(base * (1.0 - 0.25 * float(ref_rng.random())))
+    assert got == pytest.approx(want)
+    # jittered but never below the full-jitter floor, always capped
+    for d, ms in enumerate(got):
+        base = min(2.0 * 2 ** d, 20.0)
+        assert 0.75 * base <= ms <= base
+    # a same-seeded server reproduces the identical sequence
+    twin = make_server(engine_parts, retry_backoff_ms=2.0,
+                       retry_backoff_max_ms=20.0, retry_jitter=0.25,
+                       retry_seed=123)
+    assert [twin._backoff_ms(d) for d in range(6)] == pytest.approx(got)
+
+
+def test_backoff_without_jitter_doubles_to_cap(engine_parts):
+    server = make_server(engine_parts, retry_backoff_ms=2.0,
+                         retry_backoff_max_ms=20.0, retry_jitter=0.0)
+    assert [server._backoff_ms(d) for d in range(5)] == [
+        2.0, 4.0, 8.0, 16.0, 20.0]
+
+
+# ---------------------------------------------------------------------------
+# api facade: operational exceptions are import-stable
+# ---------------------------------------------------------------------------
+
+
+def test_api_exports_operational_exceptions():
+    """Callers catch these by identity — the facade must re-export the
+    defining classes, not copies."""
+    assert api.Overloaded is server_lib.Overloaded
+    assert api.DeadlineExceeded is server_lib.DeadlineExceeded
+    assert api.SnapshotCorrupt is ckpt.SnapshotCorrupt
+    assert api.ShardUnavailable is resilience_lib.ShardUnavailable
+    for name in ("Overloaded", "DeadlineExceeded", "SnapshotCorrupt",
+                 "ShardUnavailable"):
+        assert name in api.__all__
+
+
+# ---------------------------------------------------------------------------
+# load_latest_good / recover edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_load_latest_good_empty_dir(tmp_path):
+    with pytest.raises(FileNotFoundError, match="no committed"):
+        snapshot_lib.load_latest_good(str(tmp_path))
+
+
+def test_load_latest_good_only_corrupt(engine_parts, tmp_path):
+    d = str(tmp_path)
+    snap0 = make_engine(engine_parts).snapshot
+    path0 = snap0.save(d)
+    with open(os.path.join(path0, "manifest.json"), "w") as f:
+        f.write("{{{ definitely not a manifest")
+    with pytest.raises(FileNotFoundError, match="corrupt"):
+        snapshot_lib.load_latest_good(d)
+
+
+def test_recover_with_missing_wal_dir(engine_parts, tmp_path, rng):
+    """First boot after enabling durability: the snapshot exists but the
+    WAL directory was never created. Recovery must come up clean (zero
+    replayed writes) and create the log for subsequent appends."""
+    snap_dir = str(tmp_path / "snap")
+    wal_dir = str(tmp_path / "never_made" / "wal")
+    snap0 = make_engine(engine_parts).snapshot
+    api.save(snap0, snap_dir)
+    assert not os.path.isdir(wal_dir)
+
+    cfg = _serve_cfg(wal_dir=wal_dir)
+    recovered = api.recover(snap_dir, wal_dir, config=cfg, backend="dense")
+    assert recovered.stats.recovered_writes == 0
+    insert_batch(recovered, rng, base_id=16_000_000)   # log now appendable
+    assert recovered.wal.n_records == 1
+    recovered.close()

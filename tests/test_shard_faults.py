@@ -1,0 +1,475 @@
+"""Shard-level fault tolerance tier (DESIGN.md §15).
+
+The mesh-sharded index must degrade, not die: with ``shard.scan_error``
+injected on one of 8 shards, queries return with coverage exactly 7/8,
+zero requests fail, and the ids are bit-identical to an oracle whose
+view of the lost shard's clusters is empty; transient failures retry
+against the host-side replica and keep full coverage; a straggling
+device is hedged onto the replica with unchanged answers; and
+``recover_shard`` re-materializes the device part under live traffic,
+after which results are bit-identical to a never-failed run.
+
+All failure branches are taken through the real fault-injection points
+(core/faults.py — ``shard.scan_error`` / ``shard.scan_slow`` /
+``shard.device_lost``), not test doubles.
+
+Runs multi-device on CPU (conftest force-sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``); the CI
+``mesh-chaos`` job exports the same flag. ``make test-mesh-chaos``.
+"""
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import api
+from repro.configs import get_config
+from repro.core import faults
+from repro.core import index as il
+from repro.core import relevance
+from repro.core import server as server_lib
+from repro.core.snapshot import IndexSnapshot
+from repro.distributed import resilience as resilience_lib
+
+DIST_MAX = 1.4142
+N_SHARDS = 8
+N_DEV = jax.device_count()
+
+
+@pytest.fixture(autouse=True)
+def _disarm_faults():
+    faults.clear()
+    yield
+    faults.clear()
+
+
+def _need(n_shards):
+    if n_shards > N_DEV:
+        pytest.skip(f"needs {n_shards} devices, have {N_DEV} "
+                    f"(XLA_FLAGS=--xla_force_host_platform_device_count)")
+
+
+# ---------------------------------------------------------------------------
+# ShardHealth state machine (pure host logic, no devices)
+# ---------------------------------------------------------------------------
+
+
+class TestShardHealth:
+    def test_up_suspect_down_transitions(self):
+        h = resilience_lib.ShardHealth(4, down_after=3)
+        assert h.state(0) == "up" and not h.is_down(0)
+        assert h.record_failure(0) == "suspect"
+        assert h.record_failure(0) == "suspect"
+        assert h.record_failure(0) == "down"
+        assert h.is_down(0) and h.down_shards() == (0,)
+        # other shards untouched
+        assert h.state(1) == "up"
+
+    def test_success_clears_suspect_but_not_down(self):
+        h = resilience_lib.ShardHealth(2, down_after=2)
+        h.record_failure(0)
+        assert h.state(0) == "suspect"
+        h.record_success(0, 0.01)
+        assert h.state(0) == "up"
+        # DOWN is sticky: only mark_up (the recovery path) clears it
+        h.record_failure(1)
+        h.record_failure(1)
+        assert h.is_down(1)
+        h.record_success(1, 0.01)
+        assert h.is_down(1)
+        h.mark_up(1)
+        assert h.state(1) == "up" and h.ewma(1) is None
+
+    def test_failure_streak_resets_on_success(self):
+        h = resilience_lib.ShardHealth(1, down_after=3)
+        h.record_failure(0)
+        h.record_failure(0)
+        h.record_success(0, 0.01)
+        h.record_failure(0)
+        h.record_failure(0)
+        assert h.state(0) == "suspect"      # streak restarted at 0
+
+    def test_mark_down_is_immediate(self):
+        h = resilience_lib.ShardHealth(3)
+        h.mark_down(2)
+        assert h.down_shards() == (2,)
+
+    def test_ewma(self):
+        h = resilience_lib.ShardHealth(1, alpha=0.5)
+        h.record_success(0, 0.1)
+        assert h.ewma(0) == pytest.approx(0.1)
+        h.record_success(0, 0.2)
+        assert h.ewma(0) == pytest.approx(0.15)
+
+    def test_snapshot_shape(self):
+        h = resilience_lib.ShardHealth(2)
+        h.mark_down(1)
+        view = h.snapshot()
+        assert view["states"] == ["up", "down"]
+        assert view["down"] == [1]
+        assert len(view["ewma_s"]) == len(view["failures"]) == 2
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            resilience_lib.ShardHealth(0)
+        with pytest.raises(ValueError):
+            resilience_lib.ShardHealth(2, down_after=0)
+
+
+# ---------------------------------------------------------------------------
+# Fixture: a tiny mesh-sharded snapshot (c = 8, one cluster per shard)
+# ---------------------------------------------------------------------------
+
+
+def _build_snap(n_clusters=8, seed=0, n=96, cap=32):
+    cfg = dataclasses.replace(
+        get_config("list-dual-encoder"),
+        n_layers=2, d_model=32, n_heads=2, d_ff=64, vocab_size=512,
+        max_len=8, spatial_t=50, n_clusters=n_clusters,
+        index_mlp_hidden=(16,))
+    rng = np.random.default_rng(seed)
+    rel = relevance.relevance_init(jax.random.PRNGKey(0), cfg)
+    obj_emb = rng.normal(size=(n, cfg.d_model)).astype(np.float32)
+    obj_loc = rng.uniform(size=(n, 2)).astype(np.float32)
+    norm = il.loc_normalizer(jnp.asarray(obj_loc))
+    iparams = il.index_init(jax.random.PRNGKey(1), cfg.d_model, n_clusters,
+                            hidden=(16,))
+    feats = il.build_features(jnp.asarray(obj_emb), jnp.asarray(obj_loc),
+                              norm)
+    top = np.asarray(il.assign_clusters(iparams, feats, top=2))
+    buf = il.build_cluster_buffers(top, obj_emb, obj_loc,
+                                   n_clusters=n_clusters, capacity=cap)
+    return IndexSnapshot.from_parts(cfg, rel, iparams, norm, buf,
+                                    dist_max=DIST_MAX)
+
+
+def _make_queries(cfg, n=12, seed=0):
+    rng = np.random.default_rng(seed)
+    tok = rng.integers(2, cfg.vocab_size, (n, cfg.max_len)).astype(np.int32)
+    tok[:, 0] = 1
+    msk = np.ones_like(tok, bool)
+    loc = rng.uniform(size=(n, 2)).astype(np.float32)
+    return tok, msk, loc
+
+
+@pytest.fixture(scope="module")
+def snap8():
+    return _build_snap(8)
+
+
+def _sharded_searcher(snap8):
+    """A fresh dense Searcher over an 8-shard placement of snap8."""
+    return api.Searcher(snap8.with_mesh(N_SHARDS), backend="dense")
+
+
+def _full_fanout(searcher, tok, msk, loc, *, k=5):
+    """cr = c: every query routes every cluster, so coverage under one
+    DOWN shard is exactly (clusters on UP shards) / c, with no padding
+    slack (batch == n divides evenly)."""
+    c = int(np.asarray(searcher.snapshot.buffers["emb"]).shape[0])
+    return searcher.query(tok, msk, loc, k=k, cr=c, batch=len(tok))
+
+
+def _masked_oracle(snap8, down_shard, shard_of):
+    """Single-device oracle whose view of ``down_shard``'s clusters is
+    EMPTY — the exact corpus a degraded query serves."""
+    g = np.flatnonzero(np.asarray(shard_of) == down_shard)
+    buf = {key: np.array(v) for key, v in snap8.buffers.items()
+           if key != "capacity"}
+    buf["ids"][g] = -1
+    buf["emb"][g] = 0
+    buf["loc"][g] = il.PAD_LOC
+    buf["scale"][g] = 1
+    if "counts" in buf:
+        buf["counts"][g] = 0
+    buf["capacity"] = snap8.buffers["capacity"]
+    return api.Searcher(dataclasses.replace(snap8, buffers=buf),
+                        backend="dense")
+
+
+def _fail_shard(target):
+    """Persistent scan_error on one shard (device AND replica attempts
+    fail — the shard's data is unscannable, so health drives it DOWN)."""
+    def boom(shard):
+        if shard == target:
+            raise RuntimeError(f"injected: shard {shard} unscannable")
+    faults.inject("shard.scan_error", callback=boom, times=None)
+
+
+# ---------------------------------------------------------------------------
+# Degraded partial-result serving
+# ---------------------------------------------------------------------------
+
+
+def test_scan_error_degrades_coverage_to_seven_eighths(snap8):
+    _need(N_SHARDS)
+    searcher = _sharded_searcher(snap8)
+    tok, msk, loc = _make_queries(snap8.cfg, n=16)
+    healthy = _full_fanout(searcher, tok, msk, loc)
+    assert searcher.last_coverage == 1.0
+
+    _fail_shard(3)
+    ids, scores = _full_fanout(searcher, tok, msk, loc)   # must NOT raise
+    health = searcher.engine._shard_health
+    assert searcher.last_coverage == pytest.approx((N_SHARDS - 1) / N_SHARDS)
+    assert searcher.engine.last_down_shards == (3,)
+    assert searcher.engine.down_signature() == (3,)
+    assert health.is_down(3)
+    # every surviving shard stayed clean
+    assert all(health.state(s) == "up" for s in range(N_SHARDS) if s != 3)
+
+    # ids/scores bit-identical to the oracle that never had shard 3's
+    # clusters — surviving shards contribute the exact same entries
+    oracle = _masked_oracle(snap8, 3, searcher.snapshot.shards.shard_of)
+    o_ids, o_scores = _full_fanout(oracle, tok, msk, loc)
+    np.testing.assert_array_equal(ids, o_ids)
+    np.testing.assert_array_equal(scores, o_scores)
+    # and the lost entries really differ from the healthy run somewhere
+    assert not np.array_equal(ids, healthy[0])
+
+    # a second query skips the DOWN shard instantly — no fresh retries
+    retries_before = searcher.engine.shard_stats["scan_retries"]
+    skips_before = searcher.engine.shard_stats["down_skips"]
+    _full_fanout(searcher, tok, msk, loc)
+    assert searcher.last_coverage == pytest.approx((N_SHARDS - 1) / N_SHARDS)
+    assert searcher.engine.shard_stats["scan_retries"] == retries_before
+    assert searcher.engine.shard_stats["down_skips"] > skips_before
+
+
+def test_transient_error_recovers_via_host_retry(snap8):
+    _need(N_SHARDS)
+    searcher = _sharded_searcher(snap8)
+    tok, msk, loc = _make_queries(snap8.cfg, n=8, seed=1)
+    healthy = _full_fanout(searcher, tok, msk, loc)
+
+    def boom_once(shard):
+        if shard == 0:
+            raise RuntimeError("transient blip")
+    faults.inject("shard.scan_error", callback=boom_once, times=1)
+    ids, scores = _full_fanout(searcher, tok, msk, loc)
+    eng = searcher.engine
+    # one retry against the host replica, full coverage, exact answers
+    assert eng.shard_stats["scan_retries"] == 1
+    assert eng.shard_stats["host_scans"] == 1
+    assert searcher.last_coverage == 1.0
+    assert eng._shard_health.state(0) == "up"       # success cleared it
+    np.testing.assert_array_equal(ids, healthy[0])
+    np.testing.assert_array_equal(scores, healthy[1])
+
+
+def test_device_lost_marks_down_immediately(snap8):
+    _need(N_SHARDS)
+    searcher = _sharded_searcher(snap8)
+    tok, msk, loc = _make_queries(snap8.cfg, n=8, seed=2)
+
+    def lost(shard):
+        if shard == 1:
+            raise RuntimeError("device pulled")
+    faults.inject("shard.device_lost", callback=lost, times=None)
+    _full_fanout(searcher, tok, msk, loc)
+    eng = searcher.engine
+    assert eng._shard_health.is_down(1)
+    assert searcher.last_coverage == pytest.approx((N_SHARDS - 1) / N_SHARDS)
+    # no retries: device loss is terminal for the chunk, not retryable
+    assert eng.shard_stats["scan_retries"] == 0
+
+
+def test_all_shards_down_raises_shard_unavailable(snap8):
+    _need(N_SHARDS)
+    searcher = _sharded_searcher(snap8)
+    tok, msk, loc = _make_queries(snap8.cfg, n=8, seed=3)
+    faults.inject("shard.scan_error",
+                  error=RuntimeError("everything is on fire"), times=None)
+    with pytest.raises(api.ShardUnavailable):
+        _full_fanout(searcher, tok, msk, loc)
+
+
+# ---------------------------------------------------------------------------
+# Hedged scans (straggler → host replica, probes → back to the device)
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_shard_is_hedged_with_identical_results(snap8):
+    _need(N_SHARDS)
+    searcher = _sharded_searcher(snap8)
+    tok, msk, loc = _make_queries(snap8.cfg, n=8, seed=4)
+    healthy = _full_fanout(searcher, tok, msk, loc)
+    # warm the straggler window: slow() needs >= window//2 history
+    for _ in range(12):
+        _full_fanout(searcher, tok, msk, loc)
+
+    def crawl(shard):
+        if shard == 2:
+            time.sleep(0.25)        # far past median + 5·MAD
+    faults.inject("shard.scan_slow", callback=crawl, times=None)
+    _full_fanout(searcher, tok, msk, loc)     # slow sample flags shard 2
+    eng = searcher.engine
+    assert 2 in eng._hedged
+    ids, scores = _full_fanout(searcher, tok, msk, loc)  # now hedged
+    assert eng.shard_stats["hedged_scans"] >= 1
+    assert eng.shard_stats["host_scans"] >= 1
+    assert searcher.last_coverage == 1.0      # hedging loses nothing
+    assert eng._shard_health.state(2) == "up"
+    np.testing.assert_array_equal(ids, healthy[0])
+    np.testing.assert_array_equal(scores, healthy[1])
+
+
+def test_hedge_probe_returns_to_fast_device(snap8):
+    _need(N_SHARDS)
+    searcher = _sharded_searcher(snap8)
+    tok, msk, loc = _make_queries(snap8.cfg, n=8, seed=5)
+    eng = searcher.engine
+    _full_fanout(searcher, tok, msk, loc)     # materialize health state
+
+    class NeverSlow(resilience_lib.StragglerMonitor):
+        def slow(self, host):
+            return False
+    eng._shard_monitor = NeverSlow()
+    # next hedged scan for shard 2 is the probe (count hits probe_every)
+    eng._hedged = {2: eng.hedge_probe_every - 1}
+    _full_fanout(searcher, tok, msk, loc)
+    assert 2 not in eng._hedged               # fast probe exits hedging
+
+
+# ---------------------------------------------------------------------------
+# Online shard recovery
+# ---------------------------------------------------------------------------
+
+
+def test_recover_shard_restores_bit_parity(snap8):
+    _need(N_SHARDS)
+    searcher = _sharded_searcher(snap8)
+    tok, msk, loc = _make_queries(snap8.cfg, n=16, seed=6)
+    healthy = _full_fanout(searcher, tok, msk, loc)
+    ver = searcher.snapshot.meta.version
+
+    _fail_shard(3)
+    _full_fanout(searcher, tok, msk, loc)
+    assert searcher.engine._shard_health.is_down(3)
+    faults.clear()
+
+    old_part = searcher.snapshot.shards.parts[3]
+    searcher.engine.recover_shard(3)
+    assert searcher.engine._shard_health.state(3) == "up"
+    assert searcher.engine.down_signature() == ()
+    assert searcher.engine.shard_stats["recoveries"] == 1
+    # placement-only: the part was re-materialized, the version didn't move
+    assert searcher.snapshot.shards.parts[3] is not old_part
+    assert searcher.snapshot.meta.version == ver
+
+    ids, scores = _full_fanout(searcher, tok, msk, loc)
+    assert searcher.last_coverage == 1.0
+    np.testing.assert_array_equal(ids, healthy[0])
+    np.testing.assert_array_equal(scores, healthy[1])
+    # ...and bit-identical to a never-failed oracle engine too
+    fresh = _sharded_searcher(snap8)
+    f_ids, f_scores = _full_fanout(fresh, tok, msk, loc)
+    np.testing.assert_array_equal(ids, f_ids)
+    np.testing.assert_array_equal(scores, f_scores)
+
+
+def test_recover_shard_validation(snap8):
+    _need(N_SHARDS)
+    with pytest.raises(ValueError, match="not mesh-sharded"):
+        api.Searcher(snap8, backend="dense").engine.recover_shard(0)
+    searcher = _sharded_searcher(snap8)
+    with pytest.raises(ValueError, match="out of range"):
+        searcher.engine.recover_shard(N_SHARDS)
+
+
+# ---------------------------------------------------------------------------
+# Server integration: coverage surfacing + degraded-result cache keying
+# ---------------------------------------------------------------------------
+
+
+def _mk_server(snap8, **over):
+    eng = _sharded_searcher(snap8).engine
+    kw = dict(batch_size=1, max_delay_ms=5.0, k=5,
+              cr=int(np.asarray(snap8.buffers["emb"]).shape[0]),
+              backend="dense", near_cells=0)
+    kw.update(over)
+    return server_lib.StreamingServer(eng, server_lib.ServerConfig(**kw))
+
+
+def test_degraded_results_never_served_as_full_coverage(snap8):
+    _need(N_SHARDS)
+    server = _mk_server(snap8)
+    tok, msk, loc = _make_queries(snap8.cfg, n=2, seed=7)
+    oracle = _sharded_searcher(snap8)
+    o_ids, _ = _full_fanout(oracle, tok, msk, loc)
+
+    # request 0 cached healthy
+    ids_b, _ = server.serve_all(tok[:1], msk[:1], loc[:1])
+    assert server.stats.degraded_flushes == 0
+
+    # shard 3 dies → request 1 computed degraded, cached under dsig (3,)
+    _fail_shard(3)
+    ids_c1, _ = server.serve_all(tok[1:], msk[1:], loc[1:])
+    m = server.metrics()
+    assert m["coverage"]["last"] == pytest.approx((N_SHARDS - 1) / N_SHARDS)
+    assert m["coverage"]["degraded_flushes"] == 1
+    assert m["shard_health"]["down"] == [3]
+    assert not np.array_equal(ids_c1[0], o_ids[1])   # really degraded
+
+    # while still degraded the SAME request hits the degraded cache entry
+    hits_before = server.stats.exact_hits
+    batches_before = server.stats.engine_batches
+    ids_c2, _ = server.serve_all(tok[1:], msk[1:], loc[1:])
+    assert server.stats.exact_hits == hits_before + 1
+    assert server.stats.engine_batches == batches_before
+    np.testing.assert_array_equal(ids_c1, ids_c2)
+
+    # recover: the degraded entry is unreachable (different down-shard
+    # signature), the request recomputes at full coverage — no cache
+    # invalidation involved
+    faults.clear()
+    server.recover_shard(3)
+    batches_before = server.stats.engine_batches
+    ids_c3, _ = server.serve_all(tok[1:], msk[1:], loc[1:])
+    assert server.stats.engine_batches == batches_before + 1   # real miss
+    np.testing.assert_array_equal(ids_c3[0], o_ids[1])
+    m = server.metrics()
+    assert m["coverage"]["last"] == 1.0
+    assert m["coverage"]["min"] == pytest.approx((N_SHARDS - 1) / N_SHARDS)
+    assert m["shard_recoveries"] == 1
+    assert m["shard_health"]["down"] == []
+
+
+def test_subscription_dispatch_exactly_once_across_recovery(snap8):
+    """Recovery is placement-only: it must produce ZERO notifications,
+    and insert batches around a fail/recover cycle notify exactly once."""
+    _need(N_SHARDS)
+    server = _mk_server(snap8, delta_threshold=10_000)
+    cfg = snap8.cfg
+    tok, msk, loc = _make_queries(cfg, n=1, seed=8)
+    sub = server.subscribe(tok[0], msk[0], loc[0], threshold=-1e9)
+
+    rng = np.random.default_rng(9)
+    d = int(np.asarray(snap8.buffers["emb"]).shape[-1])
+
+    def insert(base):
+        emb = rng.normal(size=(4, d)).astype(np.float32)
+        xy = rng.uniform(size=(4, 2)).astype(np.float32)
+        ids = np.arange(base, base + 4)
+        server.insert_objects(emb, xy, ids)
+        return set(ids.tolist())
+
+    ids1 = insert(30_000_000)
+    notes1 = {n.object_id for n in sub.drain()}
+    assert notes1                      # full-fanout sub sees its inserts
+
+    # fail + recover with no writes: not a single notification
+    _fail_shard(2)
+    server.serve_all(tok, msk, loc)    # degraded read traffic
+    faults.clear()
+    server.recover_shard(2)
+    assert sub.drain() == []
+
+    ids2 = insert(31_000_000)
+    notes2 = {n.object_id for n in sub.drain()}
+    assert notes2 and notes2.isdisjoint(notes1)
+    # exactly-once: batch-1 ids never re-notify, every id at most once
+    assert notes1 <= ids1 and notes2 <= ids2
